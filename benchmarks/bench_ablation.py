@@ -1,0 +1,68 @@
+"""Fig. 12: ablations — No-Switching (one static cascade) and No-Cascade
+(gear switching between single models) vs full CascadeServe."""
+from __future__ import annotations
+
+import copy
+
+import numpy as np
+
+from benchmarks.common import Results, bert_hw, bert_workload
+from repro.core import SLO, ServingSimulator, optimize_gear_plan
+from repro.core.cascade import Cascade
+from repro.core.gears import uniform_load_fractions
+from repro.core.traces import diurnal_like_trace
+
+
+def main(quick: bool = False):
+    res = Results("bench_ablation")
+    profiles = bert_workload()
+    hw = bert_hw(2)
+    slo = SLO(kind="latency", latency_p95=0.4)
+    seconds = 30 if quick else 60
+    trace = diurnal_like_trace(seconds=seconds, peak_qps=20000, seed=1)
+    plan = optimize_gear_plan(profiles, hw, slo, qps_max=20000,
+                              n_ranges=8).plan
+    sim = ServingSimulator(profiles, plan.replicas, hw.num_devices)
+
+    full = sim.run_trace(plan, trace)
+    res.add("full_acc", round(full.accuracy, 4),
+            p95_ms=round(full.p95 * 1e3, 1),
+            slo_ok=bool(full.p95 <= 0.4))
+
+    # No switching: the highest-throughput gear everywhere (must survive
+    # the peak, so it's the top-range gear)
+    ns = copy.deepcopy(plan)
+    top = ns.gears[-1]
+    ns.gears = [copy.deepcopy(top) for _ in ns.gears]
+    r_ns = sim.run_trace(ns, trace)
+    res.add("no_switching_acc", round(r_ns.accuracy, 4),
+            p95_ms=round(r_ns.p95 * 1e3, 1),
+            slo_ok=bool(r_ns.p95 <= 0.4))
+
+    # No cascade: per range, the most accurate SINGLE model that the range's
+    # cascade used (switching stays, cascading removed)
+    nc = copy.deepcopy(plan)
+    for g in nc.gears:
+        best_single = max(
+            g.cascade.models, key=lambda m: profiles[m].accuracy)
+        g.cascade = Cascade((best_single,), ())
+        g.min_queue_lens = {best_single:
+                            g.min_queue_lens.get(best_single, 1)}
+        g.load_fractions = uniform_load_fractions(nc.replicas,
+                                                  (best_single,))
+    r_nc = sim.run_trace(nc, trace)
+    res.add("no_cascade_acc", round(r_nc.accuracy, 4),
+            p95_ms=round(r_nc.p95 * 1e3, 1),
+            slo_ok=bool(r_nc.p95 <= 0.4),
+            completed=round(r_nc.completed / r_nc.offered, 3))
+
+    res.add("switching_contribution",
+            round(full.accuracy - r_ns.accuracy, 4))
+    res.add("cascade_contribution_proxy",
+            round(full.accuracy - r_nc.accuracy, 4),
+            note="negative p95/completion effects matter more; see rows")
+    return res.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Fig. 7: minimum #devices each system needs to reach (accuracy, latency)
+cells, and CascadeServe's savings factor vs the cheapest baseline."""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import numpy as np
+
+from benchmarks.common import Results, bert_workload
+from repro.core import (HardwareSpec, SLO, ServingSimulator,
+                        optimize_gear_plan)
+from repro.core.plan_state import InfeasiblePlanError
+from repro.core.traces import diurnal_like_trace
+from repro.serving.baselines import DynBaPolicy, MSPlusPolicy
+
+MAX_DEV = 8
+
+
+def min_devices(check: Callable[[int], bool]) -> Optional[int]:
+    """Smallest n in [1, MAX_DEV] passing check (monotone assumption)."""
+    lo, hi, best = 1, MAX_DEV, None
+    while lo <= hi:
+        mid = (lo + hi) // 2
+        if check(mid):
+            best, hi = mid, mid - 1
+        else:
+            lo = mid + 1
+    return best
+
+
+def main(quick: bool = False):
+    res = Results("bench_cost_grid")
+    profiles = bert_workload()
+    seconds = 20 if quick else 25
+    peak = 20000.0  # stress the devices (paper §6.1 scales traces likewise)
+    trace = diurnal_like_trace(seconds=seconds, peak_qps=peak, seed=1)
+    acc_targets = [0.93, 0.96] if quick else [0.90, 0.93, 0.955]
+    lat_targets = [0.05, 0.4]
+
+    def cs_ok(n, acc_t, lat_t):
+        hw = HardwareSpec(num_devices=n, mem_per_device=16e9)
+        try:
+            plan = optimize_gear_plan(
+                profiles, hw, SLO(kind="latency", latency_p95=lat_t),
+                qps_max=peak, n_ranges=6).plan
+        except InfeasiblePlanError:
+            return False
+        r = ServingSimulator(profiles, plan.replicas, n).run_trace(
+            plan, trace)
+        return (r.completed >= 0.98 * r.offered and r.p95 <= lat_t
+                and r.accuracy >= acc_t)
+
+    def baseline_ok(policies, n, acc_t, lat_t):
+        hw = HardwareSpec(num_devices=n, mem_per_device=16e9)
+        for pol in policies:
+            gears, sel, reps, nd = pol.build(
+                profiles, hw, SLO(kind="latency", latency_p95=lat_t), peak)
+            r = ServingSimulator(profiles, reps, nd).run_policy(
+                gears, sel, trace)
+            if (r.completed >= 0.98 * r.offered and r.p95 <= lat_t
+                    and r.accuracy >= acc_t):
+                return True
+        return False
+
+    for acc_t in acc_targets:
+        for lat_t in lat_targets:
+            cell = f"acc{acc_t}_lat{int(lat_t * 1e3)}ms"
+            n_cs = min_devices(lambda n: cs_ok(n, acc_t, lat_t))
+            n_dyn = min_devices(
+                lambda n: baseline_ok(DynBaPolicy.grid(profiles), n, acc_t,
+                                      lat_t))
+            n_ms = min_devices(
+                lambda n: baseline_ok(MSPlusPolicy.grid(profiles), n, acc_t,
+                                      lat_t))
+            res.add(f"{cell}_cascadeserve_devices", n_cs)
+            res.add(f"{cell}_dynba_devices", n_dyn)
+            res.add(f"{cell}_msplus_devices", n_ms)
+            base = min(x for x in (n_dyn, n_ms) if x) \
+                if (n_dyn or n_ms) else None
+            if n_cs and base:
+                res.add(f"{cell}_savings", round(base / n_cs, 2),
+                        metric="x_fewer_devices")
+    return res.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Figs. 8/9: SLO-driven degradation under a spiky step trace.
+
+Sliding-window accuracy / p95 time series for CascadeServe (few devices) vs
+DynBa (many devices) and MS+ — showing CascadeServe holding the latency SLO
+through the spike with a minor, temporary accuracy dip."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Results, bert_workload
+from repro.core import (HardwareSpec, SLO, ServingSimulator,
+                        optimize_gear_plan)
+from repro.core.traces import spiky_trace
+from repro.serving.baselines import DynBaPolicy, MSPlusPolicy
+
+
+def window_series(result, horizon, win=5.0):
+    """(t, p95_ms, accuracy) per sliding window."""
+    out = []
+    t = result.complete_times
+    for start in np.arange(0, horizon - win + 1e-9, win):
+        sel = (t >= start) & (t < start + win)
+        if sel.sum() < 5:
+            continue
+        out.append((start + win / 2,
+                    float(np.quantile(result.latencies[sel], 0.95)) * 1e3,
+                    float(result.correct[sel].mean())))
+    return out
+
+
+def main(quick: bool = False):
+    res = Results("bench_degradation")
+    profiles = bert_workload()
+    seconds = 60 if quick else 90
+    trace = spiky_trace(seconds=seconds, base_qps=1500, spike_qps=15000,
+                        spike_len=10)
+    slo = SLO(kind="latency", latency_p95=0.4)
+
+    # CascadeServe on 1 and 2 devices
+    for n in (1, 2):
+        hw = HardwareSpec(num_devices=n, mem_per_device=16e9)
+        plan = optimize_gear_plan(profiles, hw, slo, qps_max=15000,
+                                  n_ranges=8).plan
+        r = ServingSimulator(profiles, plan.replicas, n).run_trace(
+            plan, trace)
+        series = window_series(r, seconds)
+        worst_p95 = max(s[1] for s in series)
+        min_acc = min(s[2] for s in series)
+        res.add(f"cascadeserve_{n}dev_worst_p95ms", round(worst_p95, 1),
+                min_window_acc=round(min_acc, 4),
+                mean_acc=round(r.accuracy, 4),
+                slo_ok=bool(worst_p95 <= 400),
+                switches=len(r.gear_switches))
+
+    # DynBa with 4 devices (static provisioning, best single model)
+    hw4 = HardwareSpec(num_devices=4, mem_per_device=16e9)
+    best = None
+    for pol in DynBaPolicy.grid(profiles):
+        gears, sel, reps, nd = pol.build(profiles, hw4, slo, 15000)
+        r = ServingSimulator(profiles, reps, nd).run_policy(gears, sel,
+                                                            trace)
+        if r.completed < 0.95 * r.offered:
+            continue
+        if best is None or (r.p95 <= 0.4 and
+                            r.accuracy > best[1].accuracy):
+            best = (pol, r)
+    if best:
+        series = window_series(best[1], seconds)
+        worst = max(s[1] for s in series)
+        res.add("dynba_4dev_worst_p95ms", round(worst, 1),
+                model=best[0].model, mean_acc=round(best[1].accuracy, 4),
+                slo_ok=bool(worst <= 400))
+
+    # MS+ with 3 devices
+    hw3 = HardwareSpec(num_devices=3, mem_per_device=16e9)
+    gears, sel, reps, nd = MSPlusPolicy(n_ranges=8).build(profiles, hw3,
+                                                          slo, 15000)
+    r = ServingSimulator(profiles, reps, nd).run_policy(gears, sel, trace)
+    series = window_series(r, seconds)
+    res.add("msplus_3dev_worst_p95ms",
+            round(max(s[1] for s in series), 1),
+            mean_acc=round(r.accuracy, 4),
+            min_window_acc=round(min(s[2] for s in series), 4))
+    return res.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Beyond-paper: fault tolerance + elasticity numbers — device-failure
+rebalance (SP3 LP re-solve), straggler hedging, elastic replanning cost."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Results, bert_hw, bert_workload
+from repro.core import SLO, ServingSimulator, optimize_gear_plan
+from repro.core.planner import make_state
+from repro.core.plan_state import OK
+from repro.core.submodules import SUBMODULES
+from repro.core.traces import diurnal_like_trace
+from repro.distributed.fault_tolerance import (HedgePolicy, elastic_replan,
+                                               rebalance_on_failure)
+
+
+def main(quick: bool = False):
+    res = Results("bench_fault_tolerance")
+    profiles = bert_workload()
+    hw = bert_hw(4)
+    slo = SLO(kind="latency", latency_p95=0.4)
+    plan = optimize_gear_plan(profiles, hw, slo, qps_max=6000,
+                              n_ranges=8).plan
+    seconds = 30 if quick else 60
+    trace = diurnal_like_trace(seconds=seconds, peak_qps=4500, seed=5)
+    sim = ServingSimulator(profiles, plan.replicas, hw.num_devices)
+
+    base = sim.run_trace(plan, trace)
+    res.add("baseline_completed_pct",
+            round(100 * base.completed / base.offered, 2),
+            p95_ms=round(base.p95 * 1e3, 1))
+
+    events = [(seconds / 3, 0, "fail", 0.0)]
+    r_no = sim.run_trace(plan, trace, device_events=events)
+    res.add("failure_no_rebalance_completed_pct",
+            round(100 * r_no.completed / r_no.offered, 2),
+            p95_ms=round(r_no.p95 * 1e3, 1))
+
+    t0 = time.time()
+    reb_ms = []
+
+    def on_fail(t, dev):
+        s = time.time()
+        gears = rebalance_on_failure(plan, profiles, {dev}).gears
+        reb_ms.append((time.time() - s) * 1e3)
+        return gears
+
+    r_fix = sim.run_trace(plan, trace, device_events=events,
+                          on_failure=on_fail)
+    res.add("failure_rebalance_completed_pct",
+            round(100 * r_fix.completed / r_fix.offered, 2),
+            p95_ms=round(r_fix.p95 * 1e3, 1),
+            rebalance_ms=round(np.mean(reb_ms), 1))
+
+    # straggler: 8x slowdown window, hedging on/off
+    ev2 = [(seconds / 3, 1, "slow", 8.0),
+           (2 * seconds / 3, 1, "recover", 1.0)]
+    trace_lo = diurnal_like_trace(seconds=seconds, peak_qps=2500, seed=5)
+    r_s = sim.run_trace(plan, trace_lo, device_events=ev2)
+    r_h = sim.run_trace(plan, trace_lo, device_events=ev2,
+                        hedge=HedgePolicy(hedge_multiplier=2.5))
+    res.add("straggler_p99_ms", round(r_s.latency_quantile(0.99) * 1e3, 1))
+    res.add("straggler_hedged_p99_ms",
+            round(r_h.latency_quantile(0.99) * 1e3, 1),
+            improvement_pct=round(
+                100 * (1 - r_h.latency_quantile(0.99)
+                       / max(r_s.latency_quantile(0.99), 1e-9)), 1))
+
+    # elastic replanning cost: SP3+SP4-only vs a cold Algorithm-1 run
+    state = make_state(profiles, hw, slo, qps_max=6000, n_ranges=8)
+    error, cur = OK, 0
+    for _ in range(400):
+        error, state = SUBMODULES[cur](error, state)
+        if error.is_ok:
+            cur = (cur + 1) % 4
+            if cur == 0 and state.min_qlens:
+                break
+        else:
+            cur -= 1
+    t0 = time.time()
+    elastic_replan(state, 6)
+    t_el = time.time() - t0
+    t0 = time.time()
+    optimize_gear_plan(profiles,
+                       bert_hw(6), slo, qps_max=6000, n_ranges=8)
+    t_cold = time.time() - t0
+    res.add("elastic_replan_seconds", round(t_el, 2),
+            cold_replan_seconds=round(t_cold, 2),
+            speedup=round(t_cold / max(t_el, 1e-9), 1))
+    return res.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Fig. 11: offline planning cost (wall time + submodule calls) vs the
+number of QPS ranges, on both workloads."""
+from __future__ import annotations
+
+from benchmarks.common import (Results, bert_hw, bert_workload, llama_hw,
+                               llama_workload)
+from repro.core import SLO, optimize_gear_plan
+
+
+def main(quick: bool = False):
+    res = Results("bench_planner_cost")
+    sweeps = [4, 8] if quick else [2, 4, 8, 16]
+    for tag, profiles, hw, slo, qps_max in [
+        ("bert", bert_workload(), bert_hw(4),
+         SLO(kind="latency", latency_p95=0.4), 7600),
+        ("llama", llama_workload(), llama_hw(16),
+         SLO(kind="accuracy", min_accuracy=0.55), 60),
+    ]:
+        for n_ranges in sweeps:
+            rep = optimize_gear_plan(profiles, hw, slo, qps_max=qps_max,
+                                     n_ranges=n_ranges, max_calls=800)
+            res.add(f"{tag}_nranges{n_ranges}_seconds",
+                    round(rep.wall_seconds, 2),
+                    submodule_calls=rep.submodule_calls,
+                    errors_resolved=rep.errors_resolved)
+    return res.finish()
+
+
+if __name__ == "__main__":
+    main()

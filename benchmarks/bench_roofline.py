@@ -1,0 +1,43 @@
+"""§Roofline table: summarise the dry-run sweep artifacts (all 40 cells x
+both meshes) — the three terms, dominant bottleneck, useful-FLOPs ratio and
+roofline fraction per (arch x shape)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import ARTIFACT_DIR, Results
+
+
+def main(quick: bool = False):
+    res = Results("bench_roofline")
+    rows = []
+    for f in ("dryrun_single.json", "dryrun_multi.json"):
+        path = os.path.join(ARTIFACT_DIR, f)
+        if os.path.exists(path):
+            rows += json.load(open(path))
+    if not rows:
+        res.add("skipped", "run repro.launch.dryrun first")
+        return res.finish()
+    ok = [r for r in rows if r["status"] == "ok"]
+    res.add("cells_ok", len(ok), skips=sum(r["status"] == "skip"
+                                           for r in rows),
+            errors=sum(r["status"] == "error" for r in rows))
+    for r in sorted(ok, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        res.add(f"{r['mesh']}_{r['arch']}_{r['shape']}",
+                round(r["roofline_fraction"], 4),
+                dominant=r["dominant"],
+                t_compute_ms=round(r["t_compute"] * 1e3, 3),
+                t_memory_ms=round(r["t_memory"] * 1e3, 3),
+                t_collective_ms=round(r["t_collective"] * 1e3, 3),
+                useful_flops_ratio=round(r["useful_flops_ratio"], 3))
+    worst = sorted((r for r in ok if r["mesh"] == "single"),
+                   key=lambda r: r["roofline_fraction"])[:3]
+    for r in worst:
+        res.add(f"worst_{r['arch']}_{r['shape']}",
+                round(r["roofline_fraction"], 4), dominant=r["dominant"])
+    return res.finish()
+
+
+if __name__ == "__main__":
+    main()

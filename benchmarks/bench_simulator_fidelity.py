@@ -1,0 +1,104 @@
+"""Fig. 13: simulator fidelity — simulated vs actually-run p95 latency for
+several gear plans, on REAL tiny models served by the threaded runtime
+(wall clock) vs the same plans in the discrete-event simulator."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Results, TINY_ARTIFACT, bert_workload
+from repro.core import (HardwareSpec, SLO, ServingSimulator,
+                        optimize_gear_plan)
+from repro.core.simulator import trace_to_arrivals
+from repro.core.traces import azure_like_trace, diurnal_like_trace
+
+
+def main(quick: bool = False):
+    import os
+    res = Results("bench_simulator_fidelity")
+    if not os.path.exists(TINY_ARTIFACT):
+        res.add("skipped", "tiny_family artifact missing")
+        return res.finish()
+    import jax
+    from repro.serving.engine import InferenceEngine
+    from repro.serving.runtime import CascadeServer, Request
+    from repro.serving.tinymodels import (TINY_FAMILY, apply_tiny,
+                                          load_tiny_family,
+                                          synthetic_classification_data)
+    profiles = bert_workload(real=True)
+    params_by, _, _, _ = load_tiny_family(TINY_ARTIFACT)
+    engines = {c.name: InferenceEngine(
+        c.name, lambda p, t, cc=c: apply_tiny(cc, p, t),
+        params_by[c.name]) for c in TINY_FAMILY}
+    for e in engines.values():
+        e.warmup(32)
+
+    # --- calibrate the runtime's fixed per-batch overhead (queue machinery,
+    # polling, GIL) against idle single requests — the DES then uses it as
+    # SimConfig.dispatch_overhead, exactly how the paper's simulator relies
+    # on profiles measured from the real system (App. C.1).
+    import time as _time
+    from repro.core import SimConfig
+    probe = TINY_FAMILY[0].name
+    hw0 = HardwareSpec(num_devices=1, mem_per_device=16e9)
+    plan0 = optimize_gear_plan({probe: profiles[probe]}, hw0,
+                               SLO(kind="latency", latency_p95=1.0),
+                               qps_max=50, n_ranges=1).plan
+    toks0, _, _ = synthetic_classification_data(24, seed=3)
+    server0 = CascadeServer(plan0, {probe: engines[probe]})
+    server0.start()
+    for i in range(24):
+        server0.submit(Request(rid=i, tokens=toks0[i]))
+        _time.sleep(0.06)  # idle spacing: pure per-request overhead
+    _time.sleep(0.3)
+    server0.stop()
+    idle_lat = np.median([r.latency for r in server0.completed])
+    overhead = max(0.0, float(idle_lat) - profiles[probe].runtime(1))
+    res.add("calibrated_dispatch_overhead_ms", round(overhead * 1e3, 2))
+
+    seconds = 8 if quick else 15
+    # modest QPS so the single CPU core can execute every consumer honestly
+    scenarios = [
+        ("diurnal_lat", diurnal_like_trace(seconds, 120, seed=1),
+         SLO(kind="latency", latency_p95=0.5), 120),
+        ("azure_lat", azure_like_trace(seconds, 80, seed=2),
+         SLO(kind="latency", latency_p95=0.3), 80),
+        ("diurnal_acc", diurnal_like_trace(seconds, 100, seed=3),
+         SLO(kind="accuracy", min_accuracy=0.9), 100),
+    ]
+    n_dev = 2
+    errors = []
+    for tag, trace, slo, qps_max in scenarios:
+        hw = HardwareSpec(num_devices=n_dev, mem_per_device=16e9)
+        plan = optimize_gear_plan(profiles, hw, slo, qps_max=qps_max,
+                                  n_ranges=4).plan
+        # simulated (with the calibrated fixed overhead)
+        sim = ServingSimulator(profiles, plan.replicas, n_dev,
+                               SimConfig(dispatch_overhead=overhead))
+        r_sim = sim.run_trace(plan, trace)
+        # real
+        n = len(trace_to_arrivals(trace)) + 8
+        toks, labels, _ = synthetic_classification_data(n, seed=11)
+        reqs = [Request(rid=i, tokens=toks[i]) for i in range(n)]
+        server = CascadeServer(plan, engines)
+        done = server.run_trace(reqs, trace, drain=2.0)
+        lats = np.array([r.latency for r in done])
+        p95_real = float(np.quantile(lats, 0.95)) if len(lats) else float("nan")
+        p95_sim = r_sim.p95
+        rel_err = (p95_sim - p95_real) / p95_real if p95_real else float("nan")
+        errors.append(rel_err)
+        acc_real = float(np.mean([int(r.pred == labels[r.rid])
+                                  for r in done]))
+        res.add(f"{tag}_p95_sim_ms", round(p95_sim * 1e3, 2),
+                p95_real_ms=round(p95_real * 1e3, 2),
+                rel_err=round(rel_err, 3),
+                acc_sim=round(r_sim.accuracy, 4),
+                acc_real=round(acc_real, 4),
+                completed_real=f"{len(done)}/{n - 8}")
+    res.add("median_abs_rel_err",
+            round(float(np.median(np.abs(errors))), 3),
+            note="Fig. 13 reports ~10-40% band on real systems")
+    return res.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Shared benchmark scaffolding: the two paper workloads, hardware, CSV."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import HardwareSpec, SLO, ServingSimulator
+from repro.core.profiles import ProfileSet, synthetic_family
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+TINY_ARTIFACT = os.path.join(ARTIFACT_DIR, "tiny_family.npz")
+
+
+def bert_workload(real: bool = True) -> ProfileSet:
+    """Five fast models (the paper's BERT family). With ``real`` and a
+    cached artifact, uses the trained tiny transformers with wall-clock CPU
+    profiles; otherwise the calibrated synthetic family."""
+    if real and os.path.exists(TINY_ARTIFACT):
+        from repro.serving.engine import InferenceEngine, profile_engine
+        from repro.serving.tinymodels import (TINY_FAMILY, apply_tiny,
+                                              load_tiny_family,
+                                              validation_record_from_scores)
+        params_by, scores_by, tok_va, lab_va = load_tiny_family(TINY_ARTIFACT)
+        out: ProfileSet = {}
+        for cfg in TINY_FAMILY:
+            rec = validation_record_from_scores(scores_by[cfg.name], lab_va)
+            eng = InferenceEngine(cfg.name,
+                                  lambda p, t, c=cfg: apply_tiny(c, p, t),
+                                  params_by[cfg.name])
+            out[cfg.name] = profile_engine(
+                eng, seq_len=32, batch_sizes=(1, 4, 16, 64), repeats=3,
+                validation=rec)
+        return out
+    return synthetic_family(["t-tiny", "t-mini", "t-small", "t-medium",
+                             "t-base"], base_runtime=2e-4,
+                            runtime_ratio=2.2, base_acc=0.80,
+                            acc_gain=0.04, mem_base=0.4e9, seed=3)
+
+
+def llama_workload() -> ProfileSet:
+    """Four slow models (the paper's Llama family): 3b/7b/13b/70b-like
+    latency ratios, HellaSwag-like accuracy range."""
+    return synthetic_family(
+        ["l-3b", "l-7b", "l-13b", "l-70b"], base_runtime=6e-2,
+        runtime_ratio=2.1, base_acc=0.42, acc_gain=0.06,
+        mem_base=2e9, seed=4,
+        batch_sizes=(1, 2, 4, 8, 16), batch_efficiency=0.75)
+
+
+def bert_hw(n: int = 4) -> HardwareSpec:
+    return HardwareSpec(num_devices=n, mem_per_device=16e9)
+
+
+def llama_hw(n: int = 16) -> HardwareSpec:
+    return HardwareSpec(num_devices=n, mem_per_device=32e9)
+
+
+class Results:
+    """name,value CSV emission + JSON artifact accumulation."""
+
+    def __init__(self, bench: str):
+        self.bench = bench
+        self.rows: List[Dict] = []
+        self._t0 = time.time()
+
+    def add(self, name: str, value, **extra):
+        row = {"bench": self.bench, "name": name, "value": value, **extra}
+        self.rows.append(row)
+        extras = " ".join(f"{k}={v}" for k, v in extra.items())
+        print(f"{self.bench},{name},{value} {extras}".strip(), flush=True)
+
+    def finish(self) -> List[Dict]:
+        print(f"# {self.bench} done in {time.time() - self._t0:.1f}s",
+              flush=True)
+        os.makedirs(ARTIFACT_DIR, exist_ok=True)
+        path = os.path.join(ARTIFACT_DIR, f"{self.bench}.json")
+        with open(path, "w") as f:
+            json.dump(self.rows, f, indent=1, default=str)
+        return self.rows

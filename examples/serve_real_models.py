@@ -1,0 +1,61 @@
+"""Serve REAL models: the trained tiny-transformer family through the
+threaded producer/consumer runtime (wall-clock), end to end.
+
+    PYTHONPATH=src python examples/serve_real_models.py
+
+Trains (or loads) five tiny classifiers, profiles them on this CPU, plans a
+gear plan, then replays a bursty trace open-loop against the live server —
+the same pipeline the simulator-fidelity benchmark (paper Fig. 13) uses.
+"""
+import numpy as np
+
+from repro.core import HardwareSpec, SLO, optimize_gear_plan
+from repro.core.simulator import trace_to_arrivals
+from repro.core.traces import azure_like_trace
+from repro.serving.engine import InferenceEngine, profile_engine
+from repro.serving.runtime import CascadeServer, Request
+from repro.serving.tinymodels import (TINY_FAMILY, apply_tiny,
+                                      synthetic_classification_data,
+                                      train_tiny_family,
+                                      validation_record_from_scores)
+
+ARTIFACT = "benchmarks/artifacts/tiny_family.npz"
+
+print("loading / training the tiny model family ...")
+params_by, scores_by, tok_va, lab_va = train_tiny_family(cache_path=ARTIFACT)
+
+profiles, engines = {}, {}
+for cfg in TINY_FAMILY:
+    rec = validation_record_from_scores(scores_by[cfg.name], lab_va)
+    eng = InferenceEngine(cfg.name,
+                          lambda p, t, c=cfg: apply_tiny(c, p, t),
+                          params_by[cfg.name])
+    engines[cfg.name] = eng
+    profiles[cfg.name] = profile_engine(eng, seq_len=32,
+                                        batch_sizes=(1, 4, 16, 64),
+                                        repeats=3, validation=rec)
+    print(f"  {cfg.name:10s} acc={rec.accuracy:.3f} "
+          f"rt(64)={profiles[cfg.name].runtime(64) * 1e3:.1f}ms")
+
+hw = HardwareSpec(num_devices=2, mem_per_device=16e9)
+plan = optimize_gear_plan(profiles, hw,
+                          SLO(kind="latency", latency_p95=0.3),
+                          qps_max=150, n_ranges=4).plan
+for r, g in enumerate(plan.gears):
+    print(f"  gear {r}: {' -> '.join(g.cascade.models)}")
+
+trace = azure_like_trace(seconds=15, peak_qps=150, seed=3)
+n = len(trace_to_arrivals(trace)) + 8
+toks, labels, _ = synthetic_classification_data(n, seed=7)
+requests = [Request(rid=i, tokens=toks[i]) for i in range(n)]
+
+print("\nserving", int(trace.sum()), "requests over 15s (wall clock) ...")
+server = CascadeServer(plan, engines)
+done = server.run_trace(requests, trace, drain=2.0)
+lats = np.array([r.latency for r in done])
+acc = float(np.mean([int(r.pred == labels[r.rid]) for r in done]))
+by_stage = np.bincount([r.resolver for r in done])
+print(f"done: {len(done)} completed  p50={np.quantile(lats, .5) * 1e3:.1f}ms "
+      f"p95={np.quantile(lats, .95) * 1e3:.1f}ms accuracy={acc:.4f}")
+print(f"resolved per cascade stage: {by_stage.tolist()} "
+      f"(gear switches: {len(server.gear_switches)})")

@@ -1,0 +1,62 @@
+"""Fault-tolerant training: train a reduced assigned architecture with
+checkpoints, simulate a crash, resume from LATEST.
+
+    PYTHONPATH=src python examples/train_resume.py [--arch qwen2-moe-a2.7b]
+
+The same driver trains the FULL configs on a TPU slice (the multi-pod
+dry-run proves the production mesh compiles); remat, microbatching, ZeRO-1
+and int8 DCN gradient compression are flags on the identical code path.
+"""
+import argparse
+import shutil
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.training import (AdamWConfig, SyntheticDataset, TrainStepConfig,
+                            init_opt_state, make_train_step)
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen2-moe-a2.7b")
+ap.add_argument("--ckpt-dir", default="/tmp/repro_train_resume")
+args = ap.parse_args()
+
+shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+cfg = get_smoke_config(args.arch)
+print(f"training {cfg.name} (reduced: {cfg.param_count() / 1e6:.1f}M params)")
+
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+opt = init_opt_state(params)
+step_fn = jax.jit(make_train_step(
+    cfg, AdamWConfig(learning_rate=2e-3, warmup_steps=5, decay_steps=100),
+    TrainStepConfig(remat=True, num_microbatches=2)))
+ds = SyntheticDataset(cfg, batch=8, seq_len=48, seed=0)
+mgr = CheckpointManager(args.ckpt_dir, keep=2)
+
+print("\nphase 1: train 10 steps, checkpoint every 5")
+for step in range(10):
+    batch = {k: jnp.asarray(v) for k, v in ds.next_batch().items()}
+    params, opt, m = step_fn(params, opt, batch)
+    if (step + 1) % 5 == 0:
+        mgr.save(step + 1, (params, opt))
+    print(f"  step {step + 1:2d} loss={float(m['loss']):.4f}")
+
+print("\n-- simulated crash: process dies, state lost --")
+del params, opt
+
+print("phase 2: restart, restore from LATEST, continue")
+params = M.init_params(cfg, jax.random.PRNGKey(0))  # template
+opt = init_opt_state(params)
+(params, opt), meta = mgr.restore((params, opt))
+params = jax.tree.map(jnp.asarray, params)
+opt = jax.tree.map(jnp.asarray, opt)
+print(f"  resumed at step {meta['step']}")
+for step in range(meta["step"], meta["step"] + 5):
+    batch = {k: jnp.asarray(v) for k, v in ds.next_batch().items()}
+    params, opt, m = step_fn(params, opt, batch)
+    print(f"  step {step + 1:2d} loss={float(m['loss']):.4f}")
+print("\ntraining resumed seamlessly; retention kept",
+      mgr.all_steps(), "checkpoints")

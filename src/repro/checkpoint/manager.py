@@ -1,0 +1,139 @@
+"""Checkpointing: atomic, retention-managed save/restore of params,
+optimizer state, data-pipeline position, and gear plans.
+
+Layout (one directory per step):
+    <root>/step_000123/
+        arrays.npz        flattened pytree leaves (params + opt state)
+        meta.json         treedef token, step, timestamp, extra metadata
+        gear_plan.json    (serving checkpoints)
+    <root>/LATEST          text file with the newest complete step dir
+
+Writes go to a temp dir + atomic rename, so a crash mid-save never corrupts
+the latest checkpoint (fault-tolerance requirement: restart picks up LATEST).
+On a multi-host cluster each process saves only its addressable shards and
+restore re-shards via device_put; on this single-process container that
+reduces to full arrays — the protocol is identical.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+class CheckpointManager:
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None,
+             gear_plan_json: Optional[str] = None) -> str:
+        name = f"step_{step:09d}"
+        final = os.path.join(self.root, name)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        arrays, dtypes = {}, []
+        for i, l in enumerate(leaves):
+            arr = np.asarray(l)
+            dtypes.append(str(arr.dtype))
+            if arr.dtype.kind == "V" or "bfloat16" in str(arr.dtype):
+                arr = arr.view(np.uint16)  # npz can't round-trip bf16
+            arrays[f"leaf_{i}"] = arr
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        meta = {
+            "step": step,
+            "time": time.time(),
+            "n_leaves": len(leaves),
+            "dtypes": dtypes,
+            "treedef": str(treedef),
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if gear_plan_json is not None:
+            with open(os.path.join(tmp, "gear_plan.json"), "w") as f:
+                f.write(gear_plan_json)
+        os.replace(tmp, final)  # atomic publish
+        self._update_latest(name)
+        self._enforce_retention()
+        return final
+
+    def _update_latest(self, name: str) -> None:
+        tmp = os.path.join(self.root, "LATEST.tmp")
+        with open(tmp, "w") as f:
+            f.write(name)
+        os.replace(tmp, os.path.join(self.root, "LATEST"))
+
+    def _enforce_retention(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.root, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self) -> List[int]:
+        out = []
+        for d in os.listdir(self.root):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                try:
+                    out.append(int(d[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        path = os.path.join(self.root, "LATEST")
+        if os.path.exists(path):
+            with open(path) as f:
+                name = f.read().strip()
+            if os.path.isdir(os.path.join(self.root, name)):
+                return int(name[5:])
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Tuple[Any, Dict]:
+        """Restore into the structure of ``template``; optionally
+        device_put onto ``shardings`` (a matching pytree)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {self.root}")
+        d = os.path.join(self.root, f"step_{step:09d}")
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        leaves, treedef = jax.tree_util.tree_flatten(template)
+        assert meta["n_leaves"] == len(leaves), \
+            f"checkpoint has {meta['n_leaves']} leaves, template {len(leaves)}"
+        import ml_dtypes
+        dtypes = meta.get("dtypes", [])
+        loaded = []
+        for i in range(len(leaves)):
+            arr = data[f"leaf_{i}"]
+            if i < len(dtypes) and "bfloat16" in dtypes[i]:
+                arr = arr.view(ml_dtypes.bfloat16)
+            loaded.append(arr)
+        tree = jax.tree_util.tree_unflatten(treedef, loaded)
+        if shardings is not None:
+            tree = jax.device_put(tree, shardings)
+        return tree, meta
+
+    def restore_gear_plan(self, step: Optional[int] = None) -> Optional[str]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None
+        path = os.path.join(self.root, f"step_{step:09d}", "gear_plan.json")
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            return f.read()

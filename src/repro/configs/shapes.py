@@ -1,0 +1,122 @@
+"""Assigned input-shape cells and ShapeDtypeStruct input specs.
+
+Four shapes per architecture (40 cells total):
+  train_4k     seq_len=4096   global_batch=256   -> train_step
+  prefill_32k  seq_len=32768  global_batch=32    -> serve_step(prefill)
+  decode_32k   seq_len=32768  global_batch=128   -> serve_step(decode): one
+               new token with a KV cache / SSM state of seq_len
+  long_500k    seq_len=524288 global_batch=1     -> serve_step(decode); only
+               for sub-quadratic archs (ssm / hybrid / sliding-window)
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs — no device
+allocation — exactly what jit(...).lower(**specs) needs for the dry-run.
+Decode cells additionally need ``cache_specs`` (the KV/SSM cache is a
+separate, donated argument).
+
+Sequence accounting: for VLM archs the vision prefix counts toward the cell's
+seq_len (text tokens = seq_len - num_prefix_embeddings), so every cell
+processes exactly ``seq_len`` positions. Enc-dec decode reads cross-attention
+K/V from the cache (projected once at prefill), not from a memory input.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str  # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_is_applicable(cfg: ModelConfig, shape: ShapeCell) -> bool:
+    """Whether (arch x shape) runs, per the assignment's skip rules."""
+    if shape.name == "long_500k":
+        return cfg.supports_long_context
+    if shape.kind == "decode":
+        return cfg.has_decode  # all assigned archs decode (no encoder-only)
+    return True
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeCell) -> Optional[str]:
+    if cell_is_applicable(cfg, shape):
+        return None
+    if shape.name == "long_500k":
+        return (f"{cfg.name} is pure full-attention; a 524288-token KV cache "
+                "requires sub-quadratic attention (DESIGN.md §6)")
+    return f"{cfg.name} has no decode step"
+
+
+def _token_spec(batch: int, seq: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+
+def text_len(cfg: ModelConfig, shape: ShapeCell) -> int:
+    """Text-token count for a cell (vision prefix counts toward seq_len)."""
+    if cfg.frontend.kind == "vision" and shape.kind != "decode":
+        return shape.seq_len - cfg.frontend.num_prefix_embeddings
+    return shape.seq_len
+
+
+def source_len(cfg: ModelConfig, shape: ShapeCell) -> int:
+    """Encoder source length for enc-dec archs."""
+    if not cfg.is_encoder_decoder:
+        return 0
+    return min(cfg.encdec.max_source_len, shape.seq_len)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train:   tokens/labels (B, S_text) [+ frontend embeddings / source frames]
+    prefill: tokens (B, S_text) [+ frontend embeddings / source frames]
+    decode:  tokens (B, 1) + cache_index scalar; the KV/SSM cache itself is a
+             separate donated argument produced by ``cache_specs``.
+    """
+    b = shape.global_batch
+    s_text = text_len(cfg, shape)
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind == "train":
+        specs["tokens"] = _token_spec(b, s_text)
+        specs["labels"] = _token_spec(b, s_text)
+    elif shape.kind == "prefill":
+        specs["tokens"] = _token_spec(b, s_text)
+    else:  # decode: one new token against a cache of length seq_len
+        specs["tokens"] = _token_spec(b, 1)
+        specs["cache_index"] = jax.ShapeDtypeStruct((), jnp.int32)
+
+    fe = cfg.frontend
+    if fe.kind == "vision" and shape.kind != "decode":
+        specs["prefix_embeddings"] = jax.ShapeDtypeStruct(
+            (b, fe.num_prefix_embeddings, fe.frontend_dim), jnp.bfloat16)
+    if cfg.is_encoder_decoder and shape.kind != "decode":
+        specs["source_frames"] = jax.ShapeDtypeStruct(
+            (b, source_len(cfg, shape), fe.frontend_dim or cfg.d_model),
+            jnp.bfloat16)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeCell) -> Any:
+    """Decode-cache ShapeDtypeStructs for decode cells (capacity = seq_len)."""
+    from repro.models import model as model_lib  # local import (cycle-free)
+    assert shape.kind == "decode"
+    return model_lib.init_cache(
+        cfg, shape.global_batch, shape.seq_len, spec_only=True,
+        source_len=source_len(cfg, shape))

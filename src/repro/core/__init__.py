@@ -1,0 +1,28 @@
+"""CascadeServe core: gear-plan generation (Alg. 1) + online semantics.
+
+The paper's primary contribution — offline planner (SP1-SP4 submodules,
+EM-style error-driven co-optimisation), discrete-event simulator, LP load
+balancer, certainty estimation, cascade semantics, gear plans.
+"""
+from repro.core.cascade import Cascade, CascadeEval, evaluate_cascade
+from repro.core.certainty import (CERTAINTY_ESTIMATORS, predict_with_certainty,
+                                  top2_gap)
+from repro.core.gears import Gear, GearPlan, SLO
+from repro.core.lp import Replica, min_utilization, min_utilization_lp
+from repro.core.plan_state import (HardwareSpec, InfeasiblePlanError,
+                                   PlanError, PlannerState)
+from repro.core.planner import PlannerReport, optimize_gear_plan
+from repro.core.profiles import ModelProfile, ProfileSet, ValidationRecord, \
+    synthetic_family
+from repro.core.simulator import ServingSimulator, SimConfig, SimResult, \
+    make_gear
+
+__all__ = [
+    "Cascade", "CascadeEval", "evaluate_cascade", "CERTAINTY_ESTIMATORS",
+    "predict_with_certainty", "top2_gap", "Gear", "GearPlan", "SLO",
+    "Replica", "min_utilization", "min_utilization_lp", "HardwareSpec",
+    "InfeasiblePlanError", "PlanError", "PlannerState", "PlannerReport",
+    "optimize_gear_plan", "ModelProfile", "ProfileSet", "ValidationRecord",
+    "synthetic_family", "ServingSimulator", "SimConfig", "SimResult",
+    "make_gear",
+]

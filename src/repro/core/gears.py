@@ -1,0 +1,162 @@
+"""Gear plan: the paper's core abstraction (§3, §4).
+
+A *gear* tells the online system, for one QPS range: which cascade to run,
+the min-queue-length (batch trigger) per model, and how each model's load is
+split across its replicas. The *gear plan* is the full table over
+``n_ranges`` equal QPS ranges in [0, qps_max], plus the fixed model placement
+(replicas never move at runtime — no model loading on the critical path).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.cascade import Cascade
+from repro.core.lp import Replica
+
+
+@dataclass(frozen=True)
+class SLO:
+    """Service-level objective: constrain one metric, optimise the other."""
+    kind: str                      # "latency" | "accuracy"
+    latency_p95: Optional[float] = None   # seconds (kind == "latency")
+    min_accuracy: Optional[float] = None  # fraction (kind == "accuracy")
+
+    def __post_init__(self):
+        assert self.kind in ("latency", "accuracy")
+        if self.kind == "latency":
+            assert self.latency_p95 is not None
+        else:
+            assert self.min_accuracy is not None
+
+
+@dataclass
+class Gear:
+    cascade: Cascade
+    # batch trigger: inference fires when queue length >= this (paper §4.5)
+    min_queue_lens: Dict[str, int]
+    # per model: fraction of that model's QPS routed to each replica
+    # (aligned with GearPlan.replicas indices)
+    load_fractions: Dict[str, Dict[int, float]]
+    expected_accuracy: float = 0.0
+    expected_p95: float = 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "models": list(self.cascade.models),
+            "thresholds": list(self.cascade.thresholds),
+            "min_queue_lens": dict(self.min_queue_lens),
+            "load_fractions": {m: {str(k): v for k, v in d.items()}
+                               for m, d in self.load_fractions.items()},
+            "expected_accuracy": self.expected_accuracy,
+            "expected_p95": self.expected_p95,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "Gear":
+        return cls(
+            cascade=Cascade(tuple(d["models"]), tuple(d["thresholds"])),
+            min_queue_lens={k: int(v) for k, v in d["min_queue_lens"].items()},
+            load_fractions={m: {int(k): float(v) for k, v in sub.items()}
+                            for m, sub in d["load_fractions"].items()},
+            expected_accuracy=d.get("expected_accuracy", 0.0),
+            expected_p95=d.get("expected_p95", 0.0))
+
+
+@dataclass
+class GearPlan:
+    qps_max: float
+    gears: List[Gear]              # one per equal-width QPS range
+    replicas: List[Replica]        # fixed placement (model, device, runtime)
+    num_devices: int
+    slo: SLO
+
+    @property
+    def n_ranges(self) -> int:
+        return len(self.gears)
+
+    @property
+    def range_width(self) -> float:
+        return self.qps_max / max(self.n_ranges, 1)
+
+    def gear_index_for_qps(self, qps: float) -> int:
+        idx = int(qps / self.range_width)
+        return int(np.clip(idx, 0, self.n_ranges - 1))
+
+    def gear_for_qps(self, qps: float) -> Gear:
+        return self.gears[self.gear_index_for_qps(qps)]
+
+    def replicas_of(self, model: str) -> List[int]:
+        return [i for i, r in enumerate(self.replicas) if r.model == model]
+
+    def models_used(self) -> List[str]:
+        out = []
+        for g in self.gears:
+            for m in g.cascade.models:
+                if m not in out:
+                    out.append(m)
+        return out
+
+    # ---- (de)serialisation (checkpointing / ops handoff) -------------------
+    def to_dict(self) -> Dict:
+        return {
+            "qps_max": self.qps_max,
+            "num_devices": self.num_devices,
+            "slo": {"kind": self.slo.kind,
+                    "latency_p95": self.slo.latency_p95,
+                    "min_accuracy": self.slo.min_accuracy},
+            "replicas": [{"model": r.model, "device": r.device,
+                          "runtime_per_sample": r.runtime_per_sample}
+                         for r in self.replicas],
+            "gears": [g.to_dict() for g in self.gears],
+        }
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=1)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "GearPlan":
+        return cls(
+            qps_max=d["qps_max"], num_devices=d["num_devices"],
+            slo=SLO(kind=d["slo"]["kind"],
+                    latency_p95=d["slo"]["latency_p95"],
+                    min_accuracy=d["slo"]["min_accuracy"]),
+            replicas=[Replica(r["model"], int(r["device"]),
+                              float(r["runtime_per_sample"]))
+                      for r in d["replicas"]],
+            gears=[Gear.from_dict(g) for g in d["gears"]])
+
+    @classmethod
+    def from_json(cls, s: str) -> "GearPlan":
+        return cls.from_dict(json.loads(s))
+
+
+def uniform_load_fractions(plan_replicas: Sequence[Replica],
+                           models: Sequence[str]
+                           ) -> Dict[str, Dict[int, float]]:
+    """Equal split of each model's load over its replicas (LP-free default)."""
+    out: Dict[str, Dict[int, float]] = {}
+    for m in models:
+        idxs = [i for i, r in enumerate(plan_replicas) if r.model == m]
+        if idxs:
+            out[m] = {i: 1.0 / len(idxs) for i in idxs}
+    return out
+
+
+def fractions_from_lp(q: np.ndarray, replicas: Sequence[Replica],
+                      models: Sequence[str]) -> Dict[str, Dict[int, float]]:
+    """Convert LP rates q_r into per-model routing fractions."""
+    out: Dict[str, Dict[int, float]] = {}
+    for m in models:
+        idxs = [i for i, r in enumerate(replicas) if r.model == m]
+        total = sum(q[i] for i in idxs)
+        if not idxs:
+            continue
+        if total <= 1e-12:
+            out[m] = {i: 1.0 / len(idxs) for i in idxs}
+        else:
+            out[m] = {i: float(q[i] / total) for i in idxs}
+    return out

@@ -1,0 +1,120 @@
+"""Shared planner state threaded through the four submodules (Alg. 1).
+
+Every submodule mutates only its own section of the state and reads the
+others; the planner driver cycles them until convergence.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.core.cascade import Cascade, CascadeEval
+from repro.core.gears import SLO
+from repro.core.lp import Replica
+from repro.core.profiles import ProfileSet
+from repro.core.simulator import SimConfig
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    """Abstract placement units. On the TPU target a 'device' is one
+    inference-server slice (a model-parallel group of chips); mem is the
+    slice's aggregate HBM. The paper's unit is one 32-GB V100."""
+    num_devices: int
+    mem_per_device: float  # bytes
+    chips_per_device: int = 1  # for cost reporting (chips = paper's #GPUs)
+
+
+@dataclass(frozen=True)
+class PlanError:
+    code: str  # ok | throughput | latency | accuracy | placement | infeasible
+    qps_range: Optional[int] = None
+    model: Optional[str] = None
+    detail: str = ""
+
+    @property
+    def is_ok(self) -> bool:
+        return self.code == "ok"
+
+
+OK = PlanError("ok")
+
+
+class InfeasiblePlanError(RuntimeError):
+    """Raised to the user when the SLO is unattainable on the hardware."""
+
+
+@dataclass
+class PlannerState:
+    profiles: ProfileSet
+    hardware: HardwareSpec
+    slo: SLO
+    qps_max: float
+    n_ranges: int
+    qps_prior: np.ndarray                      # weight per range
+    sim_cfg: SimConfig = field(default_factory=SimConfig)
+    sim_horizon: float = 2.0
+    rng_seed: int = 0
+
+    # SP1: candidate cascades (Pareto set) and their validation evals
+    cascades: List[Cascade] = field(default_factory=list)
+    cascade_evals: List[CascadeEval] = field(default_factory=list)
+    # analytic throughput estimate per cascade (samples/s on full hardware)
+    cascade_tput: List[float] = field(default_factory=list)
+
+    # SP2: cascade index assigned to each QPS range; per-range blacklists
+    assignment: List[int] = field(default_factory=list)
+    blacklist: Dict[int, Set[int]] = field(default_factory=dict)
+
+    # SP3: placement + per-range LP results
+    replicas: List[Replica] = field(default_factory=list)
+    load_fracs: List[Dict[str, Dict[int, float]]] = field(default_factory=list)
+    util: List[float] = field(default_factory=list)
+    min_replicas: Dict[str, int] = field(default_factory=dict)  # SP4 errors
+
+    # SP4: batching decisions + per-range sim outcomes
+    min_qlens: List[Dict[str, int]] = field(default_factory=list)
+    range_p95: List[float] = field(default_factory=list)
+    range_stable: List[bool] = field(default_factory=list)
+
+    # ---- helpers -----------------------------------------------------------
+    def range_hi(self, r: int) -> float:
+        return self.qps_max * (r + 1) / self.n_ranges
+
+    def range_mid(self, r: int) -> float:
+        return self.qps_max * (r + 0.5) / self.n_ranges
+
+    def cascade_of_range(self, r: int) -> Cascade:
+        return self.cascades[self.assignment[r]]
+
+    def eval_of_range(self, r: int) -> CascadeEval:
+        return self.cascade_evals[self.assignment[r]]
+
+    def weighted_accuracy(self) -> float:
+        accs = np.array([self.cascade_evals[c].accuracy
+                         for c in self.assignment])
+        return float((accs * self.qps_prior).sum())
+
+    def weighted_p95(self) -> float:
+        if not self.range_p95:
+            return float("inf")
+        return float((np.asarray(self.range_p95) * self.qps_prior).sum())
+
+    def models_used(self) -> List[str]:
+        out: List[str] = []
+        for ci in self.assignment:
+            for m in self.cascades[ci].models:
+                if m not in out:
+                    out.append(m)
+        return out
+
+    def signature(self) -> Tuple:
+        """Convergence check: the decisions of all four submodules."""
+        return (
+            tuple(self.assignment),
+            tuple(sorted((r.model, r.device) for r in self.replicas)),
+            tuple(tuple(sorted(d.items())) for d in self.min_qlens),
+        )

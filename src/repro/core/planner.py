@@ -1,0 +1,147 @@
+"""Gear-plan optimisation — the paper's Algorithm 1.
+
+EM-style error-driven co-optimisation: cycle through the four submodules
+(SP1 cascade search, SP2 workload adaption, SP3 hardware mapping, SP4
+batching), each optimising its subproblem against the others' fixed
+solutions. A submodule that cannot produce a feasible plan returns an error
+code, which the PREVIOUS submodule catches and resolves (backtracking
+recursively; an error surfacing before SP1 is reported to the user as
+"SLO unattainable"). Convergence: one full all-OK cycle that leaves the plan
+signature unchanged (Appendix A proves termination).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cascade import evaluate_cascade
+from repro.core.gears import Gear, GearPlan, SLO
+from repro.core.plan_state import (HardwareSpec, InfeasiblePlanError, OK,
+                                   PlanError, PlannerState)
+from repro.core.profiles import ProfileSet
+from repro.core.simulator import SimConfig
+from repro.core.submodules import SUBMODULES
+from repro.core.traces import zipf_prior
+
+
+@dataclass
+class PlannerReport:
+    plan: GearPlan
+    iterations: int
+    submodule_calls: int
+    errors_resolved: int
+    wall_seconds: float
+    call_log: List[Tuple[str, str]] = field(default_factory=list)
+
+
+def make_state(profiles: ProfileSet, hardware: HardwareSpec, slo: SLO,
+               qps_max: float, n_ranges: int = 8,
+               qps_prior: Optional[np.ndarray] = None,
+               sim_cfg: SimConfig = SimConfig(), seed: int = 0
+               ) -> PlannerState:
+    prior = qps_prior if qps_prior is not None else zipf_prior(n_ranges)
+    return PlannerState(profiles=profiles, hardware=hardware, slo=slo,
+                        qps_max=qps_max, n_ranges=n_ranges,
+                        qps_prior=np.asarray(prior, np.float64),
+                        sim_cfg=sim_cfg, rng_seed=seed)
+
+
+def optimize_gear_plan(profiles: ProfileSet, hardware: HardwareSpec,
+                       slo: SLO, qps_max: float, n_ranges: int = 8,
+                       qps_prior: Optional[np.ndarray] = None,
+                       sim_cfg: SimConfig = SimConfig(), seed: int = 0,
+                       max_calls: int = 200) -> PlannerReport:
+    """Algorithm 1. Raises InfeasiblePlanError when no plan can satisfy the
+    SLO on the given hardware."""
+    t0 = time.time()
+    state = make_state(profiles, hardware, slo, qps_max, n_ranges, qps_prior,
+                       sim_cfg, seed)
+    modules = SUBMODULES
+    names = ["SP1:search_cascades", "SP2:assign_cascades",
+             "SP3:place_models", "SP4:tune_batch_sizes"]
+
+    error: PlanError = OK
+    cur = 0
+    calls = 0
+    errors_resolved = 0
+    call_log: List[Tuple[str, str]] = []
+    last_signature = None
+    ok_streak = 0         # consecutive OK submodule calls
+
+    while True:
+        if cur == -1:
+            raise InfeasiblePlanError(
+                f"infeasible: {error.detail or error.code}")
+        if calls >= max_calls:
+            raise InfeasiblePlanError(
+                f"planner did not converge within {max_calls} submodule "
+                f"calls (last error: {error.code})")
+        module = modules[cur]
+        error, state = module(error, state)
+        calls += 1
+        call_log.append((names[cur], error.code))
+        if error.is_ok:
+            ok_streak += 1
+            cur = (cur + 1) % 4
+            # convergence: a full OK cycle with an unchanged plan signature
+            if ok_streak >= 4 and cur == 0 and state.min_qlens:
+                sig = state.signature()
+                if sig == last_signature:
+                    break
+                last_signature = sig
+        else:
+            ok_streak = 0
+            errors_resolved += 1
+            cur = cur - 1
+
+    plan = build_plan(state)
+    return PlannerReport(plan=plan, iterations=calls // 4,
+                         submodule_calls=calls,
+                         errors_resolved=errors_resolved,
+                         wall_seconds=time.time() - t0, call_log=call_log)
+
+
+def check_qps_distribution(plan_prior: np.ndarray, trace: np.ndarray,
+                           qps_max: float,
+                           threshold: float = 0.25) -> Tuple[bool, float]:
+    """App. C.2: compare the measured QPS distribution against the plan's
+    prior; returns (deviates_strongly, total_variation_distance). The
+    producer measures QPS anyway as an artifact of gear switching — when
+    the deviation is large the user is notified and may trigger
+    ``replan_with_measured``."""
+    from repro.core.traces import measured_qps_distribution
+    measured = measured_qps_distribution(trace, len(plan_prior), qps_max)
+    tv = 0.5 * float(np.abs(measured - plan_prior).sum())
+    return tv > threshold, tv
+
+
+def replan_with_measured(profiles: ProfileSet, hardware: HardwareSpec,
+                         slo: SLO, qps_max: float, trace: np.ndarray,
+                         n_ranges: int = 8, **kw) -> PlannerReport:
+    """Re-run Algorithm 1 with the measured (not Zipf-assumed) QPS
+    distribution as the prior (App. C.2)."""
+    from repro.core.traces import measured_qps_distribution
+    prior = measured_qps_distribution(trace, n_ranges, qps_max)
+    prior = np.maximum(prior, 1e-6)
+    prior = prior / prior.sum()
+    return optimize_gear_plan(profiles, hardware, slo, qps_max,
+                              n_ranges=n_ranges, qps_prior=prior, **kw)
+
+
+def build_plan(state: PlannerState) -> GearPlan:
+    gears: List[Gear] = []
+    for r in range(state.n_ranges):
+        ev = state.eval_of_range(r)
+        gears.append(Gear(
+            cascade=state.cascade_of_range(r),
+            min_queue_lens=state.min_qlens[r] if state.min_qlens else
+            {m: 1 for m in state.cascade_of_range(r).models},
+            load_fractions=state.load_fracs[r] if state.load_fracs else {},
+            expected_accuracy=ev.accuracy,
+            expected_p95=state.range_p95[r] if state.range_p95 else 0.0))
+    return GearPlan(qps_max=state.qps_max, gears=gears,
+                    replicas=state.replicas,
+                    num_devices=state.hardware.num_devices, slo=state.slo)

@@ -1,0 +1,156 @@
+"""Model profiles: everything the gear planner knows about one model.
+
+A profile is measured (tiny real models on CPU; paper §C.1 "profiles all
+models with different batch sizes") or derived from the analytical TPU-v5e
+cost model (`repro.profiling.cost_model`) for the assigned big
+architectures. It carries:
+
+* ``batch_runtimes`` — wall seconds for a forward pass at each profiled batch
+  size (per replica, on its slice); interpolated in between.
+* ``mem_bytes`` — HBM footprint of one replica (weights + workspace).
+* per-validation-sample ``certs`` / ``correct`` / ``preds`` arrays — the
+  simulator replays these to decide cascading and score accuracy (App. C).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclass
+class ValidationRecord:
+    """Per-sample behaviour of one model on the registered validation set."""
+    certs: np.ndarray          # (N,) float
+    correct: np.ndarray        # (N,) bool
+    preds: Optional[np.ndarray] = None  # (N,) int (optional)
+
+    @property
+    def accuracy(self) -> float:
+        return float(self.correct.mean())
+
+    def __post_init__(self):
+        self.certs = np.asarray(self.certs, np.float64)
+        self.correct = np.asarray(self.correct, bool)
+        assert self.certs.shape == self.correct.shape
+
+
+@dataclass
+class ModelProfile:
+    name: str
+    mem_bytes: float
+    batch_sizes: np.ndarray            # (K,) profiled batch sizes, ascending
+    batch_runtimes: np.ndarray         # (K,) seconds per *batch*
+    validation: ValidationRecord
+    # number of accelerator devices one replica occupies (TP slice size);
+    # the paper's unit is 1 GPU — on TPU a replica may span a slice.
+    devices_per_replica: int = 1
+
+    def __post_init__(self):
+        self.batch_sizes = np.asarray(self.batch_sizes, np.float64)
+        self.batch_runtimes = np.asarray(self.batch_runtimes, np.float64)
+        order = np.argsort(self.batch_sizes)
+        self.batch_sizes = self.batch_sizes[order]
+        self.batch_runtimes = self.batch_runtimes[order]
+
+    # -- runtime model ------------------------------------------------------
+    def runtime(self, batch: float) -> float:
+        """Seconds to run one batch of the given size (linear interp,
+        linear extrapolation beyond the profiled range)."""
+        bs, rt = self.batch_sizes, self.batch_runtimes
+        if batch <= bs[0]:
+            return float(rt[0] * batch / bs[0]) if bs[0] > 0 else float(rt[0])
+        if batch >= bs[-1]:
+            # extrapolate with the marginal cost of the last segment
+            if len(bs) >= 2:
+                slope = (rt[-1] - rt[-2]) / max(bs[-1] - bs[-2], 1e-9)
+            else:
+                slope = rt[-1] / bs[-1]
+            return float(rt[-1] + slope * (batch - bs[-1]))
+        return float(np.interp(batch, bs, rt))
+
+    def runtime_per_sample(self, batch: float = 1.0) -> float:
+        return self.runtime(batch) / max(batch, 1.0)
+
+    def max_throughput(self) -> float:
+        """Samples/sec at the largest profiled batch."""
+        b = self.batch_sizes[-1]
+        return float(b / self.runtime(b))
+
+    @property
+    def accuracy(self) -> float:
+        return self.validation.accuracy
+
+    def to_dict(self) -> Dict:
+        return {
+            "name": self.name,
+            "mem_bytes": self.mem_bytes,
+            "batch_sizes": self.batch_sizes.tolist(),
+            "batch_runtimes": self.batch_runtimes.tolist(),
+            "devices_per_replica": self.devices_per_replica,
+            "validation": {
+                "certs": self.validation.certs.tolist(),
+                "correct": self.validation.correct.tolist(),
+            },
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ModelProfile":
+        return cls(
+            name=d["name"], mem_bytes=d["mem_bytes"],
+            batch_sizes=np.asarray(d["batch_sizes"]),
+            batch_runtimes=np.asarray(d["batch_runtimes"]),
+            devices_per_replica=d.get("devices_per_replica", 1),
+            validation=ValidationRecord(
+                certs=np.asarray(d["validation"]["certs"]),
+                correct=np.asarray(d["validation"]["correct"], bool)))
+
+
+ProfileSet = Dict[str, ModelProfile]
+
+
+# ---------------------------------------------------------------------------
+# Synthetic-but-calibrated model families (planner benchmarks for the big
+# archs, where per-sample validation behaviour cannot be measured on CPU)
+# ---------------------------------------------------------------------------
+
+def synthetic_family(names: Sequence[str], base_runtime: float = 1e-3,
+                     runtime_ratio: float = 3.0, base_acc: float = 0.78,
+                     acc_gain: float = 0.045, n_val: int = 4096,
+                     mem_base: float = 1e9, seed: int = 0,
+                     batch_sizes: Sequence[int] = (1, 2, 4, 8, 16, 32, 64),
+                     batch_efficiency: float = 0.65,
+                     devices_per_replica: Optional[Sequence[int]] = None,
+                     ) -> ProfileSet:
+    """Family of models with the latency/accuracy structure of Fig. 1.
+
+    The validation behaviour has the *cascade-friendly* joint structure: a
+    per-sample difficulty d; model m of strength s_m is correct w.p.
+    sigmoid(k (s_m - d)) and its certainty is the (noisy) margin — so easy
+    samples are confidently handled by small models and the accuracy gain of
+    big models concentrates on hard samples (paper §2.1).
+    """
+    rng = np.random.default_rng(seed)
+    difficulty = rng.beta(1.6, 3.2, size=n_val)      # most samples easy
+    profiles: ProfileSet = {}
+    for i, name in enumerate(names):
+        strength = base_acc + acc_gain * i
+        k = 9.0
+        p_correct = 1.0 / (1.0 + np.exp(-k * (strength - difficulty)))
+        correct = rng.random(n_val) < p_correct
+        margin = np.abs(strength - difficulty)
+        certs = margin + rng.normal(0, 0.05, n_val) * (1 - margin)
+        certs = np.clip(certs, 0, None)
+        rt1 = base_runtime * (runtime_ratio ** i)
+        bs = np.asarray(batch_sizes, np.float64)
+        # sub-linear batch scaling: runtime(b) = rt1 * b**efficiency-ish
+        rts = rt1 * bs ** batch_efficiency
+        profiles[name] = ModelProfile(
+            name=name, mem_bytes=mem_base * (runtime_ratio ** i),
+            batch_sizes=bs, batch_runtimes=rts,
+            devices_per_replica=(devices_per_replica[i]
+                                 if devices_per_replica else 1),
+            validation=ValidationRecord(certs=certs, correct=correct))
+    return profiles

@@ -1,0 +1,476 @@
+"""Discrete-event serving simulator (paper Appendix C).
+
+Mirrors the online system exactly: requests arrive, the producer measures
+QPS each interval and switches gears (with the α-hysteresis of §5), samples
+queue at the first model's replicas, the consumer triggers a batch when a
+replica's queue reaches the gear's min-queue-length (or a head-of-line
+timeout fires), the device is blocked for the profiled batch runtime, and
+non-certain samples cascade to the next model at batch completion. Per-sample
+certainty/correctness replays the recorded validation behaviour
+(``ModelProfile.validation``), cycling through the validation set.
+
+Also executes *ensemble* gears (all members vote; used by the Cocktail+
+baseline) through the same machinery.
+
+One simulator core serves three callers: the gear planner (fixed-QPS
+feasibility + latency checks), plan evaluation, and the baseline policies in
+``repro.serving.baselines``.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cascade import Cascade
+from repro.core.gears import Gear, GearPlan, uniform_load_fractions
+from repro.core.lp import Replica
+from repro.core.profiles import ProfileSet
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    max_wait: float = 0.05          # head-of-line timeout (impl. necessity)
+    measure_interval: float = 0.1   # producer QPS measurement window (§5)
+    alpha: float = 8.0              # gear-downgrade hysteresis (§5)
+    max_batch: int = 512
+    seed: int = 0
+    # fixed per-batch serving overhead (queueing machinery, dispatch),
+    # calibrated against the real runtime (bench_simulator_fidelity)
+    dispatch_overhead: float = 0.0
+
+
+@dataclass
+class SimResult:
+    latencies: np.ndarray           # per completed sample, seconds
+    correct: np.ndarray             # per completed sample, bool
+    arrive_times: np.ndarray
+    complete_times: np.ndarray
+    resolver: np.ndarray            # index of resolving model in its cascade
+    completed: int
+    offered: int
+    backlog_end: int
+    device_busy: np.ndarray         # busy seconds per device
+    horizon: float
+    gear_switches: List[Tuple[float, int]] = field(default_factory=list)
+    per_model_batches: Dict[str, int] = field(default_factory=dict)
+    per_model_samples: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def accuracy(self) -> float:
+        return float(self.correct.mean()) if self.completed else 0.0
+
+    def latency_quantile(self, q: float = 0.95) -> float:
+        if not self.completed:
+            return math.inf
+        return float(np.quantile(self.latencies, q))
+
+    @property
+    def p95(self) -> float:
+        return self.latency_quantile(0.95)
+
+    @property
+    def throughput(self) -> float:
+        return self.completed / self.horizon if self.horizon else 0.0
+
+    @property
+    def stable(self) -> bool:
+        """Backlog at horizon bounded (no unbounded queue growth)."""
+        allow = max(64.0, 0.05 * self.offered)
+        return self.backlog_end <= allow and \
+            self.completed >= 0.9 * (self.offered - allow)
+
+    @property
+    def utilization(self) -> float:
+        return float(self.device_busy.mean() / self.horizon) \
+            if self.horizon else 0.0
+
+
+class _RepQ:
+    __slots__ = ("samples", "stages", "times")
+
+    def __init__(self):
+        self.samples: deque = deque()
+        self.stages: deque = deque()
+        self.times: deque = deque()
+
+    def push(self, sid: int, stage: int, t: float):
+        self.samples.append(sid)
+        self.stages.append(stage)
+        self.times.append(t)
+
+    def __len__(self):
+        return len(self.samples)
+
+
+GearSelector = Callable[[float, float, int, int], int]
+# (time, measured_qps, current_gear_idx, first_model_queue_len) -> gear idx
+
+# (time, device, kind, factor): kind in {"fail", "slow", "recover"}
+DeviceEvent = Tuple[float, int, str, float]
+
+
+class ServingSimulator:
+    def __init__(self, profiles: ProfileSet, replicas: Sequence[Replica],
+                 num_devices: int, cfg: SimConfig = SimConfig()):
+        self.profiles = profiles
+        self.replicas = list(replicas)
+        self.num_devices = num_devices
+        self.cfg = cfg
+        self._val_n = len(next(iter(profiles.values())).validation.certs)
+
+    # ------------------------------------------------------------------ API
+    def run_fixed(self, gear: Gear, qps: float, horizon: float = 2.0,
+                  warm_start_backlog: int = 0) -> SimResult:
+        """Constant-rate arrivals; the gear never changes (planner use)."""
+        n = int(qps * horizon)
+        arrivals = (np.arange(n) + 0.5) / max(qps, 1e-9)
+        if warm_start_backlog:
+            arrivals = np.concatenate(
+                [np.zeros(warm_start_backlog), arrivals])
+        return self._run(arrivals, [gear], lambda t, q, g, q0: 0,
+                         horizon=horizon)
+
+    def run_trace(self, plan: GearPlan, qps_per_sec: np.ndarray,
+                  drain: float = 2.0,
+                  device_events: Optional[List[DeviceEvent]] = None,
+                  on_failure: Optional[Callable] = None,
+                  hedge=None) -> SimResult:
+        """Replay a trace (per-second QPS) with the §5 producer policy."""
+        arrivals = trace_to_arrivals(qps_per_sec)
+        horizon = float(len(qps_per_sec)) + drain
+
+        def selector(t: float, measured_qps: float, cur: int,
+                     q0: int) -> int:
+            target = plan.gear_index_for_qps(measured_qps)
+            if target < cur and measured_qps < self.cfg.alpha * q0:
+                return cur       # backlog hysteresis: don't downgrade yet
+            return target
+
+        return self._run(arrivals, plan.gears, selector, horizon=horizon,
+                         device_events=device_events, on_failure=on_failure,
+                         hedge=hedge)
+
+    def run_policy(self, gears: List[Gear], selector: GearSelector,
+                   qps_per_sec: np.ndarray, drain: float = 2.0) -> SimResult:
+        """Custom gear list + selector (baseline policies)."""
+        arrivals = trace_to_arrivals(qps_per_sec)
+        horizon = float(len(qps_per_sec)) + drain
+        return self._run(arrivals, gears, selector, horizon=horizon)
+
+    # ----------------------------------------------------------------- core
+    def _run(self, arrivals: np.ndarray, gears: List[Gear],
+             selector: GearSelector, horizon: float,
+             device_events: Optional[List[DeviceEvent]] = None,
+             on_failure: Optional[Callable] = None,
+             hedge=None) -> SimResult:
+        cfg = self.cfg
+        profiles = self.profiles
+        replicas = self.replicas
+        n_arr = len(arrivals)
+        rng = np.random.default_rng(cfg.seed)
+        route_u = rng.random(n_arr * 4 + 16)  # routing randomness pool
+        route_ptr = 0
+
+        # per-sample records
+        arrive = np.asarray(arrivals, np.float64)
+        complete = np.full(n_arr, np.nan)
+        correct = np.zeros(n_arr, bool)
+        resolver = np.full(n_arr, -1, np.int32)
+        gear_of = np.zeros(n_arr, np.int32)
+        # duplicate-suppression for hedged/re-issued work: a sample is only
+        # processed at its current stage
+        cur_stage = np.zeros(n_arr, np.int32)
+        val_idx = np.arange(n_arr) % self._val_n
+        votes = {}           # ensemble mode: sid -> [n_remaining, n_correct_votes, n_members]
+
+        # state
+        qs: List[_RepQ] = [_RepQ() for _ in replicas]
+        dev_free = np.zeros(self.num_devices)
+        dev_busy = np.zeros(self.num_devices)
+        dev_idle = np.ones(self.num_devices, bool)
+        dev_alive = np.ones(self.num_devices, bool)
+        dev_speed = np.ones(self.num_devices)
+        dev_epoch = np.zeros(self.num_devices, np.int64)
+        gears = list(gears)
+        cur_gear = 0
+        switches: List[Tuple[float, int]] = []
+        per_model_batches: Dict[str, int] = {}
+        per_model_samples: Dict[str, int] = {}
+
+        # replica lookup per model
+        reps_of: Dict[str, List[int]] = {}
+        for i, r in enumerate(replicas):
+            reps_of.setdefault(r.model, []).append(i)
+        reps_on_dev: Dict[int, List[int]] = {}
+        for i, r in enumerate(replicas):
+            reps_on_dev.setdefault(r.device, []).append(i)
+
+        # event heap: (time, seq, kind, payload)
+        heap: List[Tuple[float, int, str, tuple]] = []
+        seq = 0
+
+        def push_event(t, kind, payload):
+            nonlocal seq
+            heapq.heappush(heap, (t, seq, kind, payload))
+            seq += 1
+
+        def route(model: str, gear: Gear) -> int:
+            nonlocal route_ptr
+            fracs = gear.load_fractions.get(model)
+            idxs = reps_of.get(model, [])
+            if not idxs:
+                raise RuntimeError(f"no replica for model {model}")
+            if not fracs:
+                u = route_u[route_ptr % len(route_u)]
+                route_ptr += 1
+                return idxs[int(u * len(idxs)) % len(idxs)]
+            u = route_u[route_ptr % len(route_u)]
+            route_ptr += 1
+            acc = 0.0
+            for ridx, f in fracs.items():
+                acc += f
+                if u <= acc + 1e-12:
+                    return ridx
+            return next(iter(fracs))
+
+        def enqueue(sid: int, stage: int, model: str, t: float, gear: Gear):
+            ridx = route(model, gear)
+            qs[ridx].push(sid, stage, t)
+            per_model_samples[model] = per_model_samples.get(model, 0) + 1
+            # head-of-line timeout for this enqueue
+            push_event(t + cfg.max_wait, "timeout", (ridx,))
+            # consumer polls on enqueue (cascaded samples must not wait for
+            # the next arrival to trigger their target device)
+            try_start(ridx, t)
+
+        def try_start(ridx: int, t: float):
+            """Start a batch on replica ridx if triggered and device idle."""
+            q = qs[ridx]
+            if not len(q):
+                return
+            r = replicas[ridx]
+            if not dev_idle[r.device] or not dev_alive[r.device]:
+                return
+            gear = gears[cur_gear]
+            b_min = gear.min_queue_lens.get(r.model, 1)
+            head_wait = t - q.times[0]
+            if len(q) < b_min and head_wait < cfg.max_wait - 1e-9:
+                return
+            bsz = min(len(q), cfg.max_batch)
+            batch = [(q.samples.popleft(), q.stages.popleft(),
+                      q.times.popleft()) for _ in range(bsz)]
+            rt = profiles[r.model].runtime(bsz) + cfg.dispatch_overhead
+            rt_actual = rt * dev_speed[r.device]
+            dev_idle[r.device] = False
+            dev_busy[r.device] += rt_actual
+            per_model_batches[r.model] = per_model_batches.get(r.model, 0) + 1
+            push_event(t + rt_actual, "complete",
+                       (ridx, batch, dev_epoch[r.device]))
+            if hedge is not None and hedge.enabled and \
+                    rt_actual > hedge.hedge_multiplier * rt:
+                # straggler: re-issue on a sibling replica after the
+                # expected runtime; duplicate completions are suppressed
+                # by the per-sample stage guard
+                push_event(t + rt * hedge.hedge_multiplier, "hedge",
+                           (ridx, batch))
+
+        def finish_sample(sid: int, stage: int, t: float, is_correct: bool):
+            complete[sid] = t
+            correct[sid] = is_correct
+            resolver[sid] = stage
+            cur_stage[sid] = 1 << 30
+
+        def on_complete(ridx: int, batch, t: float):
+            r = replicas[ridx]
+            rec = profiles[r.model].validation
+            for sid, stage, _ in batch:
+                if cur_stage[sid] != stage:
+                    continue  # hedged duplicate / stale work
+                g = gears[gear_of[sid]]
+                vi = val_idx[sid]
+                if getattr(g, "mode", "cascade") == "ensemble":
+                    st = votes[sid]
+                    st[0] -= 1
+                    st[1] += int(rec.correct[vi])
+                    if st[0] == 0:
+                        finish_sample(sid, stage, t,
+                                      st[1] * 2 > st[2])
+                    continue
+                casc = g.cascade
+                if stage < len(casc.thresholds) and \
+                        rec.certs[vi] < casc.thresholds[stage]:
+                    nxt = casc.models[stage + 1]
+                    cur_stage[sid] = stage + 1
+                    enqueue(sid, stage + 1, nxt, t, g)
+                else:
+                    finish_sample(sid, stage, t, bool(rec.correct[vi]))
+            if dev_alive[r.device]:
+                dev_idle[r.device] = True
+                for rj in reps_on_dev.get(r.device, []):
+                    try_start(rj, t)
+                    if not dev_idle[r.device]:
+                        break
+
+        def sibling_replica(ridx: int) -> Optional[int]:
+            model = replicas[ridx].model
+            best, best_q = None, None
+            for rj in reps_of.get(model, []):
+                if rj == ridx or not dev_alive[replicas[rj].device]:
+                    continue
+                if best is None or len(qs[rj]) < best_q:
+                    best, best_q = rj, len(qs[rj])
+            return best
+
+        def on_device_event(t: float, dev: int, kind: str, factor: float):
+            nonlocal gears
+            if kind == "slow":
+                dev_speed[dev] = factor
+                return
+            if kind == "recover":
+                dev_speed[dev] = 1.0
+                if not dev_alive[dev]:
+                    dev_alive[dev] = True
+                    dev_idle[dev] = True
+                return
+            # fail: kill the device, invalidate its in-flight batch, move
+            # queued samples to sibling replicas
+            dev_alive[dev] = False
+            dev_idle[dev] = False
+            dev_epoch[dev] += 1
+            for rj in reps_on_dev.get(dev, []):
+                q = qs[rj]
+                moved = [(q.samples.popleft(), q.stages.popleft(),
+                          q.times.popleft()) for _ in range(len(q))]
+                alt = sibling_replica(rj)
+                for sid, stage, _t0 in moved:
+                    if alt is not None:
+                        qs[alt].push(sid, stage, t)
+                        push_event(t + cfg.max_wait, "timeout", (alt,))
+            if on_failure is not None:
+                new_gears = on_failure(t, dev)
+                if new_gears is not None:
+                    gears = list(new_gears)
+
+        # scheduled device events (failures / stragglers)
+        for ev_t, ev_d, ev_kind, ev_f in (device_events or []):
+            push_event(ev_t, "devevent", (ev_d, ev_kind, ev_f))
+
+        # producer QPS measurement
+        meas_end = cfg.measure_interval
+        meas_count = 0
+
+        arr_ptr = 0
+        inf = math.inf
+        while True:
+            t_arr = arrive[arr_ptr] if arr_ptr < n_arr else inf
+            t_evt = heap[0][0] if heap else inf
+            t = min(t_arr, t_evt, meas_end)
+            if t > horizon or t == inf:
+                break
+            if t == meas_end and t < min(t_arr, t_evt):
+                measured = meas_count / cfg.measure_interval
+                first_q = 0
+                g = gears[cur_gear]
+                m0 = g.cascade.models[0]
+                for ridx in reps_of.get(m0, []):
+                    first_q += len(qs[ridx])
+                new_gear = selector(t, measured, cur_gear, first_q)
+                new_gear = int(np.clip(new_gear, 0, len(gears) - 1))
+                if new_gear != cur_gear:
+                    switches.append((t, new_gear))
+                    cur_gear = new_gear
+                meas_count = 0
+                meas_end += cfg.measure_interval
+                continue
+            if t_arr <= t_evt:
+                sid = arr_ptr
+                arr_ptr += 1
+                meas_count += 1
+                g = gears[cur_gear]
+                gear_of[sid] = cur_gear
+                if getattr(g, "mode", "cascade") == "ensemble":
+                    members = g.cascade.models
+                    votes[sid] = [len(members), 0, len(members)]
+                    for m in members:
+                        enqueue(sid, 0, m, t_arr, g)
+                else:
+                    enqueue(sid, 0, g.cascade.models[0], t_arr, g)
+                ridx_hint = None
+                for d in range(self.num_devices):
+                    if dev_idle[d]:
+                        for rj in reps_on_dev.get(d, []):
+                            try_start(rj, t_arr)
+            else:
+                _, _, kind, payload = heapq.heappop(heap)
+                if kind == "complete":
+                    ridx, batch, epoch = payload
+                    if epoch != dev_epoch[replicas[ridx].device]:
+                        # device died mid-batch: re-issue surviving work
+                        alt = sibling_replica(ridx)
+                        for sid, stage, _t0 in batch:
+                            if alt is not None and cur_stage[sid] == stage:
+                                qs[alt].push(sid, stage, t_evt)
+                                push_event(t_evt + cfg.max_wait, "timeout",
+                                           (alt,))
+                    else:
+                        on_complete(ridx, batch, t_evt)
+                elif kind == "timeout":
+                    try_start(payload[0], t_evt)
+                elif kind == "hedge":
+                    ridx, batch = payload
+                    alt = sibling_replica(ridx)
+                    if alt is not None:
+                        pushed = False
+                        for sid, stage, _t0 in batch:
+                            if cur_stage[sid] == stage:
+                                qs[alt].push(sid, stage, t_evt)
+                                pushed = True
+                        if pushed:
+                            push_event(t_evt, "timeout", (alt,))
+                elif kind == "devevent":
+                    on_device_event(t_evt, *payload)
+
+        done = ~np.isnan(complete)
+        backlog = int(n_arr - done.sum())
+        return SimResult(
+            latencies=(complete[done] - arrive[done]),
+            correct=correct[done],
+            arrive_times=arrive[done],
+            complete_times=complete[done],
+            resolver=resolver[done],
+            completed=int(done.sum()),
+            offered=n_arr,
+            backlog_end=backlog,
+            device_busy=dev_busy,
+            horizon=horizon,
+            gear_switches=switches,
+            per_model_batches=per_model_batches,
+            per_model_samples=per_model_samples)
+
+
+def trace_to_arrivals(qps_per_sec: np.ndarray) -> np.ndarray:
+    """Deterministic evenly-spaced arrivals within each 1-second bucket."""
+    out = []
+    for s, q in enumerate(np.asarray(qps_per_sec)):
+        k = int(round(q))
+        if k > 0:
+            out.append(s + (np.arange(k) + 0.5) / k)
+    return np.concatenate(out) if out else np.zeros(0)
+
+
+def make_gear(cascade: Cascade, replicas: Sequence[Replica],
+              min_queue_lens: Optional[Dict[str, int]] = None,
+              load_fractions=None, mode: str = "cascade") -> Gear:
+    """Convenience constructor with uniform defaults."""
+    mq = {m: 1 for m in cascade.models}
+    if min_queue_lens:
+        mq.update(min_queue_lens)
+    lf = load_fractions or uniform_load_fractions(replicas, cascade.models)
+    g = Gear(cascade=cascade, min_queue_lens=mq, load_fractions=lf)
+    g.mode = mode  # type: ignore[attr-defined]
+    return g

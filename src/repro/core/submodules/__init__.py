@@ -1,0 +1,10 @@
+from repro.core.submodules.cascade_search import search_cascades
+from repro.core.submodules.workload_adaption import assign_cascades
+from repro.core.submodules.hardware_mapping import place_models
+from repro.core.submodules.batching import tune_batch_sizes
+
+SUBMODULES = [search_cascades, assign_cascades, place_models,
+              tune_batch_sizes]
+
+__all__ = ["search_cascades", "assign_cascades", "place_models",
+           "tune_batch_sizes", "SUBMODULES"]

@@ -1,0 +1,87 @@
+"""SP4 — dynamic batching (paper §4.5): tune min-queue-lengths per QPS range.
+
+For each range: start with min queue length 1 on the FIRST model of the
+cascade (cascaded samples arrive at later models in batch-sized chunks, so
+the first model's trigger size drives the whole cascade's batching), simulate
+at the range's upper-bound QPS, and increase the trigger while throughput is
+insufficient. Error (to SP3) when growth stops helping, latency blows the
+SLO, or the trigger exceeds the cap — naming the bottleneck model.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+from repro.core.gears import Gear
+from repro.core.plan_state import OK, PlanError, PlannerState
+from repro.core.simulator import ServingSimulator
+from repro.core.submodules.hardware_mapping import _bottleneck_model
+
+MAX_MIN_QUEUE = 128
+
+
+def _simulate_range(state: PlannerState, sim: ServingSimulator, r: int,
+                    min_qlens: Dict[str, int]):
+    casc = state.cascade_of_range(r)
+    gear = Gear(cascade=casc, min_queue_lens=min_qlens,
+                load_fractions=state.load_fracs[r])
+    qps = state.range_hi(r)
+    horizon = state.sim_horizon
+    if qps * horizon < 64:  # low ranges: simulate enough samples
+        horizon = min(30.0, 64.0 / max(qps, 1.0))
+    # warm backlog: the gear inherits queued work when the producer
+    # upshifts mid-spike; a feasible gear must digest it within the SLO
+    backlog = int(0.25 * qps)
+    return sim.run_fixed(gear, qps=qps, horizon=horizon,
+                         warm_start_backlog=backlog)
+
+
+def tune_batch_sizes(error: PlanError, state: PlannerState
+                     ) -> Tuple[PlanError, PlannerState]:
+    sim = ServingSimulator(state.profiles, state.replicas,
+                           state.hardware.num_devices, state.sim_cfg)
+    lat_cap = state.slo.latency_p95 if state.slo.kind == "latency" else None
+
+    min_qlens_all, p95_all, stable_all = [], [], []
+    for r in range(state.n_ranges):
+        casc = state.cascade_of_range(r)
+        mq = {m: 1 for m in casc.models}
+        first = casc.models[0]
+        best = None
+        while True:
+            res = _simulate_range(state, sim, r, dict(mq))
+            if res.stable:
+                best = (dict(mq), res)
+                break
+            if mq[first] >= MAX_MIN_QUEUE:
+                break
+            # larger trigger on the first model -> larger batches everywhere
+            mq[first] = min(MAX_MIN_QUEUE,
+                            max(mq[first] + 1, int(mq[first] * 1.5)))
+        if best is None:
+            return PlanError(
+                "throughput", qps_range=r,
+                model=_bottleneck_model(state, r, state.replicas),
+                detail=f"range {r} unstable even at min queue "
+                       f"{MAX_MIN_QUEUE}"), state
+        mq, res = best
+        if lat_cap is not None and res.p95 > lat_cap:
+            return PlanError(
+                "latency", qps_range=r,
+                model=_slowest_model(state, r),
+                detail=f"range {r}: p95 {res.p95 * 1e3:.0f}ms > SLO "
+                       f"{lat_cap * 1e3:.0f}ms"), state
+        min_qlens_all.append(mq)
+        p95_all.append(res.p95)
+        stable_all.append(res.stable)
+
+    state.min_qlens = min_qlens_all
+    state.range_p95 = p95_all
+    state.range_stable = stable_all
+    return OK, state
+
+
+def _slowest_model(state: PlannerState, r: int) -> str:
+    casc = state.cascade_of_range(r)
+    return max(casc.models,
+               key=lambda m: state.profiles[m].runtime_per_sample(1.0))

@@ -1,0 +1,225 @@
+"""SP3 — hardware mapping (paper §4.4): model placement + load balancing.
+
+Start from maximum replication (every used model on every device), then
+greedily prune replicas until every device's memory fits. Pruning utility
+combines the over-allocated memory a prune frees with the replica's
+importance for load balancing (LP min-utilisation without the replica):
+
+    util(r) = freed_overallocated_memory(r) / u_max(r)
+
+NOTE: the paper prints Eq. 4's numerator as max(0, m_over - m_freed), which
+is degenerate (pruning that frees MORE memory would score LOWER, and the
+"no utility > 0" infeasibility test would fire exactly when one prune fixes
+everything). We implement the stated intent — "how much overallocated memory
+is freed by pruning it" — see DESIGN.md §Deviations.
+
+Implementation notes (performance + robustness, semantics preserved):
+* During pruning, u_max(r) is evaluated with ONE LP on the worst-case
+  per-model QPS over all ranges (instead of one LP per range); the exact
+  per-range LPs still produce the final load balance.
+* Greedy pruning can dead-end (every replica on an over-full device is the
+  last of its model). The paper errors out here; we first attempt an
+  additive repair — first-fit-decreasing seed of one replica per model, then
+  greedy replica additions that lower worst-case utilisation — and only
+  error if even one-replica-each cannot be packed.
+
+util(r) = -inf when r is the last replica of a model any gear needs (or the
+load balancer becomes infeasible without it). An incoming SP4 error names a
+bottleneck model m -> force an extra replica of m (min-replica constraint)
+and rebuild. If the constraint cannot be met, the error propagates to SP2.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.gears import fractions_from_lp
+from repro.core.lp import Replica, min_utilization_lp
+from repro.core.plan_state import OK, PlanError, PlannerState
+
+
+def _qps_per_model(state: PlannerState, r: int) -> Dict[str, float]:
+    ev = state.eval_of_range(r)
+    casc = state.cascade_of_range(r)
+    qps = state.range_hi(r)
+    return {m: f * qps for m, f in zip(casc.models, ev.fractions)}
+
+
+def _worst_case_qps(state: PlannerState) -> Dict[str, float]:
+    """Per-model max QPS over all ranges (collapses the pruning LPs)."""
+    out: Dict[str, float] = {}
+    for r in range(state.n_ranges):
+        for m, q in _qps_per_model(state, r).items():
+            out[m] = max(out.get(m, 0.0), q)
+    return out
+
+
+def _replica_obj(state: PlannerState, model: str, device: int) -> Replica:
+    # Eq. 3's runtime(r) at the *efficient* batch size, not batch 1: the LP
+    # must make the optimistic decision (paper §4.1 — a cascade that is
+    # infeasible at batch 1 may become feasible after SP4 raises batch
+    # sizes; rejecting it here would "miss out on an effective cascade").
+    # SP4's simulation is the binding throughput check.
+    prof = state.profiles[model]
+    b = prof.batch_sizes[-1]
+    return Replica(model, device, prof.runtime(b) / b)
+
+
+def _mem_per_device(state: PlannerState, replicas: List[Replica]
+                    ) -> np.ndarray:
+    mem = np.zeros(state.hardware.num_devices)
+    for rep in replicas:
+        mem[rep.device] += state.profiles[rep.model].mem_bytes
+    return mem
+
+
+def _counts(replicas: List[Replica]) -> Dict[str, int]:
+    c: Dict[str, int] = {}
+    for rep in replicas:
+        c[rep.model] = c.get(rep.model, 0) + 1
+    return c
+
+
+def _prune_placement(state: PlannerState, replicas: List[Replica],
+                     wc_qps: Dict[str, float]) -> Optional[List[Replica]]:
+    """Greedy Eq.-4 pruning; None on dead-end."""
+    hw = state.hardware
+    replicas = list(replicas)
+    while True:
+        mem = _mem_per_device(state, replicas)
+        over = np.maximum(mem - hw.mem_per_device, 0.0)
+        if not over.any():
+            return replicas
+        cnt = _counts(replicas)
+        best_util, best_idx = -math.inf, -1
+        for i, rep in enumerate(replicas):
+            if over[rep.device] <= 0:
+                continue
+            if cnt[rep.model] <= state.min_replicas.get(rep.model, 1):
+                continue  # util = -inf: last / protected replica
+            freed = min(over[rep.device],
+                        state.profiles[rep.model].mem_bytes)
+            cand = replicas[:i] + replicas[i + 1:]
+            u_max, _ = min_utilization_lp(cand, wc_qps, hw.num_devices)
+            if u_max is None:
+                continue  # util = -inf: LP infeasible without it
+            util = freed / max(u_max, 1e-6)
+            if util > best_util:
+                best_util, best_idx = util, i
+        if best_idx < 0:
+            return None
+        replicas.pop(best_idx)
+
+
+def _additive_repair(state: PlannerState, used: List[str],
+                     wc_qps: Dict[str, float]) -> Optional[List[Replica]]:
+    """FFD seed (one replica per model, honouring min_replicas) + greedy
+    additions that reduce worst-case utilisation."""
+    hw = state.hardware
+    free = np.full(hw.num_devices, hw.mem_per_device)
+    replicas: List[Replica] = []
+    need = []
+    for m in used:
+        need += [m] * state.min_replicas.get(m, 1)
+    for m in sorted(need, key=lambda m: -state.profiles[m].mem_bytes):
+        d = int(np.argmax(free))
+        if free[d] < state.profiles[m].mem_bytes:
+            return None  # not even one replica per model fits
+        free[d] -= state.profiles[m].mem_bytes
+        replicas.append(_replica_obj(state, m, d))
+
+    u_cur, _ = min_utilization_lp(replicas, wc_qps, hw.num_devices)
+    if u_cur is None:
+        u_cur = math.inf
+    while True:
+        best = None
+        for m in used:
+            mem = state.profiles[m].mem_bytes
+            for d in range(hw.num_devices):
+                if free[d] < mem:
+                    continue
+                if any(r.model == m and r.device == d for r in replicas):
+                    continue
+                cand = replicas + [_replica_obj(state, m, d)]
+                u, _ = min_utilization_lp(cand, wc_qps, hw.num_devices)
+                if u is not None and u < u_cur - 1e-4:
+                    if best is None or u < best[0]:
+                        best = (u, m, d)
+        if best is None:
+            return replicas
+        u_cur, m, d = best
+        free[d] -= state.profiles[m].mem_bytes
+        replicas.append(_replica_obj(state, m, d))
+
+
+def place_models(error: PlanError, state: PlannerState
+                 ) -> Tuple[PlanError, PlannerState]:
+    hw = state.hardware
+    used = state.models_used()
+
+    if not error.is_ok:
+        # SP4 bottleneck: demand one more replica of the named model
+        m = error.model
+        if m is None or state.min_replicas.get(m, 1) >= hw.num_devices:
+            return PlanError("throughput", qps_range=error.qps_range,
+                             model=m,
+                             detail=f"cannot add further replicas of {m} "
+                                    f"({hw.num_devices} devices)"), state
+        state.min_replicas[m] = state.min_replicas.get(m, 1) + 1
+
+    wc_qps = _worst_case_qps(state)
+    replicas = _prune_placement(
+        state,
+        [_replica_obj(state, m, d)
+         for m in used for d in range(hw.num_devices)],
+        wc_qps)
+    if replicas is None:
+        replicas = _additive_repair(state, used, wc_qps)
+    if replicas is None:
+        # not even one replica per used model fits -> blame the range using
+        # the biggest model where accuracy loss costs least (prior weight)
+        big = max(used, key=lambda m: state.profiles[m].mem_bytes)
+        ranges = [r for r in range(state.n_ranges)
+                  if big in state.cascade_of_range(r).models]
+        r_blame = min(ranges, key=lambda r: state.qps_prior[r]) \
+            if ranges else state.n_ranges - 1
+        return PlanError(
+            "placement", qps_range=r_blame, model=big,
+            detail=f"cannot pack one replica per model "
+                   f"({[m for m in used]})"), state
+
+    # ---- per-range load balancing -------------------------------------------
+    load_fracs, utils = [], []
+    for r in range(state.n_ranges):
+        u, q = min_utilization_lp(replicas, _qps_per_model(state, r),
+                                  hw.num_devices)
+        if u is None:
+            return PlanError(
+                "throughput", qps_range=r,
+                model=_bottleneck_model(state, r, replicas),
+                detail=f"load balancer infeasible at range {r} "
+                       f"(qps {state.range_hi(r):.0f})"), state
+        load_fracs.append(fractions_from_lp(
+            q, replicas, state.cascade_of_range(r).models))
+        utils.append(u)
+
+    state.replicas = replicas
+    state.load_fracs = load_fracs
+    state.util = utils
+    return OK, state
+
+
+def _bottleneck_model(state: PlannerState, r: int,
+                      replicas: List[Replica]) -> str:
+    """Model whose replica set has the least headroom for this range."""
+    need = _qps_per_model(state, r)
+    worst, worst_m = -math.inf, None
+    for m, q in need.items():
+        reps = [rep for rep in replicas if rep.model == m]
+        cap = sum(1.0 / rep.runtime_per_sample for rep in reps) or 1e-9
+        pressure = q / cap
+        if pressure > worst:
+            worst, worst_m = pressure, m
+    return worst_m or next(iter(need))

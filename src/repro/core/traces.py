@@ -1,0 +1,85 @@
+"""Workload traces and QPS priors.
+
+The paper evaluates on (i) a Twitter-timestamp-derived diurnal trace (BERT
+workload) and (ii) an Azure-Functions invocation trace (Llama workload), both
+scaled to a target peak QPS, plus a simplified spiky trace for the
+degradation study (Figs. 8/9). We generate statistically matched synthetic
+equivalents (bursty log-normal base + diurnal modulation + Pareto spikes),
+seeded and deterministic. The planner's default QPS prior is Zipfian over
+QPS ranges (App. C.2).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+def zipf_prior(n_ranges: int, s: float = 1.5) -> np.ndarray:
+    """Weight of each QPS range (range 0 = lowest QPS = most frequent)."""
+    w = 1.0 / np.arange(1, n_ranges + 1, dtype=np.float64) ** s
+    return w / w.sum()
+
+
+def scale_to_peak(qps: np.ndarray, peak: float) -> np.ndarray:
+    qps = np.asarray(qps, np.float64)
+    return qps * (peak / max(qps.max(), 1e-9))
+
+
+def azure_like_trace(seconds: int = 1200, peak_qps: float = 60.0,
+                     seed: int = 0) -> np.ndarray:
+    """Bursty serverless-style trace: log-normal base load with Pareto
+    spikes and second-scale burstiness (cf. Shahrad et al. 2020)."""
+    rng = np.random.default_rng(seed)
+    t = np.arange(seconds, dtype=np.float64)
+    base = np.exp(rng.normal(0.0, 0.45, seconds)).cumsum()
+    base = np.exp(np.sin(2 * np.pi * t / 600.0) * 0.5)  # slow oscillation
+    noise = np.exp(rng.normal(0, 0.35, seconds))
+    spikes = np.zeros(seconds)
+    n_spikes = max(3, seconds // 240)
+    for _ in range(n_spikes):
+        start = rng.integers(0, max(seconds - 30, 1))
+        dur = int(rng.pareto(1.5) * 5) + 5
+        spikes[start:start + dur] += rng.pareto(1.2) + 1.5
+    qps = base * noise * (1.0 + spikes)
+    qps = np.convolve(qps, np.ones(3) / 3, mode="same")  # light smoothing
+    return scale_to_peak(qps, peak_qps)
+
+
+def diurnal_like_trace(seconds: int = 1200, peak_qps: float = 7600.0,
+                       seed: int = 1) -> np.ndarray:
+    """Twitter-style trace: diurnal curve compressed into the window plus
+    heavy-tailed minute-scale bursts."""
+    rng = np.random.default_rng(seed)
+    t = np.arange(seconds, dtype=np.float64)
+    diurnal = 0.55 + 0.45 * np.sin(2 * np.pi * t / seconds - np.pi / 2)
+    bursts = np.ones(seconds)
+    for _ in range(max(4, seconds // 180)):
+        start = rng.integers(0, max(seconds - 20, 1))
+        dur = int(rng.pareto(1.8) * 8) + 4
+        bursts[start:start + dur] *= 1.0 + rng.pareto(1.4)
+    noise = np.exp(rng.normal(0, 0.25, seconds))
+    return scale_to_peak(diurnal * bursts * noise, peak_qps)
+
+
+def spiky_trace(seconds: int = 120, base_qps: float = 400.0,
+                spike_qps: float = 4000.0, spike_at: Optional[list] = None,
+                spike_len: int = 10) -> np.ndarray:
+    """Simplified step trace for the degradation study (Figs. 8/9):
+    flat base load with rectangular spikes."""
+    qps = np.full(seconds, base_qps, np.float64)
+    spike_at = spike_at if spike_at is not None else [seconds // 3,
+                                                      2 * seconds // 3]
+    for i, s in enumerate(spike_at):
+        amp = spike_qps * (0.6 if i == 0 else 1.0)
+        qps[s:s + spike_len] = amp
+    return qps
+
+
+def measured_qps_distribution(trace: np.ndarray, n_ranges: int,
+                              qps_max: float) -> np.ndarray:
+    """Empirical time-in-range distribution of a trace (used to re-plan when
+    the Zipf assumption deviates; App. C.2)."""
+    width = qps_max / n_ranges
+    idx = np.clip((np.asarray(trace) / width).astype(int), 0, n_ranges - 1)
+    return np.bincount(idx, minlength=n_ranges) / len(trace)

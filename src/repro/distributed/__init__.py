@@ -1,0 +1,4 @@
+from repro.distributed.context import (DistContext, get_context, use_context)
+from repro.distributed import sharding  # noqa: F401
+
+__all__ = ["DistContext", "get_context", "use_context", "sharding"]

@@ -1,0 +1,61 @@
+"""Distribution context: which mesh / axis names the model code should target.
+
+Model code is written once and consults the ambient ``DistContext`` for
+decisions that cannot be expressed through sharding constraints alone (the
+expert-parallel ``shard_map`` block in ``models/moe.py``). Launchers set the
+context; smoke tests run without one (single-shard code paths).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+
+
+@dataclass(frozen=True)
+class DistContext:
+    mesh: Optional[jax.sharding.Mesh]
+    # Axes over which the global batch is sharded, e.g. ('pod', 'data') on the
+    # multi-pod mesh or ('data',) on one pod.
+    batch_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    # Expert parallelism runs over the innermost batch axis (never 'pod', so
+    # the MoE all_to_all stays on ICI).
+    use_ep: bool = True
+    # Sharded flash-decoding: keep the KV cache sequence-sharded over the
+    # model axis and combine partial softmaxes with one log-sum-exp
+    # reduction (EXPERIMENTS.md §Perf H2). Off = baseline GSPMD lowering.
+    flash_decode: bool = False
+
+    @property
+    def ep_axis(self) -> str:
+        return self.batch_axes[-1]
+
+    @property
+    def num_devices(self) -> int:
+        return self.mesh.size if self.mesh is not None else 1
+
+    def axis_size(self, name: str) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape[name]
+
+
+_local = threading.local()
+
+
+def get_context() -> Optional[DistContext]:
+    return getattr(_local, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_context(ctx: Optional[DistContext]):
+    prev = get_context()
+    _local.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _local.ctx = prev

@@ -1,0 +1,132 @@
+"""Fault tolerance and elasticity for the serving plane.
+
+The gear plan's fixed placement makes failure handling cheap and local:
+
+* ``rebalance_on_failure`` — an inference-server slice dies: drop its
+  replicas and re-solve ONLY the SP3 load-balancing LP per QPS range (Eq.
+  1-3) over the survivors. Gears whose cascade lost its last replica of some
+  model are remapped to the nearest feasible gear. Milliseconds, no model
+  loading — a new slice later just re-enters through the same path.
+
+* ``elastic_replan`` — capacity changed (grow/shrink): keep SP1's cascade
+  set and SP2's assignment, re-run SP3 (placement) + SP4 (batching) to
+  convergence on the new hardware. Much cheaper than a cold Algorithm-1 run
+  (benchmarked in bench_fault_tolerance).
+
+* ``HedgePolicy`` — straggler mitigation: a batch is re-issued on the
+  fastest sibling replica if its primary exceeds ``hedge_multiplier`` x the
+  profiled runtime; first completion wins. Used by the simulator
+  (device slow-down events) and the online runtime.
+
+Training-plane fault tolerance is checkpoint/restart
+(``repro.checkpoint``) + the launcher's resume path (train.py).
+"""
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.gears import Gear, GearPlan, fractions_from_lp
+from repro.core.lp import Replica, min_utilization_lp
+from repro.core.plan_state import HardwareSpec, PlannerState
+from repro.core.profiles import ProfileSet
+
+
+@dataclass(frozen=True)
+class HedgePolicy:
+    enabled: bool = True
+    hedge_multiplier: float = 3.0   # re-issue after this x profiled runtime
+    max_hedges_per_batch: int = 1
+
+
+def rebalance_on_failure(plan: GearPlan, profiles: ProfileSet,
+                         failed_devices: Set[int],
+                         qps_prior: Optional[np.ndarray] = None) -> GearPlan:
+    """Return a new plan routing only to surviving replicas.
+
+    Replica indices are STABLE (the online system keys queues by replica
+    index): the replica list is kept as-is and only the per-gear load
+    fractions are re-solved over the survivors.
+    """
+    survivors: List[Replica] = []
+    surv_orig_idx: List[int] = []
+    for i, r in enumerate(plan.replicas):
+        if r.device not in failed_devices:
+            surv_orig_idx.append(i)
+            survivors.append(r)
+    alive_models = {r.model for r in survivors}
+
+    # gears that remain runnable, in accuracy order, for remapping
+    runnable: List[Tuple[int, Gear]] = []
+    for gi, g in enumerate(plan.gears):
+        if all(m in alive_models for m in g.cascade.models):
+            runnable.append((gi, g))
+    if not runnable:
+        raise RuntimeError("no gear survives the failure; full replan needed")
+
+    new_gears: List[Gear] = []
+    width = plan.range_width
+    for gi, g in enumerate(plan.gears):
+        if all(m in alive_models for m in g.cascade.models):
+            src = g
+        else:
+            # nearest runnable gear (prefer higher-throughput = higher index)
+            src = min(runnable, key=lambda it: abs(it[0] - gi)
+                      + (0.25 if it[0] < gi else 0.0))[1]
+        qps = width * (gi + 1)
+        from repro.core.cascade import evaluate_cascade
+        ev = evaluate_cascade(src.cascade, profiles)
+        qpm = {m: f * qps for m, f in zip(src.cascade.models, ev.fractions)}
+        u, q = min_utilization_lp(survivors, qpm, plan.num_devices)
+        if q is None:
+            # over capacity after failure: keep routing, uniform over alive
+            lf_local = {
+                m: {i: 1.0 / len([r for r in survivors if r.model == m])
+                    for i, r in enumerate(survivors) if r.model == m}
+                for m in src.cascade.models}
+        else:
+            lf_local = fractions_from_lp(q, survivors, src.cascade.models)
+        # remap survivor-local indices -> original replica indices
+        lf = {m: {surv_orig_idx[i]: f for i, f in sub.items()}
+              for m, sub in lf_local.items()}
+        new_gears.append(Gear(
+            cascade=src.cascade,
+            min_queue_lens=dict(src.min_queue_lens),
+            load_fractions=lf,
+            expected_accuracy=src.expected_accuracy,
+            expected_p95=src.expected_p95))
+    return GearPlan(qps_max=plan.qps_max, gears=new_gears,
+                    replicas=list(plan.replicas),
+                    num_devices=plan.num_devices, slo=plan.slo)
+
+
+def elastic_replan(state: PlannerState, new_num_devices: int
+                   ) -> PlannerState:
+    """Re-run SP3+SP4 only, on changed capacity (SP1/SP2 outputs kept)."""
+    from repro.core.plan_state import OK
+    from repro.core.submodules.batching import tune_batch_sizes
+    from repro.core.submodules.hardware_mapping import place_models
+    from repro.core.submodules.workload_adaption import assign_cascades
+
+    state = copy.deepcopy(state)
+    state.hardware = HardwareSpec(
+        num_devices=new_num_devices,
+        mem_per_device=state.hardware.mem_per_device,
+        chips_per_device=state.hardware.chips_per_device)
+    state.min_replicas = {}
+    error = OK
+    for _ in range(32):
+        error, state = place_models(error, state)
+        if not error.is_ok:
+            # shrink may demand downgrades: let SP2 resolve, then retry
+            error, state = assign_cascades(error, state)
+            if not error.is_ok:
+                raise RuntimeError(f"elastic replan failed: {error.detail}")
+            continue
+        error, state = tune_batch_sizes(error, state)
+        if error.is_ok:
+            return state
+    raise RuntimeError("elastic replan did not converge")

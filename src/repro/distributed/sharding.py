@@ -1,0 +1,246 @@
+"""Logical-axis sharding rules (MaxText-style, self-contained).
+
+Tensors carry *logical* axis names; the rules below map them onto the mesh
+axes of the active :class:`DistContext`. Two resolvable markers:
+
+* ``"fsdp"`` — the data axes in train mode (ZeRO-3 weight sharding), nothing
+  in serve mode (weights replicated across data-parallel serving replicas).
+* ``"ep"``   — the expert-parallel axis (innermost data axis; never 'pod').
+
+Parameter specs are derived from the parameter pytree *paths* (leaf names are
+stable across architectures), with rules written on **trailing** dims so the
+same rule covers a plain leaf and its scan-stacked counterpart (leading layer
+dim is always unsharded).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.context import DistContext, get_context
+
+# ---------------------------------------------------------------------------
+# Logical axis resolution
+# ---------------------------------------------------------------------------
+
+_MODEL_AXES = ("vocab", "ffn", "heads", "kv_heads", "d_inner", "model")
+
+
+def resolve_axis(name: Optional[str], ctx: DistContext, mode: str):
+    if name is None:
+        return None
+    if name == "batch":
+        return ctx.batch_axes if len(ctx.batch_axes) > 1 else ctx.batch_axes[0]
+    if name in _MODEL_AXES:
+        return ctx.model_axis
+    if name == "ep":
+        return ctx.ep_axis
+    if name == "fsdp":
+        return ctx.ep_axis if mode == "train" else None
+    if name == "kv_seq":  # cache sequence dim (flash-decoding sharding)
+        return ctx.model_axis
+    if name == "seq":  # sequence parallelism (activation seq over model)
+        return ctx.model_axis
+    raise ValueError(f"unknown logical axis {name!r}")
+
+
+def logical_pspec(axes: Sequence[Optional[str]], ctx: DistContext,
+                  mode: str = "train") -> P:
+    return P(*[resolve_axis(a, ctx, mode) for a in axes])
+
+
+def constrain(x: jax.Array, *axes: Optional[str], mode: str = "train"
+              ) -> jax.Array:
+    """with_sharding_constraint against the ambient context (no-op without)."""
+    ctx = get_context()
+    if ctx is None or ctx.mesh is None:
+        return x
+    spec = logical_pspec(axes, ctx, mode)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition rules
+# ---------------------------------------------------------------------------
+# leaf-name -> logical axes of the TRAILING dims. A leading scan/layer dim
+# (and any other unlisted leading dims) is unsharded.
+
+_PARAM_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    # embeddings / head
+    "embedding": ("vocab", "fsdp"),
+    "lm_head": ("fsdp", "vocab"),
+    # attention
+    "wq": ("fsdp", "heads"),
+    "wk": ("fsdp", "heads"),
+    "wv": ("fsdp", "heads"),
+    "wo": ("heads", "fsdp"),
+    "bq": ("heads",),
+    "bk": ("heads",),
+    "bv": ("heads",),
+    "q_norm_scale": (None,),
+    "k_norm_scale": (None,),
+    # dense / shared-expert FFN
+    "w_gate": ("fsdp", "ffn"),
+    "w_up": ("fsdp", "ffn"),
+    "w_down": ("ffn", "fsdp"),
+    "gate": (None, None),
+    # mamba
+    "in_proj": ("fsdp", "d_inner"),
+    "out_proj": ("d_inner", "fsdp"),
+    "conv_w": (None, "d_inner"),
+    "conv_b": ("d_inner",),
+    "x_proj": ("d_inner", None),
+    "dt_proj_w": (None, "d_inner"),
+    "dt_proj_b": ("d_inner",),
+    "A_log": ("d_inner", None),
+    "D": ("d_inner",),
+    # norms / misc
+    "scale": (None,),
+    "bias": (None,),
+    "router": (None, None),
+    "frontend_proj": (None, "fsdp"),
+}
+
+# routed-expert overrides (leaf sits under a "moe" key); trailing (E, D, F)
+_EXPERT_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    # the expert axis *is* the data axis (EP = the FSDP dimension for experts)
+    "w_gate": ("ep", None, "ffn"),
+    "w_up": ("ep", None, "ffn"),
+    "w_down": ("ep", "ffn", None),
+}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+        elif hasattr(k, "name"):
+            names.append(str(k.name))
+    return tuple(names)
+
+
+def param_logical_axes(params: Any) -> Any:
+    """Pytree of logical-axis tuples mirroring ``params``."""
+    def rule(path, leaf) -> Tuple[Optional[str], ...]:
+        names = _path_names(path)
+        leaf_name = names[-1]
+        is_expert = "moe" in names and "shared" not in names
+        table = _EXPERT_RULES if (is_expert and leaf_name in _EXPERT_RULES) \
+            else _PARAM_RULES
+        trailing = table.get(leaf_name)
+        if trailing is None:
+            trailing = (None,) * leaf.ndim
+        ndim = leaf.ndim
+        lead = (None,) * max(0, ndim - len(trailing))
+        return (lead + trailing)[-ndim:] if ndim else ()
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def param_pspecs(params: Any, ctx: DistContext, mode: str = "train") -> Any:
+    axes = param_logical_axes(params)
+    return jax.tree.map(
+        lambda a: logical_pspec(a, ctx, mode), axes,
+        is_leaf=lambda a: isinstance(a, tuple))
+
+
+def param_shardings(params: Any, ctx: DistContext, mode: str = "train") -> Any:
+    specs = param_pspecs(params, ctx, mode)
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# Cache / activation partition rules
+# ---------------------------------------------------------------------------
+
+_CACHE_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    # attention KV cache (B, C, KVH, hd): batch over data, kv-heads over model
+    "k": ("batch", None, "kv_heads", None),
+    "v": ("batch", None, "kv_heads", None),
+    # mamba decode state
+    "conv": ("batch", None, "d_inner"),
+    "ssm": ("batch", "d_inner", None),
+    # enc-dec cross-attention memory KV
+    "ck": ("batch", None, "kv_heads", None),
+    "cv": ("batch", None, "kv_heads", None),
+}
+
+# flash-decoding variant: shard the cache *sequence* dim over the model axis
+# (no kv-head padding waste when kv_heads < model-axis size)
+_CACHE_RULES_SEQ: Dict[str, Tuple[Optional[str], ...]] = {
+    **_CACHE_RULES,
+    "k": ("batch", "kv_seq", None, None),
+    "v": ("batch", "kv_seq", None, None),
+    "ck": ("batch", "kv_seq", None, None),
+    "cv": ("batch", "kv_seq", None, None),
+}
+
+
+def cache_logical_axes(cache: Any, seq_sharded: bool = False) -> Any:
+    table = _CACHE_RULES_SEQ if seq_sharded else _CACHE_RULES
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        trailing = table.get(names[-1], (None,) * leaf.ndim)
+        lead = (None,) * max(0, leaf.ndim - len(trailing))
+        return (lead + trailing)[-leaf.ndim:] if leaf.ndim else ()
+
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+def cache_pspecs(cache: Any, ctx: DistContext, mode: str = "serve",
+                 seq_sharded: bool = False) -> Any:
+    axes = cache_logical_axes(cache, seq_sharded)
+    return jax.tree.map(lambda a: logical_pspec(a, ctx, mode), axes,
+                        is_leaf=lambda a: isinstance(a, tuple))
+
+
+def cache_shardings(cache: Any, ctx: DistContext, mode: str = "serve",
+                    seq_sharded: bool = False) -> Any:
+    specs = cache_pspecs(cache, ctx, mode, seq_sharded)
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def batch_pspec(ctx: DistContext) -> P:
+    return logical_pspec(("batch", None), ctx)
+
+
+def sanitize_pspec(shape: Tuple[int, ...], spec: P,
+                   mesh: jax.sharding.Mesh) -> P:
+    """Drop axis assignments that do not divide the dim evenly — explicit
+    argument shardings (unlike GSPMD intermediates) must tile exactly.
+    E.g. a 2-kv-head cache dim can't shard over a 16-way model axis -> it is
+    replicated (and the cache should use the seq-sharded layout instead)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        out.append(entry if dim % n == 0 else None)
+    return P(*out)
+
+
+def sanitize_pspecs(tree: Any, pspecs: Any, mesh: jax.sharding.Mesh) -> Any:
+    return jax.tree.map(
+        lambda leaf, spec: sanitize_pspec(leaf.shape, spec, mesh),
+        tree, pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def tree_bytes(tree: Any) -> int:
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(tree))

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the serving hot spots (+ pure-jnp oracles).
+
+top2gap          — the paper's Eq. 5 certainty reduction over the vocab axis
+flash_attention  — prefill attention (online softmax, GQA, sliding window)
+decode_attention — one-token decode against a long KV cache (flash-decoding)
+mamba_scan       — chunked selective scan (falcon-mamba / jamba layers)
+
+``ops`` holds the jit'd wrappers (interpret=True off-TPU); ``ref`` the
+oracles the tests assert against.
+"""
+from repro.kernels import ops, ref  # noqa: F401

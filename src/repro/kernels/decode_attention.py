@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: single-token decode attention (flash-decoding style).
+
+Serving decode reads the WHOLE KV cache to produce one token — purely
+HBM-bandwidth-bound. The kernel streams KV chunks HBM->VMEM with running
+online-softmax accumulators; all q heads of one GQA group ride along the
+sublane dim so each K/V block is read once per group (not once per q head).
+
+Grid: (B, HKV, C/BC), cache chunks innermost. Valid-length masking handles
+ragged caches (cache_index) without host-side slicing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(vl_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+                   scale: float, block_c: int, n_cblocks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale    # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)            # (BC, D)
+    v = v_ref[0, 0].astype(jnp.float32)            # (BC, D)
+    valid_len = vl_ref[0]
+
+    s = jnp.dot(q, k.T)                            # (G, BC)
+    kj = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + ic * block_c
+    mask = kj < valid_len
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_s[...], l_s[...], acc_s[...]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+    acc_new = acc_prev * alpha[:, None] + jnp.dot(p, v)
+    m_s[...] = m_new
+    l_s[...] = l_new
+    acc_s[...] = acc_new
+
+    @pl.when(ic == n_cblocks - 1)
+    def _out():
+        denom = jnp.maximum(l_s[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_s[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                            valid_len: jax.Array, block_c: int = 512,
+                            interpret: bool = False) -> jax.Array:
+    """q (B, H, D); k/v (B, HKV, C, D); valid_len scalar -> (B, H, D)."""
+    b, h, d = q.shape
+    hkv, c = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = float(d) ** -0.5
+    block_c = min(block_c, max(c, 8))
+    pad_c = (-c) % block_c
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_c), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_c), (0, 0)))
+    cp = c + pad_c
+    n_cblocks = cp // block_c
+    # regroup q: (B, HKV, G, D)
+    qg = q.reshape(b, hkv, g, d)
+    vl = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (b,))
+
+    kernel = functools.partial(_decode_kernel, scale=scale, block_c=block_c,
+                               n_cblocks=n_cblocks)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hkv, n_cblocks),
+        in_specs=[
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ib,)),
+            pl.BlockSpec((1, 1, g, d), lambda ib, ih, ic: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, block_c, d),
+                         lambda ib, ih, ic: (ib, ih, ic, 0)),
+            pl.BlockSpec((1, 1, block_c, d),
+                         lambda ib, ih, ic: (ib, ih, ic, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda ib, ih, ic: (ib, ih, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((g,), jnp.float32),
+                        pltpu.VMEM((g,), jnp.float32),
+                        pltpu.VMEM((g, d), jnp.float32)],
+        interpret=interpret,
+    )(vl, qg, kp, vp)
+    return out.reshape(b, h, d)

@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: causal flash attention (prefill hot spot).
+
+Online-softmax tiling: grid (B, H, S/BQ, S/BK) with KV innermost; running
+(m, l, acc) live in VMEM scratch across KV blocks. GQA is native — the K/V
+BlockSpec index map sends query head h to kv head h // group, so K/V are
+never materialised per-q-head in HBM. Supports sliding-window masking
+(h2o-danube) via the same in-kernel position mask.
+
+Block sizes (BQ=128, BK=128, full head_dim) keep the MXU matmul dims
+(128 x head_dim) hardware-aligned and the working set
+(BQ*D + 2*BK*D + BQ*BK) * 4B well under VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+                  scale: float, block_q: int, block_k: int, n_kblocks: int,
+                  seq_len: int, causal: bool, window: int):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    iq = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale     # (BQ, D)
+    k = k_ref[0, 0].astype(jnp.float32)             # (BK, D)
+    v = v_ref[0, 0].astype(jnp.float32)             # (BK, D)
+
+    s = jnp.dot(q, k.T)                              # (BQ, BK) MXU
+    qi = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) + iq * block_q
+    kj = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + ik * block_k
+    mask = kj < seq_len
+    if causal:
+        mask &= kj <= qi
+        if window > 0:
+            mask &= kj > qi - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_s[...], l_s[...], acc_s[...]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])
+    # rows with no valid key yet: keep everything at zero
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+    acc_new = acc_prev * alpha[:, None] + jnp.dot(p, v)
+    m_s[...] = m_new
+    l_s[...] = l_new
+    acc_s[...] = acc_new
+
+    @pl.when(ik == n_kblocks - 1)
+    def _out():
+        denom = jnp.maximum(l_s[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_s[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           causal: bool = True, window: int = 0,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q (B, H, S, D); k/v (B, HKV, S, D) -> (B, H, S, D)."""
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    scale = float(d) ** -0.5
+    block_q = min(block_q, max(s, 8))
+    block_k = min(block_k, max(s, 8))
+    pad_q = (-s) % block_q
+    pad_k = (-s) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    sq, sk = s + pad_q, s + pad_k
+    n_kblocks = sk // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        n_kblocks=n_kblocks, seq_len=s, causal=causal, window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, sq // block_q, n_kblocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda ib, ih, iq, ik, g=g: (ib, ih // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda ib, ih, iq, ik, g=g: (ib, ih // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q,), jnp.float32),
+                        pltpu.VMEM((block_q,), jnp.float32),
+                        pltpu.VMEM((block_q, d), jnp.float32)],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :s]

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: Mamba-1 selective scan (chunked recurrence).
+
+The CUDA selective-scan kernel is warp-parallel over channels with shared-
+memory state; the TPU-native adaptation streams sequence CHUNKS HBM->VMEM
+and carries the (BDi, N) recurrent state in VMEM scratch across the chunk
+grid, vectorising the per-step update over the channel (sublane) and state
+(lane) dims on the VPU. d_inner is blocked so the kernel composes with
+tensor parallelism (the sharded d_inner axis maps to the BDi grid dim).
+
+Grid: (B, Di/BDi, S/CHUNK), chunks innermost (state carries across).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mamba_kernel(dt_ref, a_ref, b_ref, c_ref, d_ref, x_ref, y_ref, h_s, *,
+                  chunk: int, seq_len: int):
+    ichunk = pl.program_id(2)
+
+    @pl.when(ichunk == 0)
+    def _init():
+        h_s[...] = jnp.zeros_like(h_s)
+
+    a = a_ref[...]                       # (BDi, N) f32
+    d_vec = d_ref[...]                   # (BDi,) f32
+    dt = dt_ref[0]                       # (CHUNK, BDi) f32
+    bm = b_ref[0]                        # (CHUNK, N) f32
+    cm = c_ref[0]                        # (CHUNK, N) f32
+    x = x_ref[0].astype(jnp.float32)     # (CHUNK, BDi)
+
+    def step(t, h):
+        dt_t = dt[t]                                 # (BDi,)
+        da = jnp.exp(dt_t[:, None] * a)              # (BDi, N)
+        bu = (dt_t * x[t])[:, None] * bm[t][None, :]
+        h = da * h + bu
+        y_t = jnp.sum(h * cm[t][None, :], axis=1) + d_vec * x[t]
+        y_ref[0, t, :] = y_t.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_s[...])
+    h_s[...] = h
+
+
+def mamba_scan_pallas(dt: jax.Array, a: jax.Array, b_mat: jax.Array,
+                      c_mat: jax.Array, d_vec: jax.Array, x: jax.Array,
+                      chunk: int = 128, block_di: int = 512,
+                      interpret: bool = False):
+    """dt (B,S,Di) f32; a (Di,N) f32; b/c (B,S,N) f32; d_vec (Di,) f32;
+    x (B,S,Di). Returns y (B,S,Di) f32. (Zero initial state, as in prefill;
+    the decode step is a single recurrence and needs no kernel.)"""
+    bsz, s, d_inner = x.shape
+    n = a.shape[-1]
+    chunk = min(chunk, max(s, 8))
+    block_di = min(block_di, d_inner)
+    pad_s = (-s) % chunk
+    assert d_inner % block_di == 0, (d_inner, block_di)
+    if pad_s:
+        # pad with dt=0 -> da=1, bu=0: state passes through unchanged
+        dt = jnp.pad(dt, ((0, 0), (0, pad_s), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad_s), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad_s), (0, 0)))
+        x = jnp.pad(x, ((0, 0), (0, pad_s), (0, 0)))
+    sp = s + pad_s
+
+    kernel = functools.partial(_mamba_kernel, chunk=chunk, seq_len=s)
+    y = pl.pallas_call(
+        kernel,
+        grid=(bsz, d_inner // block_di, sp // chunk),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_di),
+                         lambda ib, idi, ic: (ib, ic, idi)),   # dt
+            pl.BlockSpec((block_di, n), lambda ib, idi, ic: (idi, 0)),  # a
+            pl.BlockSpec((1, chunk, n), lambda ib, idi, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, chunk, n), lambda ib, idi, ic: (ib, ic, 0)),
+            pl.BlockSpec((block_di,), lambda ib, idi, ic: (idi,)),  # d
+            pl.BlockSpec((1, chunk, block_di),
+                         lambda ib, idi, ic: (ib, ic, idi)),   # x
+        ],
+        out_specs=pl.BlockSpec((1, chunk, block_di),
+                               lambda ib, idi, ic: (ib, ic, idi)),
+        out_shape=jax.ShapeDtypeStruct((bsz, sp, d_inner), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_di, n), jnp.float32)],
+        interpret=interpret,
+    )(dt, a, b_mat, c_mat, d_vec, x)
+    return y[:, :s]

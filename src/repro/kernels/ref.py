@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def top2gap_ref(scores: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """scores (B, V) -> (gap (B,) f32, argmax (B,) i32). Paper Eq. 5."""
+    top2, idx = jax.lax.top_k(scores.astype(jnp.float32), 2)
+    return top2[..., 0] - top2[..., 1], idx[..., 0].astype(jnp.int32)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, window: int = 0) -> jax.Array:
+    """q (B, H, S, D); k/v (B, HKV, S, D) -> (B, H, S, D). GQA by head
+    grouping; optional sliding window (window=0 -> full causal)."""
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    kr = jnp.repeat(k, g, axis=1)
+    vr = jnp.repeat(v, g, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) / jnp.sqrt(
+        jnp.asarray(d, jnp.float32))
+    if causal:
+        qi = jnp.arange(s)[:, None]
+        kj = jnp.arange(s)[None, :]
+        mask = kj <= qi
+        if window > 0:
+            mask &= kj > qi - window
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs,
+                      vr.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         valid_len: jax.Array) -> jax.Array:
+    """q (B, H, D) one token; k/v (B, HKV, C, D); valid_len scalar i32 —
+    attend to cache positions < valid_len. -> (B, H, D)."""
+    b, h, d = q.shape
+    hkv, c = k.shape[1], k.shape[2]
+    g = h // hkv
+    kr = jnp.repeat(k, g, axis=1)
+    vr = jnp.repeat(v, g, axis=1)
+    scores = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) / jnp.sqrt(
+        jnp.asarray(d, jnp.float32))
+    mask = jnp.arange(c)[None, None, :] < valid_len
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", probs,
+                      vr.astype(jnp.float32)).astype(q.dtype)
+
+
+def mamba_scan_ref(dt: jax.Array, a: jax.Array, b_mat: jax.Array,
+                   c_mat: jax.Array, d_vec: jax.Array, x: jax.Array,
+                   h0: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Sequential selective-scan oracle.
+
+    dt (B,S,Di) f32, a (Di,N) f32 (already -exp(A_log)), b/c (B,S,N) f32,
+    d_vec (Di,), x (B,S,Di). Returns (y (B,S,Di) f32, h_last (B,Di,N))."""
+    bsz, s, d_inner = x.shape
+    n = a.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, d_inner, n), jnp.float32)
+
+    def step(h, args):
+        dt_t, b_t, c_t, x_t = args
+        da = jnp.exp(dt_t[..., None] * a)
+        h = da * h + (dt_t * x_t.astype(jnp.float32))[..., None] \
+            * b_t[:, None, :]
+        y_t = jnp.einsum("bin,bn->bi", h, c_t)
+        return h, y_t
+
+    xs = (dt.swapaxes(0, 1), b_mat.swapaxes(0, 1), c_mat.swapaxes(0, 1),
+          x.swapaxes(0, 1))
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    y = ys.swapaxes(0, 1) + x.astype(jnp.float32) * d_vec
+    return y, h_last

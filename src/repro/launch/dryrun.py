@@ -1,0 +1,217 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production meshes, extract memory/cost analysis + collective
+schedule, and write the roofline rows (EXPERIMENTS.md §Dry-run/§Roofline).
+
+The two lines above MUST run before any other import (jax locks the device
+count on first init); 512 host devices back both the single-pod (16,16) and
+multi-pod (2,16,16) meshes. Nothing is allocated — inputs, params, caches
+and optimizer state are ShapeDtypeStructs with attached shardings.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b \
+      --shape decode_32k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out benchmarks/artifacts/dryrun.json
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config  # noqa: E402
+from repro.configs.shapes import (SHAPES, cache_specs, cell_is_applicable,  # noqa: E402
+                                  input_specs, skip_reason, source_len)
+from repro.distributed import sharding as sh  # noqa: E402
+from repro.distributed.context import use_context  # noqa: E402
+from repro.launch.mesh import context_for_mesh, make_production_mesh  # noqa: E402
+from repro.launch.steps import (make_serve_decode, make_serve_prefill,  # noqa: E402
+                                make_train)
+from repro.models import model as model_lib  # noqa: E402
+from repro.profiling.cost_model import model_bytes, model_flops  # noqa: E402
+from repro.profiling.roofline import analyze_compiled  # noqa: E402
+from repro.training.optimizer import init_opt_state, opt_state_pspecs  # noqa: E402
+
+
+def _with_shardings(tree: Any, pspecs: Any, mesh) -> Any:
+    pspecs = sh.sanitize_pspecs(tree, pspecs, mesh)
+
+    def attach(leaf, spec):
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(attach, tree, pspecs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _batch_pspecs(specs: Dict[str, jax.ShapeDtypeStruct], ctx) -> Dict:
+    out = {}
+    batch_axes = ctx.batch_axes if len(ctx.batch_axes) > 1 \
+        else ctx.batch_axes[0]
+    for k, v in specs.items():
+        if v.ndim == 0:
+            out[k] = P()
+        else:
+            out[k] = P(*((batch_axes,) + (None,) * (v.ndim - 1)))
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             flash_decode: bool = False,
+             extra: Optional[Dict] = None) -> Dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    row: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_kind}
+    if flash_decode:
+        row["variant"] = "flash_decode"
+    reason = skip_reason(cfg, shape)
+    if reason:
+        row["status"] = "skip"
+        row["reason"] = reason
+        return row
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    ctx = context_for_mesh(mesh, flash_decode=flash_decode)
+    mode = "train" if shape.kind == "train" else "serve"
+    t0 = time.time()
+    try:
+        with use_context(ctx):
+            params = model_lib.init_params(cfg, spec_only=True)
+            pspecs = sh.param_pspecs(params, ctx, mode=mode)
+            params_s = _with_shardings(params, pspecs, mesh)
+            in_specs = input_specs(cfg, shape)
+            batch_s = _with_shardings(in_specs,
+                                      _batch_pspecs(in_specs, ctx), mesh)
+
+            if shape.kind == "train":
+                opt = init_opt_state(params, spec_only=True)
+                zero1 = "pod" if mesh_kind == "multi" else None
+                ospecs = opt_state_pspecs(pspecs, zero1_axis=zero1)
+                opt_s = _with_shardings(opt, ospecs, mesh)
+                step = make_train(cfg)
+                jitted = jax.jit(step, donate_argnums=(0, 1))
+                lowered = jitted.lower(params_s, opt_s, batch_s)
+            elif shape.kind == "prefill":
+                step = make_serve_prefill(cfg)
+                jitted = jax.jit(step)
+                lowered = jitted.lower(params_s, batch_s)
+            else:  # decode
+                cache = cache_specs(cfg, shape)
+                # flash-decoding layout (cache seq dim over the model axis)
+                # whenever kv heads can't tile the model axis, and always
+                # for the 500k cell (batch 1 can't shard over data)
+                seq_sharded = (shape.name == "long_500k"
+                               or cfg.num_kv_heads % ctx.axis_size(
+                                   ctx.model_axis) != 0)
+                cspecs = sh.cache_pspecs(cache, ctx, mode="serve",
+                                         seq_sharded=seq_sharded)
+                cache_s = _with_shardings(cache, cspecs, mesh)
+                step = make_serve_decode(cfg)
+                jitted = jax.jit(step, donate_argnums=(1,))
+                tok = batch_s["tokens"]
+                ci = batch_s["cache_index"]
+                lowered = jitted.lower(params_s, cache_s, tok, ci)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+
+        tokens = (shape.global_batch if shape.kind == "decode"
+                  else shape.global_batch * shape.seq_len)
+        mf = model_flops(cfg, tokens=tokens, context=shape.seq_len,
+                         kind=shape.kind)
+        mb = model_bytes(cfg, batch=shape.global_batch,
+                         context=shape.seq_len, kind=shape.kind)
+        rep = analyze_compiled(compiled, arch, shape_name, mesh_kind,
+                               chips=mesh.size, model_flops_total=mf,
+                               model_bytes_total=mb,
+                               compile_seconds=t_compile)
+        row.update(rep.to_dict())
+        row["status"] = "ok"
+        row["lower_seconds"] = t_lower
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            row["memory_analysis"] = {
+                k: int(getattr(mem, k, 0)) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes")}
+    except Exception as e:  # a failing cell is a bug in the system
+        row["status"] = "error"
+        row["error"] = f"{type(e).__name__}: {e}"
+        row["traceback"] = traceback.format_exc()[-2000:]
+    return row
+
+
+def fmt_row(row: Dict) -> str:
+    if row["status"] == "skip":
+        return (f"{row['arch']:26s} {row['shape']:12s} {row['mesh']:6s} "
+                f"SKIP ({row['reason'][:60]})")
+    if row["status"] == "error":
+        return (f"{row['arch']:26s} {row['shape']:12s} {row['mesh']:6s} "
+                f"ERROR {row['error'][:80]}")
+    return (f"{row['arch']:26s} {row['shape']:12s} {row['mesh']:6s} "
+            f"flops/dev={row['hlo_flops']:.3e} bytes/dev={row['hlo_bytes']:.3e} "
+            f"coll/dev={row['collective_bytes']:.3e} dom={row['dominant']:10s} "
+            f"roofline={row['roofline_fraction']:.3f} "
+            f"compile={row['compile_seconds']:.0f}s")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="")
+    ap.add_argument("--append", action="store_true",
+                    help="merge into an existing --out file, skipping "
+                         "already-recorded ok cells")
+    ap.add_argument("--flash-decode", action="store_true",
+                    help="sharded flash-decoding for decode cells "
+                         "(EXPERIMENTS.md §Perf H2)")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    done = {}
+    if args.append and args.out and os.path.exists(args.out):
+        for row in json.load(open(args.out)):
+            done[(row["arch"], row["shape"], row["mesh"])] = row
+
+    rows = []
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                key = (arch, shape_name, mesh_kind)
+                if key in done and done[key]["status"] in ("ok", "skip"):
+                    rows.append(done[key])
+                    print("CACHED " + fmt_row(done[key]), flush=True)
+                    continue
+                row = run_cell(arch, shape_name, mesh_kind,
+                               flash_decode=args.flash_decode)
+                rows.append(row)
+                print(fmt_row(row), flush=True)
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(rows, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in rows)
+    n_skip = sum(r["status"] == "skip" for r in rows)
+    n_err = sum(r["status"] == "error" for r in rows)
+    print(f"\n{n_ok} ok, {n_skip} documented skips, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Step builders shared by the launchers and the dry-run.
+
+``serve_prefill`` / ``serve_decode`` fuse the paper's certainty estimation
+(Eq. 5 top-2 gap) into the step graph, so the cascade gate costs one fused
+reduction after the LM head. The pure-jnp top2 path lowers on any backend
+(the Pallas kernel is the TPU-target artifact, validated in interpret mode).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.certainty import top2_gap
+from repro.models import model as model_lib
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import TrainStepConfig, make_train_step
+
+
+def make_train(cfg: ModelConfig, opt_cfg: AdamWConfig = AdamWConfig(),
+               ts_cfg: TrainStepConfig = TrainStepConfig()) -> Callable:
+    return make_train_step(cfg, opt_cfg, ts_cfg)
+
+
+def make_serve_prefill(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch: Dict[str, jax.Array]
+                     ) -> Tuple[jax.Array, jax.Array, Any]:
+        logits, cache = model_lib.prefill(params, cfg, batch)
+        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        cert = top2_gap(logits)
+        return pred, cert, cache
+
+    return prefill_step
+
+
+def make_serve_decode(cfg: ModelConfig) -> Callable:
+    def decode_step(params, cache, tokens: jax.Array,
+                    cache_index: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array, Any]:
+        logits, new_cache = model_lib.decode_step(params, cfg, tokens, cache,
+                                                  cache_index)
+        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        cert = top2_gap(logits)
+        return pred, cert, new_cache
+
+    return decode_step

@@ -1,0 +1,193 @@
+"""Shared model building blocks: parameter factories, norms, RoPE, FFN.
+
+All modules are pure functions over explicit parameter pytrees. Parameters are
+created through an ``ArrayFactory`` so the same code path yields either real
+arrays (init) or ``jax.ShapeDtypeStruct`` stand-ins (dry-run specs, no
+allocation).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+DEFAULT_DTYPE = jnp.bfloat16
+
+
+class ArrayFactory:
+    """Creates parameters either as real arrays or as ShapeDtypeStructs."""
+
+    def __init__(self, rng: Optional[jax.Array], spec_only: bool,
+                 dtype=DEFAULT_DTYPE):
+        self._rng = rng
+        self.spec_only = spec_only
+        self.dtype = dtype
+
+    def _next_rng(self) -> jax.Array:
+        self._rng, sub = jax.random.split(self._rng)
+        return sub
+
+    def normal(self, shape: Tuple[int, ...], scale: float = 0.02,
+               dtype=None) -> Any:
+        dtype = dtype or self.dtype
+        if self.spec_only:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return (jax.random.normal(self._next_rng(), shape, jnp.float32)
+                * scale).astype(dtype)
+
+    def zeros(self, shape: Tuple[int, ...], dtype=None) -> Any:
+        dtype = dtype or self.dtype
+        if self.spec_only:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    def ones(self, shape: Tuple[int, ...], dtype=None) -> Any:
+        dtype = dtype or self.dtype
+        if self.spec_only:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.ones(shape, dtype)
+
+    def constant(self, shape: Tuple[int, ...], value: float, dtype=None) -> Any:
+        dtype = dtype or self.dtype
+        if self.spec_only:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.full(shape, value, dtype)
+
+    def uniform(self, shape: Tuple[int, ...], lo: float, hi: float,
+                dtype=None) -> Any:
+        dtype = dtype or self.dtype
+        if self.spec_only:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jax.random.uniform(self._next_rng(), shape, jnp.float32,
+                                  lo, hi).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Normalisation
+# ---------------------------------------------------------------------------
+
+def make_norm_params(f: ArrayFactory, norm_type: str, dim: int) -> Params:
+    if norm_type == "rmsnorm":
+        return {"scale": f.ones((dim,), jnp.float32)}
+    if norm_type == "layernorm":
+        return {"scale": f.ones((dim,), jnp.float32),
+                "bias": f.zeros((dim,), jnp.float32)}
+    if norm_type == "nonparametric_ln":
+        return {}  # OLMo: LN without learned affine
+    raise ValueError(norm_type)
+
+
+def apply_norm(p: Params, x: jax.Array, norm_type: str,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if norm_type == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    elif norm_type == "layernorm":
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mean) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    elif norm_type == "nonparametric_ln":
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mean) * jax.lax.rsqrt(var + eps)
+    else:
+        raise ValueError(norm_type)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim // 2,), float32."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate pairs. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    inv_freq = rope_frequencies(head_dim, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated FFN (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def make_ffn_params(f: ArrayFactory, d_model: int, d_ff: int) -> Params:
+    return {
+        "w_gate": f.normal((d_model, d_ff)),
+        "w_up": f.normal((d_model, d_ff)),
+        "w_down": f.normal((d_ff, d_model)),
+    }
+
+
+def apply_ffn(p: Params, x: jax.Array, activation: str = "silu") -> jax.Array:
+    act = jax.nn.silu if activation == "silu" else jax.nn.gelu
+    gate = act(x @ p["w_gate"])
+    return (gate * (x @ p["w_up"])) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def make_embed_params(f: ArrayFactory, vocab: int, d_model: int,
+                      tie: bool) -> Params:
+    p = {"embedding": f.normal((vocab, d_model))}
+    if not tie:
+        p["lm_head"] = f.normal((d_model, vocab))
+    return p
+
+
+def embed_tokens(p: Params, tokens: jax.Array, d_model: int) -> jax.Array:
+    from repro.distributed.context import get_context
+    ctx = get_context()
+    if ctx is not None and ctx.mesh is not None:
+        # One-hot matmul (fused iota-compare on TPU): partitions cleanly over
+        # a vocab-sharded table, where gather trips SPMD corner cases.
+        onehot = jax.nn.one_hot(tokens, p["embedding"].shape[0],
+                                dtype=p["embedding"].dtype)
+        return onehot @ p["embedding"]
+    return p["embedding"][tokens] * jnp.asarray(
+        1.0, p["embedding"].dtype)  # (B, S, D)
+
+
+def lm_logits(p: Params, x: jax.Array, tie: bool) -> jax.Array:
+    """Final logits in float32 (softmax numerics)."""
+    if tie:
+        w = p["embedding"].T  # (D, V)
+    else:
+        w = p["lm_head"]
+    return (x @ w.astype(x.dtype)).astype(jnp.float32)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       ignore_id: int = -1) -> jax.Array:
+    """Mean token cross-entropy in float32. logits (B,S,V), labels (B,S)."""
+    from repro.distributed.context import get_context
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ctx = get_context()
+    if ctx is not None and ctx.mesh is not None:
+        # one-hot contraction over the (model-sharded) vocab axis
+        onehot = jax.nn.one_hot(labels.clip(0), logits.shape[-1],
+                                dtype=logits.dtype)
+        gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    else:
+        gold = jnp.take_along_axis(logits, labels[..., None].clip(0),
+                                   axis=-1)[..., 0]
+    mask = (labels != ignore_id).astype(jnp.float32)
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)

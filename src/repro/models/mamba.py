@@ -1,0 +1,185 @@
+"""Mamba-1 selective SSM mixer (falcon-mamba, jamba mamba layers).
+
+Full-sequence path uses a *chunked* scan: ``jax.lax.scan`` over sequence
+chunks carrying the (B, d_inner, d_state) recurrent state; inside a chunk an
+associative scan materialises only (B, chunk, d_inner, d_state) — this is the
+memory layout the Pallas ``mamba_scan`` kernel implements on TPU (HBM->VMEM
+chunk streaming). Decode is the O(1) single-step recurrence against a cached
+(conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ArrayFactory, Params
+
+DEFAULT_CHUNK = 256
+
+
+def make_mamba_params(f: ArrayFactory, cfg: ModelConfig) -> Params:
+    s = cfg.ssm
+    assert s is not None
+    d = cfg.d_model
+    d_inner = s.expand * d
+    dt_rank = s.resolved_dt_rank(d)
+    return {
+        "in_proj": f.normal((d, 2 * d_inner)),          # -> (x, z)
+        "conv_w": f.normal((s.d_conv, d_inner)),         # depthwise causal conv
+        "conv_b": f.zeros((d_inner,)),
+        "x_proj": f.normal((d_inner, dt_rank + 2 * s.d_state)),
+        "dt_proj_w": f.normal((dt_rank, d_inner)),
+        "dt_proj_b": f.uniform((d_inner,), -4.0, -2.0, dtype=jnp.float32),
+        # A stored as log so A = -exp(A_log) is always negative (stable)
+        "A_log": f.uniform((d_inner, s.d_state), 0.0, 1.1, dtype=jnp.float32),
+        "D": f.ones((d_inner,), jnp.float32),
+        "out_proj": f.normal((d_inner, d)),
+    }
+
+
+def _ssm_inputs(p: Params, cfg: ModelConfig, xc: jax.Array
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Project conv output xc (..., d_inner) -> (dt, B, C) for the SSM.
+    dt (..., d_inner) f32; B, C (..., d_state) f32."""
+    s = cfg.ssm
+    dt_rank = s.resolved_dt_rank(cfg.d_model)
+    dbc = xc @ p["x_proj"]
+    dt_low = dbc[..., :dt_rank]
+    b_mat = dbc[..., dt_rank:dt_rank + s.d_state].astype(jnp.float32)
+    c_mat = dbc[..., dt_rank + s.d_state:].astype(jnp.float32)
+    dt = dt_low @ p["dt_proj_w"].astype(dt_low.dtype)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_proj_b"])
+    return dt, b_mat, c_mat
+
+
+def _scan_chunk(a: jax.Array, bu: jax.Array, h0: jax.Array
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Associative scan of h_t = a_t * h_{t-1} + bu_t within one chunk.
+
+    a, bu: (B, L, D_inner, N) f32; h0 (B, D_inner, N).
+    Returns (h_all (B, L, D_inner, N), h_last).
+    """
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, a_r * b_l + b_r
+
+    a_s, b_s = jax.lax.associative_scan(combine, (a, bu), axis=1)
+    h_all = a_s * h0[:, None] + b_s
+    return h_all, h_all[:, -1]
+
+
+def selective_scan(dt: jax.Array, a_log: jax.Array, b_mat: jax.Array,
+                   c_mat: jax.Array, d_vec: jax.Array, x: jax.Array,
+                   h0: jax.Array, chunk: int = DEFAULT_CHUNK
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Selective SSM over a full sequence.
+
+    dt (B,S,Di) f32, a_log (Di,N), b/c (B,S,N) f32, d_vec (Di,), x (B,S,Di).
+    h0 (B,Di,N) f32. Returns (y (B,S,Di) in x.dtype, h_last).
+    """
+    bsz, seq, d_inner = x.shape
+    n = a_log.shape[-1]
+    chunk = min(chunk, seq)
+    pad = (-seq) % chunk
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    n_chunks = (seq + pad) // chunk
+    a = -jnp.exp(a_log)  # (Di, N)
+
+    def step(h, args):
+        dt_c, b_c, c_c, x_c = args  # (B, L, ...)
+        da = jnp.exp(dt_c[..., None] * a)                      # (B,L,Di,N)
+        bu = (dt_c * x_c.astype(jnp.float32))[..., None] * b_c[:, :, None, :]
+        h_all, h_last = _scan_chunk(da, bu, h)
+        y_c = jnp.einsum("blin,bln->bli", h_all, c_c)
+        return h_last, y_c
+
+    xs = tuple(t.reshape(bsz, n_chunks, chunk, -1).swapaxes(0, 1)
+               for t in (dt, b_mat, c_mat, x))
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(bsz, n_chunks * chunk, d_inner)
+    y = y[:, :seq]
+    y = y + x[:, :seq].astype(jnp.float32) * d_vec
+    return y, h_last
+
+
+def _causal_conv(xz: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array = None) -> jax.Array:
+    """Depthwise causal conv over time. xz (B,S,Di), w (K,Di). If ``state``
+    (B,K-1,Di) is given it is prepended (decode/chunk continuation)."""
+    k = w.shape[0]
+    if state is None:
+        x_pad = jnp.pad(xz, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        x_pad = jnp.concatenate([state.astype(xz.dtype), xz], axis=1)
+    out = sum(x_pad[:, i:i + xz.shape[1]] * w[i] for i in range(k))
+    return out + b.astype(out.dtype)
+
+
+def mamba_forward(p: Params, cfg: ModelConfig, x: jax.Array,
+                  chunk: int = DEFAULT_CHUNK) -> jax.Array:
+    """Full-sequence mixer. x (B, S, D) -> (B, S, D)."""
+    out, _ = mamba_prefill(p, cfg, x, chunk)
+    return out
+
+
+def mamba_prefill(p: Params, cfg: ModelConfig, x: jax.Array,
+                  chunk: int = DEFAULT_CHUNK) -> Tuple[jax.Array, Params]:
+    """Full-sequence mixer returning the decode cache."""
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    bsz, seq, _ = x.shape
+    xz = x @ p["in_proj"]
+    xc, z = jnp.split(xz, 2, axis=-1)
+    conv_tail = xc[:, -(s.d_conv - 1):]  # pre-activation conv state
+    if seq < s.d_conv - 1:
+        conv_tail = jnp.pad(conv_tail,
+                            ((0, 0), (s.d_conv - 1 - seq, 0), (0, 0)))
+    xc = jax.nn.silu(_causal_conv(xc, p["conv_w"], p["conv_b"]))
+    dt, b_mat, c_mat = _ssm_inputs(p, cfg, xc)
+    h0 = jnp.zeros((bsz, d_inner, s.d_state), jnp.float32)
+    y, h_last = selective_scan(dt, p["A_log"], b_mat, c_mat, p["D"], xc, h0,
+                               chunk)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    cache = {"conv": conv_tail.astype(x.dtype), "ssm": h_last}
+    return out, cache
+
+
+def make_mamba_cache(f: ArrayFactory, cfg: ModelConfig, batch: int) -> Params:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    return {
+        "conv": f.zeros((batch, s.d_conv - 1, d_inner)),
+        "ssm": f.zeros((batch, d_inner, s.d_state), jnp.float32),
+    }
+
+
+def mamba_decode(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params
+                 ) -> Tuple[jax.Array, Params]:
+    """One-token step. x (B, 1, D); cache {conv (B,K-1,Di), ssm (B,Di,N)}."""
+    s = cfg.ssm
+    xz = x @ p["in_proj"]
+    xc_new, z = jnp.split(xz, 2, axis=-1)  # (B,1,Di)
+    conv_in = jnp.concatenate([cache["conv"], xc_new], axis=1)  # (B,K,Di)
+    new_conv = conv_in[:, 1:]
+    xc = jnp.einsum("bki,ki->bi", conv_in, p["conv_w"].astype(conv_in.dtype))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(xc.dtype))[:, None]  # (B,1,Di)
+    dt, b_mat, c_mat = _ssm_inputs(p, cfg, xc)
+    a = -jnp.exp(p["A_log"])  # (Di,N)
+    da = jnp.exp(dt[:, 0, :, None] * a)  # (B,Di,N)
+    bu = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] \
+        * b_mat[:, 0, None, :]
+    h = da * cache["ssm"] + bu
+    y = jnp.einsum("bin,bn->bi", h, c_mat[:, 0])
+    y = y + xc[:, 0].astype(jnp.float32) * p["D"]
+    y = y[:, None].astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return out, {"conv": new_conv, "ssm": h}

@@ -1,0 +1,445 @@
+"""Full model assembly for all ten assigned architectures.
+
+One code path covers dense / moe / ssm / hybrid / vlm / audio via a *block
+pattern*: the layer stack is a repetition of a short period of ``LayerSpec``s
+(mixer x ffn kind). Parameters for each position in the period are stacked
+over repetitions and the stack is driven by ``jax.lax.scan`` — this keeps the
+HLO (and SPMD partitioning time) bounded for 48-64 layer models on 512-device
+meshes.
+
+Entry points (pure functions over explicit param pytrees):
+  init_params  — real arrays (init) or ShapeDtypeStructs (dry-run specs)
+  forward      — full-sequence logits (+ MoE aux loss): train / scoring
+  train_loss   — causal-LM CE + aux, with optional remat
+  prefill      — full-sequence + returns the decode cache
+  decode_step  — one token against the cache
+  init_cache   — cache pytree (real or spec)
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models import mamba as ssm
+from repro.models import moe as moe_lib
+from repro.models.common import (ArrayFactory, Params, apply_norm,
+                                 cross_entropy_loss, embed_tokens, lm_logits,
+                                 make_embed_params, make_ffn_params,
+                                 make_norm_params, apply_ffn)
+
+AUX_LOSS_COEF = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Block pattern
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LayerSpec:
+    mixer: str            # "attn" | "ssm"
+    ffn: str              # "dense" | "moe" | "none"
+    cross: bool = False   # decoder cross-attention (enc-dec archs)
+
+
+def block_pattern(cfg: ModelConfig) -> Tuple[LayerSpec, ...]:
+    period = 1
+    if cfg.hybrid is not None:
+        period = math.lcm(period, cfg.hybrid.attn_every_n)
+    if cfg.moe is not None:
+        period = math.lcm(period, cfg.moe.moe_every_n)
+    if cfg.num_layers % period != 0:
+        raise ValueError(
+            f"{cfg.name}: num_layers={cfg.num_layers} not divisible by the "
+            f"block period {period}")
+    specs = []
+    for i in range(period):
+        mixer = "attn" if cfg.layer_is_attention(i) else "ssm"
+        if cfg.layer_is_moe(i):
+            ffn = "moe"
+        elif cfg.d_ff > 0 and cfg.family != "ssm":
+            ffn = "dense"
+        else:
+            ffn = "none"
+        specs.append(LayerSpec(mixer, ffn, cross=cfg.is_encoder_decoder))
+    return tuple(specs)
+
+
+def num_reps(cfg: ModelConfig) -> int:
+    return cfg.num_layers // len(block_pattern(cfg))
+
+
+class _StackedFactory:
+    """ArrayFactory adapter that prepends a (n_reps,) leading dim."""
+
+    def __init__(self, base: ArrayFactory, n: int):
+        self._base, self._n = base, n
+        self.spec_only = base.spec_only
+        self.dtype = base.dtype
+
+    def __getattr__(self, name):
+        fn = getattr(self._base, name)
+
+        def wrapped(shape, *args, **kw):
+            return fn((self._n,) + tuple(shape), *args, **kw)
+        return wrapped
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def _make_block_params(f, cfg: ModelConfig, spec: LayerSpec) -> Params:
+    p: Params = {"norm1": make_norm_params(f, cfg.norm_type, cfg.d_model)}
+    if spec.mixer == "attn":
+        p["attn"] = attn.make_attention_params(f, cfg)
+    else:
+        p["mamba"] = ssm.make_mamba_params(f, cfg)
+    if spec.cross:
+        p["cross_norm"] = make_norm_params(f, cfg.norm_type, cfg.d_model)
+        p["cross"] = attn.make_cross_attention_params(f, cfg)
+    if spec.ffn != "none":
+        p["norm2"] = make_norm_params(f, cfg.norm_type, cfg.d_model)
+        if spec.ffn == "dense":
+            p["ffn"] = make_ffn_params(f, cfg.d_model, cfg.d_ff)
+        else:
+            p["moe"] = moe_lib.make_moe_params(f, cfg)
+    return p
+
+
+def init_params(cfg: ModelConfig, rng: Optional[jax.Array] = None,
+                spec_only: bool = False, dtype=jnp.bfloat16) -> Params:
+    if not spec_only and rng is None:
+        rng = jax.random.PRNGKey(0)
+    f = ArrayFactory(rng, spec_only, dtype)
+    pattern = block_pattern(cfg)
+    reps = num_reps(cfg)
+    params: Params = {
+        "embed": make_embed_params(f, cfg.vocab_size, cfg.d_model,
+                                   cfg.tie_embeddings),
+    }
+    sf = _StackedFactory(f, reps)
+    params["blocks"] = [_make_block_params(sf, cfg, s) for s in pattern]
+    params["final_norm"] = make_norm_params(f, cfg.norm_type, cfg.d_model)
+    if cfg.frontend.kind != "none" and cfg.frontend.frontend_dim:
+        params["frontend_proj"] = f.normal(
+            (cfg.frontend.frontend_dim, cfg.d_model))
+    if cfg.is_encoder_decoder:
+        enc = cfg.encdec
+        esf = _StackedFactory(f, enc.num_encoder_layers)
+        enc_spec = LayerSpec("attn", "dense", cross=False)
+        params["encoder"] = {
+            "blocks": [_make_block_params(esf, cfg, enc_spec)],
+            "final_norm": make_norm_params(f, cfg.norm_type, cfg.d_model),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Block application (one position within the period)
+# ---------------------------------------------------------------------------
+
+def _apply_block(spec: LayerSpec, p: Params, cfg: ModelConfig, x: jax.Array,
+                 positions: jax.Array, mode: str,
+                 cache: Optional[Params], cross_kv: Optional[Params],
+                 cache_index: Optional[jax.Array], cache_len: int,
+                 is_causal: bool = True
+                 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+    """Returns (x, new_cache_or_None, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, jax.Array] = {}
+    h = apply_norm(p["norm1"], x, cfg.norm_type, cfg.norm_eps)
+    if spec.mixer == "attn":
+        if mode == "full":
+            mix = attn.attention_forward(p["attn"], cfg, h, positions,
+                                         is_causal=is_causal)
+        elif mode == "prefill":
+            mix, kv = attn.prefill_attention(p["attn"], cfg, h, positions,
+                                             cache_len)
+            new_cache.update(kv)
+        else:  # decode
+            from repro.distributed.context import get_context
+            ctx = get_context()
+            use_flash = (ctx is not None and ctx.mesh is not None
+                         and ctx.flash_decode and cfg.sliding_window == 0
+                         and cache["k"].shape[1]
+                         % ctx.axis_size(ctx.model_axis) == 0)
+            if use_flash:
+                mix, kv = attn.decode_attention_sharded(
+                    p["attn"], cfg, h, cache, cache_index, ctx)
+            else:
+                mix, kv = attn.decode_attention(p["attn"], cfg, h, cache,
+                                                cache_index)
+            new_cache.update(kv)
+    else:  # ssm mixer
+        if mode == "full":
+            mix = ssm.mamba_forward(p["mamba"], cfg, h)
+        elif mode == "prefill":
+            mix, st = ssm.mamba_prefill(p["mamba"], cfg, h)
+            new_cache.update(st)
+        else:
+            mix, st = ssm.mamba_decode(p["mamba"], cfg, h, cache)
+            new_cache.update(st)
+    x = x + mix
+    x = constrain(x, "batch", None, None)
+
+    if spec.cross:
+        hc = apply_norm(p["cross_norm"], x, cfg.norm_type, cfg.norm_eps)
+        assert cross_kv is not None
+        x = x + attn.cross_attention_cached(p["cross"], cfg, hc,
+                                            cross_kv["ck"], cross_kv["cv"])
+
+    if spec.ffn != "none":
+        h2 = apply_norm(p["norm2"], x, cfg.norm_type, cfg.norm_eps)
+        if spec.ffn == "dense":
+            out = apply_ffn(p["ffn"], h2, cfg.activation)
+        else:
+            out, aux = moe_lib.apply_moe(p["moe"], cfg, h2)
+        x = x + out
+        x = constrain(x, "batch", None, None)
+    return x, (new_cache or None), aux
+
+
+# ---------------------------------------------------------------------------
+# Scan over repetitions
+# ---------------------------------------------------------------------------
+
+def _run_blocks(blocks: List[Params], cfg: ModelConfig, x: jax.Array,
+                positions: jax.Array, mode: str,
+                caches: Optional[List[Params]] = None,
+                cross_kv: Optional[List[Params]] = None,
+                cache_index: Optional[jax.Array] = None,
+                cache_len: int = 0, is_causal: bool = True,
+                remat: bool = False, remat_policy: str = "full",
+                pattern: Optional[Tuple[LayerSpec, ...]] = None
+                ) -> Tuple[jax.Array, Optional[List[Params]], jax.Array]:
+    """Scan the super-block over repetitions.
+
+    blocks: list (per period position) of rep-stacked param pytrees.
+    caches: list (per period position) of rep-stacked cache pytrees (decode).
+    cross_kv: list (per position) of rep-stacked {'ck','cv'} (enc-dec decode).
+    """
+    pattern = pattern or block_pattern(cfg)
+    reps = jax.tree.leaves(blocks[0])[0].shape[0]
+
+    def body(carry, xs):
+        x, aux = carry
+        block_ps, cache_in, rep_idx = xs
+        new_caches = []
+        for pos, spec in enumerate(pattern):
+            ckv = None
+            if spec.cross and cross_kv is not None:
+                ckv = jax.tree.map(lambda a: a[rep_idx], cross_kv[pos])
+            c_in = cache_in[pos] if cache_in is not None else None
+            x, c_out, a = _apply_block(
+                spec, block_ps[pos], cfg, x, positions, mode, c_in, ckv,
+                cache_index, cache_len, is_causal)
+            aux = aux + a
+            new_caches.append(c_out if c_out is not None else {})
+        return (x, aux), new_caches
+
+    if remat:
+        if remat_policy == "dots":
+            # keep matmul outputs, recompute the cheap elementwise chains
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies
+                .dots_with_no_batch_dims_saveable)
+        else:
+            body = jax.checkpoint(body)
+
+    xs = (blocks, caches, jnp.arange(reps))
+    (x, aux), caches_out = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                        xs)
+    if mode == "full":
+        caches_out = None
+    return x, caches_out, aux
+
+
+# ---------------------------------------------------------------------------
+# Input embedding (incl. modality frontend stubs)
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]
+                  ) -> Tuple[jax.Array, jax.Array, int]:
+    """Returns (x (B, S_tot, D), positions (B, S_tot), prefix_len)."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params["embed"], tokens, cfg.d_model)
+    prefix_len = 0
+    if "prefix_embeddings" in batch:
+        pe = batch["prefix_embeddings"].astype(x.dtype) \
+            @ params["frontend_proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+        prefix_len = pe.shape[1]
+    b, s_tot = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s_tot)[None], (b, s_tot))
+    x = constrain(x, "batch", None, None)
+    return x, positions, prefix_len
+
+
+def encode(params: Params, cfg: ModelConfig, source: jax.Array,
+           remat: bool = False) -> jax.Array:
+    """Encoder forward (enc-dec archs). source (B, S_src, frontend_dim) —
+    precomputed frames per the frontend-stub assignment."""
+    enc = params["encoder"]
+    if "frontend_proj" in params and \
+            source.shape[-1] == cfg.frontend.frontend_dim:
+        x = source.astype(params["frontend_proj"].dtype) \
+            @ params["frontend_proj"]
+    else:
+        x = source
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    pattern = (LayerSpec("attn", "dense", cross=False),)
+    x, _, _ = _run_blocks(enc["blocks"], cfg, x, positions, "full",
+                          is_causal=False, remat=remat, pattern=pattern)
+    return apply_norm(enc["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def forward(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            remat: bool = False, logits_dtype=None,
+            remat_policy: str = "full") -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence logits. Returns (logits (B, S_tot, V), aux_loss)."""
+    cross_kv = None
+    if cfg.is_encoder_decoder:
+        memory = encode(params, cfg, batch["source_frames"], remat)
+        cross_kv = _precompute_cross_kv(params, cfg, memory)
+    x, positions, _ = _embed_inputs(params, cfg, batch)
+    x, _, aux = _run_blocks(params["blocks"], cfg, x, positions, "full",
+                            cross_kv=cross_kv, remat=remat,
+                            remat_policy=remat_policy)
+    x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    logits = lm_logits(params["embed"], x, cfg.tie_embeddings)
+    if logits_dtype is not None:
+        logits = logits.astype(logits_dtype)
+    logits = constrain(logits, "batch", None, "vocab")
+    return logits, aux
+
+
+def train_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+               remat: bool = True, aux_coef: float = AUX_LOSS_COEF,
+               remat_policy: str = "full"
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = forward(params, cfg, batch, remat=remat,
+                          logits_dtype=jnp.bfloat16,
+                          remat_policy=remat_policy)
+    prefix_len = logits.shape[1] - batch["labels"].shape[1]
+    if prefix_len:
+        logits = logits[:, prefix_len:]
+    ce = cross_entropy_loss(logits, batch["labels"])
+    total = ce + aux_coef * aux
+    return total, {"ce": ce, "aux_loss": aux}
+
+
+def _precompute_cross_kv(params: Params, cfg: ModelConfig, memory: jax.Array
+                         ) -> List[Params]:
+    """Per-position rep-stacked {'ck','cv'} from encoder memory."""
+    pattern = block_pattern(cfg)
+    out = []
+    for pos, spec in enumerate(pattern):
+        if not spec.cross:
+            out.append({})
+            continue
+        block_p = params["blocks"][pos]
+
+        def one_rep(p_cross):
+            ck, cv = attn.make_cross_kv(p_cross, cfg, memory)
+            return {"ck": ck, "cv": cv}
+        out.append(jax.vmap(one_rep)(block_p["cross"]))
+    return out
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            cache_len: int = 0) -> Tuple[jax.Array, Params]:
+    """Process the prompt; returns (last-position logits (B, V) f32, cache).
+
+    cache_len 0 means "capacity = prompt length".
+    """
+    cross_kv = None
+    if cfg.is_encoder_decoder:
+        memory = encode(params, cfg, batch["source_frames"])
+        cross_kv = _precompute_cross_kv(params, cfg, memory)
+    x, positions, _ = _embed_inputs(params, cfg, batch)
+    cache_len = cache_len or x.shape[1]
+    x, caches, _ = _run_blocks(params["blocks"], cfg, x, positions, "prefill",
+                               cross_kv=cross_kv, cache_len=cache_len)
+    x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    last = x[:, -1]
+    logits = lm_logits(params["embed"], last[:, None],
+                       cfg.tie_embeddings)[:, 0]
+    logits = constrain(logits, "batch", "vocab")
+    cache: Params = {"blocks": caches}
+    if cross_kv is not None:
+        cache["cross"] = cross_kv
+    return logits, cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                cache: Params, cache_index: jax.Array
+                ) -> Tuple[jax.Array, Params]:
+    """One-token decode. tokens (B, 1); cache from ``prefill``/``init_cache``;
+    cache_index = number of tokens already in context. Returns
+    (logits (B, V) f32, new cache)."""
+    x = embed_tokens(params["embed"], tokens, cfg.d_model)
+    x = constrain(x, "batch", None, None)
+    b = x.shape[0]
+    positions = jnp.broadcast_to(cache_index, (b, 1))
+    x, caches, _ = _run_blocks(
+        params["blocks"], cfg, x, positions, "decode",
+        caches=cache["blocks"], cross_kv=cache.get("cross"),
+        cache_index=cache_index)
+    x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    logits = lm_logits(params["embed"], x, cfg.tie_embeddings)[:, 0]
+    logits = constrain(logits, "batch", "vocab")
+    new_cache: Params = {"blocks": caches}
+    if "cross" in cache:
+        new_cache["cross"] = cache["cross"]
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               spec_only: bool = False, dtype=jnp.bfloat16,
+               source_len: int = 0) -> Params:
+    """Decode cache pytree (zeros or ShapeDtypeStructs)."""
+    f = ArrayFactory(None if spec_only else jax.random.PRNGKey(0), spec_only,
+                     dtype)
+    pattern = block_pattern(cfg)
+    reps = num_reps(cfg)
+    sf = _StackedFactory(f, reps)
+    blocks, cross = [], []
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    for spec in pattern:
+        c: Params = {}
+        if spec.mixer == "attn":
+            c_len = attn.kv_cache_len(cfg, cache_len)
+            c["k"] = sf.zeros((batch, c_len, kv, hd))
+            c["v"] = sf.zeros((batch, c_len, kv, hd))
+        else:
+            s = cfg.ssm
+            d_inner = s.expand * cfg.d_model
+            c["conv"] = sf.zeros((batch, s.d_conv - 1, d_inner))
+            c["ssm"] = sf.zeros((batch, d_inner, s.d_state), jnp.float32)
+        blocks.append(c)
+        if spec.cross:
+            cross.append({"ck": sf.zeros((batch, source_len, kv, hd)),
+                          "cv": sf.zeros((batch, source_len, kv, hd))})
+        else:
+            cross.append({})
+    cache: Params = {"blocks": blocks}
+    if cfg.is_encoder_decoder:
+        cache["cross"] = cross
+    return cache

@@ -1,0 +1,9 @@
+from repro.profiling import hw
+from repro.profiling.cost_model import (model_flops, analytic_runtime,
+                                        profile_from_cost_model)
+from repro.profiling.roofline import (RooflineReport, analyze_compiled,
+                                      collective_bytes_from_hlo)
+
+__all__ = ["hw", "model_flops", "analytic_runtime",
+           "profile_from_cost_model", "RooflineReport", "analyze_compiled",
+           "collective_bytes_from_hlo"]

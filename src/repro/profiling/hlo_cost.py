@@ -1,0 +1,427 @@
+"""Loop-aware HLO cost model (FLOPs / bytes / collective bytes from text).
+
+``compiled.cost_analysis()`` counts ``while``-loop bodies ONCE — for a
+scan-over-layers model that undercounts by ~num_layers (verified in
+tests/test_roofline.py). This module parses the post-SPMD HLO text into a
+computation graph, derives each loop's trip count from its condition
+computation, and aggregates costs recursively with trip-count multipliers:
+
+* FLOPs: ``dot`` ops (2 x numel(result) x contracted size), recursing into
+  fusions/calls/loops. Elementwise FLOPs are ignored (irrelevant next to the
+  matmuls at these shapes).
+* Bytes: HloCostAnalysis-style — per top-level instruction, operand bytes +
+  result bytes; fusion internals are NOT traversed for bytes (a fusion is
+  one read-operands/write-result unit, which is how the TPU executes it).
+* Collective bytes: per kind, derived from result shape + replica-group
+  size (operand convention; see ``repro.profiling.roofline``), x trip count
+  when inside a loop.
+
+Since the module is the PER-DEVICE program, all numbers are per device.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+\d+(?:e\d+m\d+(?:fn)?)?|pred)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-_]+)\s*(?:\(.*\))?\s*->.*{")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-_]+)\s*=\s*(.*?)\s*([\w\-]+)\(")
+_PARAM_RE = re.compile(r"%?([\w.\-_]+):\s*((?:\([^)]*\))|(?:[\w\[\],{}\s]+))")
+_ATTR_CALLS_RE = re.compile(r"calls=%?([\w.\-_]+)")
+_ATTR_TOAPPLY_RE = re.compile(r"to_apply=%?([\w.\-_]+)")
+_ATTR_BODY_RE = re.compile(r"body=%?([\w.\-_]+)")
+_ATTR_COND_RE = re.compile(r"condition=%?([\w.\-_]+)")
+_ATTR_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_INT_RE = re.compile(r"\b[su]\d+\[\]\s+constant\((\d+)\)")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_shapes: List[Tuple[str, Tuple[int, ...]]]
+    operands: List[str]
+    line: str
+
+    def result_bytes(self) -> int:
+        return sum(_numel(dims) * _DTYPE_BYTES.get(dt, 4)
+                   for dt, dims in self.result_shapes)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    shapes: Dict[str, List[Tuple[str, Tuple[int, ...]]]] = \
+        field(default_factory=dict)
+
+
+@dataclass
+class CostSummary:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: Dict[str, float] = field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def scaled(self, k: float) -> "CostSummary":
+        return CostSummary(
+            flops=self.flops * k, bytes_accessed=self.bytes_accessed * k,
+            collective_bytes={n: v * k
+                              for n, v in self.collective_bytes.items()})
+
+    def add(self, other: "CostSummary") -> None:
+        self.flops += other.flops
+        self.bytes_accessed += other.bytes_accessed
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] += v
+
+
+def _numel(dims: Tuple[int, ...]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def _parse_shapes(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        dd = tuple(int(x) for x in dims.split(",")) if dims else ()
+        out.append((dt, dd))
+    return out
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(stripped)
+            if m and stripped.endswith("{"):
+                cur = Computation(m.group(1))
+                if stripped.startswith("ENTRY"):
+                    entry = cur.name
+                # parameter types from the header
+                hdr = stripped
+                for pm in _PARAM_RE.finditer(hdr[hdr.find("(") + 1:
+                                                 hdr.rfind("->")]):
+                    cur.shapes[pm.group(1)] = _parse_shapes(pm.group(2))
+            continue
+        if stripped == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, restype, opcode = m.group(1), m.group(2), m.group(3)
+        # operand names: %refs inside the first balanced paren group
+        call = line[m.end() - 1:]
+        depth, end = 0, len(call)
+        for i, ch in enumerate(call):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = re.findall(r"%([\w.\-_]+)", call[:end])
+        instr = Instr(name=name, opcode=opcode,
+                      result_shapes=_parse_shapes(restype),
+                      operands=operands, line=line)
+        cur.instrs.append(instr)
+        cur.shapes[name] = instr.result_shapes
+    return comps, entry
+
+
+def _loop_trip_count(cond: Computation) -> int:
+    """lax.scan/fori conds compare the induction var with a constant."""
+    best = 1
+    for ins in cond.instrs:
+        m = _CONST_INT_RE.search(ins.line)
+        if m:
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(len([x for x in m.group(1).split(",") if x.strip()]), 1)
+    return 1
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    res = ins.result_shapes[0][1] if ins.result_shapes else ()
+    k = 1
+    m = _CONTRACT_RE.search(ins.line)
+    if m and ins.operands:
+        lhs_shapes = comp.shapes.get(ins.operands[0])
+        if lhs_shapes:
+            lhs = lhs_shapes[0][1]
+            for dim in m.group(1).split(","):
+                if dim.strip() and int(dim) < len(lhs):
+                    k *= lhs[int(dim)]
+    return 2.0 * _numel(res) * k
+
+
+def _operand_bytes(comp: Computation, ins: Instr) -> int:
+    total = 0
+    for op in ins.operands:
+        for dt, dims in comp.shapes.get(op, []):
+            total += _numel(dims) * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all", "iota"}
+_FLOW = {"fusion", "call", "while", "conditional", "custom-call"}
+_SLICE_OPS = {"dynamic-slice", "slice", "gather"}
+
+
+def _fusion_bytes(comps: Dict[str, Computation], comp: Computation) -> int:
+    """Fusion-aware byte model: a fusion reads each parameter once — UNLESS
+    the parameter is only consumed by (dynamic-)slice ops, in which case only
+    the slice results stream from HBM (scan-over-layers reads one layer's
+    weights per trip, not the whole stack); an in-place dynamic-update-slice
+    root writes only the update (the TPU aliases the buffer)."""
+    consumers: Dict[str, List[Instr]] = {}
+    params: List[Instr] = []
+    root: Optional[Instr] = None
+    for ins in comp.instrs:
+        if ins.opcode == "parameter":
+            params.append(ins)
+        for op in ins.operands:
+            consumers.setdefault(op, []).append(ins)
+        root = ins if "ROOT" in ins.line or ins is comp.instrs[-1] else root
+    root = root or comp.instrs[-1]
+
+    total = 0
+    passthrough: Optional[str] = None
+    if root.opcode == "dynamic-update-slice" and root.operands:
+        passthrough = root.operands[0]  # aliased buffer: not re-read
+        upd = root.operands[1] if len(root.operands) > 1 else None
+        upd_bytes = 0
+        if upd:
+            for dt, dims in comp.shapes.get(upd, []):
+                upd_bytes += _numel(dims) * _DTYPE_BYTES.get(dt, 4)
+        total += upd_bytes  # the write
+    else:
+        total += root.result_bytes()
+
+    for p in params:
+        if p.name == passthrough:
+            continue
+        cons = consumers.get(p.name, [])
+        if cons and all(c.opcode in _SLICE_OPS for c in cons):
+            total += sum(c.result_bytes() for c in cons)
+        else:
+            total += p.result_bytes()
+    return total
+
+
+def _dot_flops_recursive(comps, comp: Computation, memo) -> float:
+    """Dot flops inside a computation including nested calls (fusions can
+    contain dots)."""
+    if comp.name in memo:
+        return memo[comp.name]
+    total = 0.0
+    for ins in comp.instrs:
+        if ins.opcode == "dot":
+            total += _dot_flops(comp, ins)
+        elif ins.opcode in ("fusion", "call"):
+            sub = _called(comps, ins)
+            for s in sub:
+                total += _dot_flops_recursive(comps, comps[s], memo)
+        elif ins.opcode == "while":
+            body, cond = _while_parts(ins)
+            trips = _loop_trip_count(comps[cond]) if cond in comps else 1
+            if body in comps:
+                total += trips * _dot_flops_recursive(comps, comps[body],
+                                                      memo)
+    memo[comp.name] = total
+    return total
+
+
+def _called(comps, ins: Instr) -> List[str]:
+    out = []
+    for rex in (_ATTR_CALLS_RE, _ATTR_TOAPPLY_RE):
+        m = rex.search(ins.line)
+        if m and m.group(1) in comps:
+            out.append(m.group(1))
+    return out
+
+
+def _while_parts(ins: Instr) -> Tuple[str, str]:
+    body = _ATTR_BODY_RE.search(ins.line)
+    cond = _ATTR_COND_RE.search(ins.line)
+    return (body.group(1) if body else "", cond.group(1) if cond else "")
+
+
+def _analyze_comp(comps: Dict[str, Computation], name: str,
+                  memo: Dict[str, CostSummary]) -> CostSummary:
+    if name in memo:
+        return memo[name]
+    comp = comps[name]
+    out = CostSummary()
+    dot_memo: Dict[str, float] = {}
+    for ins in comp.instrs:
+        if ins.opcode in _SKIP_BYTES:
+            continue
+        if ins.opcode == "while":
+            body, cond = _while_parts(ins)
+            trips = _loop_trip_count(comps[cond]) if cond in comps else 1
+            if body in comps:
+                out.add(_analyze_comp(comps, body, memo).scaled(trips))
+            continue
+        if ins.opcode == "conditional":
+            m = _ATTR_BRANCHES_RE.search(ins.line)
+            if m:
+                branches = [b.strip().lstrip("%") for b in
+                            m.group(1).split(",")]
+                subs = [_analyze_comp(comps, b, memo) for b in branches
+                        if b in comps]
+                if subs:  # upper bound: the most expensive branch
+                    out.add(max(subs, key=lambda s: s.flops
+                                + s.bytes_accessed))
+            continue
+        if ins.opcode == "call":
+            for s in _called(comps, ins):
+                out.add(_analyze_comp(comps, s, memo))
+            continue
+        # plain instruction (incl. fusion = one read/write unit)
+        if ins.opcode == "fusion":
+            subs = _called(comps, ins)
+            if subs:
+                out.bytes_accessed += _fusion_bytes(comps, comps[subs[0]])
+            else:
+                out.bytes_accessed += _operand_bytes(comp, ins) \
+                    + ins.result_bytes()
+            for s in subs:
+                out.flops += _dot_flops_recursive(comps, comps[s], dot_memo)
+        elif ins.opcode == "dynamic-update-slice":
+            # in-place slice write: read + write the update only
+            upd_bytes = 0
+            if len(ins.operands) > 1:
+                for dt, dims in comp.shapes.get(ins.operands[1], []):
+                    upd_bytes += _numel(dims) * _DTYPE_BYTES.get(dt, 4)
+            out.bytes_accessed += 2 * upd_bytes
+        elif ins.opcode in _SLICE_OPS:
+            out.bytes_accessed += 2 * ins.result_bytes()
+        else:
+            out.bytes_accessed += _operand_bytes(comp, ins) \
+                + ins.result_bytes()
+        if ins.opcode == "dot":
+            out.flops += _dot_flops(comp, ins)
+        elif ins.opcode.startswith(_COLLECTIVES) or any(
+                ins.opcode.startswith(c) for c in _COLLECTIVES):
+            if ins.opcode.endswith("-done"):
+                continue
+            kind = next(c for c in _COLLECTIVES if ins.opcode.startswith(c))
+            shapes = [(_numel(d) * _DTYPE_BYTES.get(dt, 4))
+                      for dt, d in ins.result_shapes]
+            if not shapes:
+                continue
+            res_bytes = max(shapes) if ins.opcode.endswith("-start") \
+                else sum(shapes)
+            g = _group_size(ins.line)
+            if kind == "all-gather":
+                out.collective_bytes[kind] += res_bytes / g
+            elif kind == "reduce-scatter":
+                out.collective_bytes[kind] += res_bytes * g
+            else:
+                out.collective_bytes[kind] += res_bytes
+    memo[name] = out
+    return out
+
+
+def analyze_hlo_text(text: str) -> CostSummary:
+    comps, entry = parse_hlo(text)
+    if entry is None or entry not in comps:
+        return CostSummary()
+    return _analyze_comp(comps, entry, {})
+
+
+def top_contributors(text: str, k: int = 12,
+                     metric: str = "bytes") -> List[Tuple[float, str]]:
+    """Hillclimbing diagnostic: the k most expensive individual ops with
+    their loop multipliers applied. metric in {'bytes', 'flops',
+    'collective'}."""
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        return []
+    out: List[Tuple[float, str]] = []
+
+    def visit(name: str, mult: float):
+        comp = comps[name]
+        dot_memo: Dict[str, float] = {}
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                body, cond = _while_parts(ins)
+                trips = _loop_trip_count(comps[cond]) if cond in comps else 1
+                if body in comps:
+                    visit(body, mult * trips)
+                continue
+            if ins.opcode == "call":
+                for s in _called(comps, ins):
+                    visit(s, mult)
+                continue
+            if ins.opcode in _SKIP_BYTES:
+                continue
+            if metric == "bytes":
+                if ins.opcode == "fusion":
+                    subs = _called(comps, ins)
+                    raw = _fusion_bytes(comps, comps[subs[0]]) if subs else \
+                        _operand_bytes(comp, ins) + ins.result_bytes()
+                elif ins.opcode == "dynamic-update-slice" \
+                        or ins.opcode in _SLICE_OPS:
+                    raw = 2 * ins.result_bytes()
+                else:
+                    raw = _operand_bytes(comp, ins) + ins.result_bytes()
+                val = raw * mult
+            elif metric == "flops":
+                if ins.opcode == "dot":
+                    val = _dot_flops(comp, ins) * mult
+                elif ins.opcode == "fusion":
+                    val = sum(_dot_flops_recursive(comps, comps[s], dot_memo)
+                              for s in _called(comps, ins)) * mult
+                else:
+                    val = 0.0
+            else:  # collective
+                if any(ins.opcode.startswith(c) for c in _COLLECTIVES) \
+                        and not ins.opcode.endswith("-done"):
+                    val = ins.result_bytes() * mult
+                else:
+                    val = 0.0
+            if val > 0:
+                out.append((val, f"x{mult:.0f} {ins.opcode} "
+                                 f"{ins.line.strip()[:140]}"))
+
+    visit(entry, 1.0)
+    out.sort(key=lambda t: -t[0])
+    return out[:k]

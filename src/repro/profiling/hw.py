@@ -1,0 +1,12 @@
+"""TPU v5e hardware constants (the assignment's target chip)."""
+
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip
+HBM_BW = 819e9                # bytes/s per chip
+HBM_BYTES = 16 * 2 ** 30      # 16 GiB per chip
+ICI_BW = 50e9                 # bytes/s per link (~ per-chip injection)
+DCN_BW = 25e9                 # bytes/s per host crossing pods (approx)
+VMEM_BYTES = 128 * 2 ** 20    # ~128 MiB vector memory per chip
+
+# Production mesh (assignment): one pod = (data=16, model=16) = 256 chips,
+# multi-pod = (pod=2, data=16, model=16) = 512.
+CHIPS_PER_POD = 256

@@ -1,0 +1,205 @@
+"""Roofline extraction from compiled dry-run artifacts (§Roofline).
+
+    compute term    = HLO_FLOPs / (chips x peak FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM bandwidth)
+    collective term = collective bytes / (chips x ICI link bandwidth)
+
+``compiled.cost_analysis()`` provides HLO FLOPs / bytes. Collective bytes are
+NOT in cost_analysis — they are parsed from the post-SPMD HLO text
+(``compiled.as_text()``): we sum the typed operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(counting ``-start`` ops once, skipping ``-done``).
+
+Note on per-device semantics: the post-partitioning module is the PER-DEVICE
+program, so parsed shapes are shard shapes and the collective term is per
+chip directly. ``cost_analysis`` FLOPs on SPMD executables are per-device as
+well (verified in tests against a hand-counted matmul).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.profiling import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# `bf16[8,128]{1,0}` or `f32[]`
+_SHAPE_RE = re.compile(r"\b([a-z]+\d+(?:e\d+m\d+(?:fn)?)?|pred)\[([\d,]*)\]")
+# `%name = <result types> <op-name>(` — post-optimization HLO does not
+# repeat operand types inline, so operand sizes are derived from the RESULT
+# type and the replica-group size.
+_OP_RE = re.compile(
+    r"=\s*(?P<res>[^=]*?)\s*"
+    r"\b(?P<kind>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\(")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(len([x for x in m.group(1).split(",") if x.strip()]), 1)
+    return 1
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Per-device operand bytes per collective kind, parsed from post-SPMD
+    HLO text (the per-device program, so shapes are shard shapes).
+
+    operand size from the result type:
+      all-reduce / all-to-all / collective-permute: operand == result
+      all-gather:      operand == result / group_size
+      reduce-scatter:  operand == result * group_size
+    ``-done`` ops are skipped (their ``-start`` twin is counted once).
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group("kind")
+        res = m.group("res")
+        shapes = [_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(res)]
+        if not shapes:
+            continue
+        # async -start results are tuples (operand, result, ...): use the
+        # largest entry as the result buffer
+        res_bytes = max(shapes) if m.group("start") else sum(shapes)
+        g = _group_size(line)
+        if kind == "all-gather":
+            out[kind] += res_bytes // g
+        elif kind == "reduce-scatter":
+            out[kind] += res_bytes * g
+        else:
+            out[kind] += res_bytes
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float             # per device
+    hlo_bytes: float             # per device
+    collective_bytes: float      # per device
+    collective_breakdown: Dict[str, int]
+    model_flops_total: float     # useful FLOPs of the whole step (all chips)
+    model_bytes_total: float = 0.0  # minimum HBM traffic (all chips)
+    peak_memory_bytes: Optional[float] = None
+    compile_seconds: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / hw.PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / hw.HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / hw.ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs x chips): remat/redundancy waste."""
+        denom = self.hlo_flops * self.chips
+        return self.model_flops_total / denom if denom else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Proximity to the applicable roofline (the §Perf score): the
+        useful work's own bound time (max of its compute and memory terms —
+        decode is legitimately memory-bound) over the achieved bound time."""
+        t_useful_c = self.model_flops_total / (
+            self.chips * hw.PEAK_FLOPS_BF16)
+        t_useful_m = self.model_bytes_total / (self.chips * hw.HBM_BW)
+        t_useful = max(t_useful_c, t_useful_m)
+        return t_useful / self.bound_time if self.bound_time else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips, "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collective_breakdown": self.collective_breakdown,
+            "model_flops_total": self.model_flops_total,
+            "model_bytes_total": self.model_bytes_total,
+            "peak_memory_bytes": self.peak_memory_bytes,
+            "compile_seconds": self.compile_seconds,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def analyze_compiled(compiled, arch: str, shape: str, mesh_name: str,
+                     chips: int, model_flops_total: float,
+                     model_bytes_total: float = 0.0,
+                     compile_seconds: float = 0.0) -> RooflineReport:
+    # Loop-aware text analysis: XLA's cost_analysis() counts while-loop
+    # (scan-over-layers!) bodies once; repro.profiling.hlo_cost multiplies
+    # by derived trip counts (validated exact in tests/test_roofline.py).
+    from repro.profiling.hlo_cost import analyze_hlo_text
+    text = compiled.as_text()
+    summary = analyze_hlo_text(text)
+    flops = summary.flops
+    byt = summary.bytes_accessed
+    colls = {k: int(v) for k, v in summary.collective_bytes.items()}
+    peak = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            peak = float(
+                getattr(ma, "temp_size_in_bytes", 0)
+                + getattr(ma, "argument_size_in_bytes", 0)
+                + getattr(ma, "output_size_in_bytes", 0)
+                - getattr(ma, "alias_size_in_bytes", 0))
+    except Exception:
+        pass
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byt,
+        collective_bytes=float(sum(colls.values())),
+        collective_breakdown=colls,
+        model_flops_total=model_flops_total,
+        model_bytes_total=model_bytes_total,
+        peak_memory_bytes=peak, compile_seconds=compile_seconds)

@@ -1,0 +1,8 @@
+from repro.serving.engine import InferenceEngine, profile_engine
+from repro.serving.tinymodels import (TinyClassifierConfig, train_tiny_family,
+                                      synthetic_classification_data)
+from repro.serving.runtime import CascadeServer, Request
+
+__all__ = ["InferenceEngine", "profile_engine", "TinyClassifierConfig",
+           "train_tiny_family", "synthetic_classification_data",
+           "CascadeServer", "Request"]

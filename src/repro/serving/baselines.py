@@ -1,0 +1,212 @@
+"""Baseline serving policies (paper §6.2), executed on the same
+discrete-event simulator as CascadeServe for apples-to-apples cost curves.
+
+* DynBa      — static provisioning, ONE model on all devices, dynamic
+               batching (the paper's own batching mechanism).
+* MS+        — Model-Switching upgraded: single-model gears selected by
+               measured QPS (Clipper-style batching, max replication packing).
+* Cocktail+  — bagging-ensemble serving with idealised autoscaling: ground-
+               truth workload forecast, instant VMs (+ warmup), coarse
+               scaling interval. Ensembles majority-vote; cost = the
+               time-average of ACTIVE devices.
+
+Each baseline exposes ``build(profiles, hardware, slo, qps_max)`` returning
+(gears, selector, replicas, num_devices) for ``ServingSimulator.run_policy``,
+plus a small hyperparameter grid (the paper grid-searches baselines).
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cascade import Cascade, enumerate_model_orderings
+from repro.core.gears import Gear, GearPlan, SLO, uniform_load_fractions
+from repro.core.lp import Replica
+from repro.core.plan_state import HardwareSpec
+from repro.core.profiles import ProfileSet
+from repro.core.simulator import GearSelector, make_gear
+
+
+def _replicate_everywhere(profiles: ProfileSet, models: Sequence[str],
+                          hw: HardwareSpec) -> List[Replica]:
+    """Greedy collocation: every model on every device while memory lasts
+    (paper's MS+ adaptation: 'maximize replication and throughput').
+    First pass guarantees each model one replica (FFD); second pass fills
+    remaining memory with extra replicas, large models first."""
+    reps: List[Replica] = []
+    free = np.full(hw.num_devices, hw.mem_per_device)
+    by_size = sorted(models, key=lambda m: -profiles[m].mem_bytes)
+    for m in by_size:  # guarantee pass
+        d = int(np.argmax(free))
+        if free[d] >= profiles[m].mem_bytes:
+            free[d] -= profiles[m].mem_bytes
+            reps.append(Replica(m, d, profiles[m].runtime_per_sample(1.0)))
+    for m in by_size:  # replication pass
+        for d in range(hw.num_devices):
+            if any(r.model == m and r.device == d for r in reps):
+                continue
+            if free[d] >= profiles[m].mem_bytes:
+                free[d] -= profiles[m].mem_bytes
+                reps.append(Replica(m, d,
+                                    profiles[m].runtime_per_sample(1.0)))
+    return reps
+
+
+# ---------------------------------------------------------------------------
+# DynBa
+# ---------------------------------------------------------------------------
+
+@dataclass
+class DynBaPolicy:
+    model: str
+
+    def build(self, profiles: ProfileSet, hw: HardwareSpec, slo: SLO,
+              qps_max: float):
+        reps = _replicate_everywhere(profiles, [self.model], hw)
+        gear = make_gear(Cascade((self.model,), ()), reps)
+        return [gear], (lambda t, q, g, q0: 0), reps, hw.num_devices
+
+    @staticmethod
+    def grid(profiles: ProfileSet) -> List["DynBaPolicy"]:
+        return [DynBaPolicy(m) for m in profiles]
+
+
+# ---------------------------------------------------------------------------
+# MS+ (Model Switching on GPUs with Clipper batching)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class MSPlusPolicy:
+    n_ranges: int = 8
+    # safety factor on the capacity estimate when choosing the model per range
+    headroom: float = 1.0
+
+    def build(self, profiles: ProfileSet, hw: HardwareSpec, slo: SLO,
+              qps_max: float):
+        order = enumerate_model_orderings(profiles)  # cheap -> expensive
+        reps = _replicate_everywhere(profiles, order, hw)
+        n_reps = {m: sum(1 for r in reps if r.model == m) for m in order}
+        gears: List[Gear] = []
+        width = qps_max / self.n_ranges
+        for i in range(self.n_ranges):
+            hi = (i + 1) * width
+            # most accurate single model whose replicas sustain `hi`
+            best = order[0]
+            for m in order:
+                cap = n_reps.get(m, 0) * profiles[m].max_throughput()
+                if cap * self.headroom >= hi and (
+                        profiles[m].accuracy >= profiles[best].accuracy):
+                    best = m
+            gears.append(make_gear(Cascade((best,), ()), reps))
+
+        def selector(t, measured_qps, cur, q0):
+            return min(int(measured_qps / width), self.n_ranges - 1)
+
+        return gears, selector, reps, hw.num_devices
+
+    @staticmethod
+    def grid(profiles: ProfileSet) -> List["MSPlusPolicy"]:
+        return [MSPlusPolicy(headroom=h) for h in (0.7, 1.0, 1.3)]
+
+
+# ---------------------------------------------------------------------------
+# Cocktail+ (idealised bagging-ensemble autoscaler)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CocktailPlusPolicy:
+    scale_interval: float = 10.0   # coarse autoscaling period (paper §6.3)
+    target_util: float = 0.7
+    ensemble_size: int = 3         # odd, majority vote
+    forecast: Optional[np.ndarray] = None  # ground-truth per-second QPS
+
+    def _pick_ensemble(self, profiles: ProfileSet, slo: SLO) -> Tuple[str, ...]:
+        """Cheapest odd ensemble whose majority vote matches the most
+        accurate single model (Cocktail's premise)."""
+        order = enumerate_model_orderings(profiles)
+        target_acc = max(p.accuracy for p in profiles.values())
+        if slo.kind == "accuracy":
+            target_acc = slo.min_accuracy
+        best: Optional[Tuple[str, ...]] = None
+        best_cost = math.inf
+        for combo in itertools.combinations(order, self.ensemble_size):
+            votes = np.stack([profiles[m].validation.correct for m in combo])
+            acc = float((votes.sum(0) * 2 > len(combo)).mean())
+            cost = sum(profiles[m].runtime_per_sample() for m in combo)
+            if acc >= target_acc - 1e-3 and cost < best_cost:
+                best, best_cost = combo, cost
+        if best is None:
+            best = tuple(order[-self.ensemble_size:])
+        return best
+
+    def build(self, profiles: ProfileSet, hw: HardwareSpec, slo: SLO,
+              qps_max: float):
+        members = self._pick_ensemble(profiles, slo)
+        reps = _replicate_everywhere(profiles, members, hw)
+        # gear k = ensemble served by the first (k+1) devices
+        gears: List[Gear] = []
+        for k in range(hw.num_devices):
+            active = [i for i, r in enumerate(reps) if r.device <= k]
+            lf = {}
+            for m in members:
+                idxs = [i for i in active if reps[i].model == m]
+                if idxs:
+                    lf[m] = {i: 1.0 / len(idxs) for i in idxs}
+            g = Gear(cascade=Cascade(members, (0.0,) * (len(members) - 1)),
+                     min_queue_lens={m: 1 for m in members},
+                     load_fractions=lf)
+            g.mode = "ensemble"  # type: ignore[attr-defined]
+            gears.append(g)
+
+        cost_per_sample = sum(
+            profiles[m].runtime(profiles[m].batch_sizes[-1])
+            / profiles[m].batch_sizes[-1] for m in members)
+        forecast = self.forecast
+        interval = self.scale_interval
+        n_dev = hw.num_devices
+
+        def selector(t, measured_qps, cur, q0):
+            # ground-truth forecast over the next scaling window
+            if forecast is not None:
+                lo = int(t)
+                hor = forecast[lo:lo + int(interval)]
+                peak = float(hor.max()) if len(hor) else measured_qps
+            else:
+                peak = measured_qps
+            need = peak * cost_per_sample / max(self.target_util, 1e-3)
+            k = int(np.clip(math.ceil(need), 1, n_dev)) - 1
+            # coarse interval: only change at interval boundaries
+            if int(t / interval) == int((t - 0.1) / interval) and cur != k:
+                return cur
+            return k
+
+        return gears, selector, reps, hw.num_devices
+
+    @staticmethod
+    def grid(profiles: ProfileSet, forecast: Optional[np.ndarray] = None
+             ) -> List["CocktailPlusPolicy"]:
+        out = []
+        for interval in (5.0, 10.0, 20.0):
+            for util in (0.5, 0.7, 0.9):
+                out.append(CocktailPlusPolicy(
+                    scale_interval=interval, target_util=util,
+                    forecast=forecast))
+        return out
+
+    @staticmethod
+    def active_device_cost(result, gears) -> float:
+        """Time-averaged active devices (autoscaled cost metric)."""
+        # gear index k <=> k+1 active devices; integrate over switches
+        switches = result.gear_switches
+        if not switches:
+            return 1.0
+        total, t_prev, k_prev = 0.0, 0.0, 0
+        for t, k in switches:
+            total += (t - t_prev) * (k_prev + 1)
+            t_prev, k_prev = t, k
+        total += (result.horizon - t_prev) * (k_prev + 1)
+        return total / result.horizon

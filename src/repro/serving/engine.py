@@ -1,0 +1,83 @@
+"""Inference engine: bucketed-batch jitted execution of one model.
+
+XLA wants static shapes, so the engine pre-compiles one executable per
+power-of-two batch bucket and pads incoming batches up to the bucket
+(DESIGN.md §3.2 — the TPU adaptation of the paper's dynamic batching).
+``profile_engine`` measures wall-clock batch runtimes — the ModelProfile the
+gear planner and simulator consume for real models.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.profiles import ModelProfile, ValidationRecord
+
+
+def _bucket(n: int, buckets: Sequence[int]) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+class InferenceEngine:
+    """Wraps apply_fn(params, tokens) -> scores with bucketed compilation."""
+
+    def __init__(self, name: str, apply_fn: Callable, params,
+                 buckets: Sequence[int] = (1, 2, 4, 8, 16, 32, 64, 128)):
+        self.name = name
+        self.params = params
+        self.buckets = tuple(sorted(buckets))
+        self._fn = jax.jit(apply_fn)
+
+    def warmup(self, seq_len: int) -> None:
+        for b in self.buckets:
+            tok = jnp.zeros((b, seq_len), jnp.int32)
+            jax.block_until_ready(self._fn(self.params, tok))
+
+    def infer(self, tokens: np.ndarray) -> np.ndarray:
+        """tokens (n, L) -> scores (n, C); pads to the bucket internally."""
+        n = tokens.shape[0]
+        b = _bucket(n, self.buckets)
+        if n > self.buckets[-1]:
+            # split oversized batches
+            out = [self.infer(tokens[i:i + self.buckets[-1]])
+                   for i in range(0, n, self.buckets[-1])]
+            return np.concatenate(out)
+        if b != n:
+            pad = np.zeros((b - n,) + tokens.shape[1:], tokens.dtype)
+            tokens = np.concatenate([tokens, pad])
+        scores = self._fn(self.params, jnp.asarray(tokens))
+        return np.asarray(jax.block_until_ready(scores))[:n]
+
+
+def profile_engine(engine: InferenceEngine, seq_len: int,
+                   batch_sizes: Sequence[int] = (1, 2, 4, 8, 16, 32, 64),
+                   repeats: int = 5, mem_bytes: Optional[float] = None,
+                   validation: Optional[ValidationRecord] = None
+                   ) -> ModelProfile:
+    """Measure wall-clock batch runtimes (median of ``repeats``)."""
+    engine.warmup(seq_len)
+    rts = []
+    for b in batch_sizes:
+        tok = np.zeros((b, seq_len), np.int32)
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            engine.infer(tok)
+            times.append(time.perf_counter() - t0)
+        rts.append(float(np.median(times)))
+    if mem_bytes is None:
+        mem_bytes = sum(np.prod(l.shape) * 4
+                        for l in jax.tree.leaves(engine.params))
+    return ModelProfile(
+        name=engine.name, mem_bytes=float(mem_bytes),
+        batch_sizes=np.asarray(batch_sizes, np.float64),
+        batch_runtimes=np.asarray(rts),
+        validation=validation or ValidationRecord(
+            certs=np.zeros(1), correct=np.ones(1, bool)))

@@ -1,0 +1,228 @@
+"""Online serving runtime (paper §5) — the REAL system.
+
+Producer-consumer architecture: the producer accepts requests, measures QPS
+over a fixed interval, switches gears (with the α-hysteresis rule), and
+routes each request to a replica queue of the gear's first model. One
+consumer thread per device polls its replicas' queues and triggers inference
+when a queue reaches the gear's min-queue-length (or the head-of-line
+timeout fires); non-certain samples cascade to the next model's queue.
+
+In the paper each box is a Ray actor; here they are threads in one process
+(the decision logic — the paper's contribution — is identical; process
+isolation is an orchestration detail, DESIGN.md §3). Wall-clock timing makes
+this the ground truth for the simulator-fidelity benchmark (Fig. 13).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.certainty import CERTAINTY_ESTIMATORS
+from repro.core.gears import GearPlan
+from repro.serving.engine import InferenceEngine
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray
+    t_arrive: float = 0.0
+    t_done: float = 0.0
+    pred: int = -1
+    cert: float = 0.0
+    resolver: int = -1          # cascade stage that resolved it
+    gear_idx: int = 0
+    stage: int = 0
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_arrive
+
+
+class _ReplicaQueue:
+    def __init__(self):
+        self.q: deque = deque()
+        self.lock = threading.Lock()
+
+    def push(self, req: Request, t: float):
+        with self.lock:
+            self.q.append((req, t))
+
+    def pop_batch(self, max_n: int) -> List:
+        with self.lock:
+            n = min(len(self.q), max_n)
+            return [self.q.popleft() for _ in range(n)]
+
+    def __len__(self):
+        return len(self.q)
+
+    def head_time(self) -> Optional[float]:
+        with self.lock:
+            return self.q[0][1] if self.q else None
+
+
+class CascadeServer:
+    """Gear-plan-driven online server over real InferenceEngines."""
+
+    def __init__(self, plan: GearPlan, engines: Dict[str, InferenceEngine],
+                 estimator: str = "top2_gap", alpha: float = 8.0,
+                 measure_interval: float = 0.1, max_wait: float = 0.05,
+                 max_batch: int = 128):
+        self.plan = plan
+        self.engines = engines
+        self.est = CERTAINTY_ESTIMATORS[estimator]
+        self.alpha = alpha
+        self.measure_interval = measure_interval
+        self.max_wait = max_wait
+        self.max_batch = max_batch
+
+        self.queues: List[_ReplicaQueue] = [
+            _ReplicaQueue() for _ in plan.replicas]
+        self._reps_of: Dict[str, List[int]] = {}
+        for i, r in enumerate(plan.replicas):
+            self._reps_of.setdefault(r.model, []).append(i)
+        self._reps_on_dev: Dict[int, List[int]] = {}
+        for i, r in enumerate(plan.replicas):
+            self._reps_on_dev.setdefault(r.device, []).append(i)
+
+        self.cur_gear = 0
+        self._arr_count = 0
+        self._count_lock = threading.Lock()
+        self._rng = np.random.default_rng(0)
+        self._stop = threading.Event()
+        self.completed: List[Request] = []
+        self._done_lock = threading.Lock()
+        self.gear_switches: List = []
+        self._threads: List[threading.Thread] = []
+
+    # ---------------------------------------------------------------- routing
+    def _route(self, model: str) -> int:
+        gear = self.plan.gears[self.cur_gear]
+        fracs = gear.load_fractions.get(model)
+        idxs = self._reps_of[model]
+        if not fracs:
+            return idxs[self._rng.integers(len(idxs))]
+        u = self._rng.random()
+        acc = 0.0
+        for ridx, f in fracs.items():
+            acc += f
+            if u <= acc + 1e-12:
+                return ridx
+        return next(iter(fracs))
+
+    def submit(self, req: Request) -> None:
+        req.t_arrive = time.monotonic()
+        with self._count_lock:
+            self._arr_count += 1
+        req.gear_idx = self.cur_gear
+        gear = self.plan.gears[self.cur_gear]
+        req.stage = 0
+        self.queues[self._route(gear.cascade.models[0])].push(
+            req, req.t_arrive)
+
+    # -------------------------------------------------------------- producer
+    def _producer_loop(self):
+        """QPS measurement + gear switching (§5)."""
+        while not self._stop.is_set():
+            time.sleep(self.measure_interval)
+            with self._count_lock:
+                measured = self._arr_count / self.measure_interval
+                self._arr_count = 0
+            gear = self.plan.gears[self.cur_gear]
+            q0 = sum(len(self.queues[i])
+                     for i in self._reps_of[gear.cascade.models[0]])
+            target = self.plan.gear_index_for_qps(measured)
+            if target < self.cur_gear and measured < self.alpha * q0:
+                continue  # hysteresis: drain the backlog first
+            if target != self.cur_gear:
+                self.gear_switches.append((time.monotonic(), target))
+                self.cur_gear = target
+
+    # -------------------------------------------------------------- consumer
+    def _consumer_loop(self, device: int):
+        my_reps = self._reps_on_dev.get(device, [])
+        while not self._stop.is_set():
+            ran = False
+            now = time.monotonic()
+            gear = self.plan.gears[self.cur_gear]
+            for ridx in my_reps:
+                q = self.queues[ridx]
+                if not len(q):
+                    continue
+                model = self.plan.replicas[ridx].model
+                b_min = gear.min_queue_lens.get(model, 1)
+                head = q.head_time()
+                if len(q) < b_min and (head is None or
+                                       now - head < self.max_wait):
+                    continue
+                batch = q.pop_batch(self.max_batch)
+                if not batch:
+                    continue
+                self._run_batch(model, batch)
+                ran = True
+            if not ran:
+                time.sleep(0.0005)
+
+    def _run_batch(self, model: str, batch: List) -> None:
+        reqs = [r for r, _ in batch]
+        tokens = np.stack([r.tokens for r in reqs])
+        scores = self.engines[model].infer(tokens)
+        certs = np.asarray(self.est(scores))
+        preds = scores.argmax(-1)
+        t = time.monotonic()
+        for i, req in enumerate(reqs):
+            gear = self.plan.gears[req.gear_idx]
+            casc = gear.cascade
+            stage = req.stage
+            if stage < len(casc.thresholds) and \
+                    certs[i] < casc.thresholds[stage]:
+                req.stage += 1
+                nxt = casc.models[stage + 1]
+                self.queues[self._route(nxt)].push(req, t)
+            else:
+                req.t_done = t
+                req.pred = int(preds[i])
+                req.cert = float(certs[i])
+                req.resolver = stage
+                with self._done_lock:
+                    self.completed.append(req)
+
+    # ------------------------------------------------------------- lifecycle
+    def start(self) -> None:
+        self._stop.clear()
+        self._threads = [threading.Thread(target=self._producer_loop,
+                                          daemon=True)]
+        for d in range(self.plan.num_devices):
+            self._threads.append(threading.Thread(
+                target=self._consumer_loop, args=(d,), daemon=True))
+        for t in self._threads:
+            t.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=2.0)
+
+    def run_trace(self, requests: Sequence[Request],
+                  qps_per_sec: np.ndarray, drain: float = 2.0
+                  ) -> List[Request]:
+        """Open-loop replay: issue requests per the trace regardless of
+        completion (paper §6.2)."""
+        from repro.core.simulator import trace_to_arrivals
+        arrivals = trace_to_arrivals(qps_per_sec)
+        assert len(requests) >= len(arrivals)
+        self.start()
+        t0 = time.monotonic()
+        for i, at in enumerate(arrivals):
+            delay = t0 + at - time.monotonic()
+            if delay > 0:
+                time.sleep(delay)
+            self.submit(requests[i])
+        time.sleep(drain)
+        self.stop()
+        return list(self.completed)

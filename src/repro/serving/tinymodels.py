@@ -1,0 +1,220 @@
+"""Tiny transformer classifier family for the REAL serving path.
+
+The paper's BERT workload is a family of five fine-tuned BERT sizes on
+Sentiment-140. We recreate the *structure*: a synthetic text-classification
+task with an easy/hard split (easy samples carry a strong lexical signal any
+model learns; hard samples encode the label in token ORDER, which only
+higher-capacity models pick up) and a family of tiny transformers trained to
+different accuracies on CPU in seconds. This yields exactly the Fig.-1
+latency/accuracy spread plus the cascade-friendly certainty structure, on
+REAL models that the runtime serves and the fidelity benchmark times.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.certainty import top2_gap
+from repro.core.profiles import ModelProfile, ValidationRecord
+
+
+@dataclass(frozen=True)
+class TinyClassifierConfig:
+    name: str
+    d_model: int
+    num_layers: int
+    num_heads: int
+    vocab: int = 64
+    n_classes: int = 2
+    seq_len: int = 32
+    d_ff_mult: int = 2
+
+
+TINY_FAMILY: Tuple[TinyClassifierConfig, ...] = (
+    TinyClassifierConfig("t-tiny", 16, 1, 2),
+    TinyClassifierConfig("t-mini", 32, 1, 2),
+    TinyClassifierConfig("t-small", 48, 2, 4),
+    TinyClassifierConfig("t-medium", 64, 3, 4),
+    TinyClassifierConfig("t-base", 96, 4, 4),
+)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic task: easy (lexical) + hard (positional) samples
+# ---------------------------------------------------------------------------
+
+def synthetic_classification_data(n: int, seq_len: int = 32, vocab: int = 64,
+                                  hard_frac: float = 0.35, seed: int = 0
+                                  ) -> Tuple[np.ndarray, np.ndarray,
+                                             np.ndarray]:
+    """Returns (tokens (N, L), labels (N,), is_hard (N,)).
+
+    Easy: 3 tokens from the class's signal set {2,3,4} / {5,6,7} planted.
+    Hard: one marker pair (8, 9); label = which comes first.
+    """
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(10, vocab, size=(n, seq_len)).astype(np.int32)
+    labels = rng.integers(0, 2, size=n).astype(np.int32)
+    is_hard = rng.random(n) < hard_frac
+    for i in range(n):
+        pos = rng.choice(seq_len, size=4, replace=False)
+        if not is_hard[i]:
+            sig = [2, 3, 4] if labels[i] == 0 else [5, 6, 7]
+            tokens[i, pos[:3]] = rng.choice(sig, size=3)
+        else:
+            a, b = sorted(pos[:2])
+            first, second = (8, 9) if labels[i] == 0 else (9, 8)
+            tokens[i, a] = first
+            tokens[i, b] = second
+    return tokens, labels, is_hard
+
+
+# ---------------------------------------------------------------------------
+# Model: embeddings + transformer blocks + mean-pool + linear head
+# ---------------------------------------------------------------------------
+
+def init_tiny(cfg: TinyClassifierConfig, rng: jax.Array) -> Dict:
+    ks = jax.random.split(rng, 3 + cfg.num_layers)
+    d, h = cfg.d_model, cfg.num_heads
+
+    def dense(k, i, o):
+        return jax.random.normal(k, (i, o), jnp.float32) * (i ** -0.5)
+
+    params = {
+        "embed": jax.random.normal(ks[0], (cfg.vocab, d)) * 0.05,
+        "pos": jax.random.normal(ks[1], (cfg.seq_len, d)) * 0.05,
+        "head": dense(ks[2], d, cfg.n_classes),
+        "blocks": [],
+    }
+    for li in range(cfg.num_layers):
+        k = jax.random.split(ks[3 + li], 5)
+        params["blocks"].append({
+            "wq": dense(k[0], d, d), "wk": dense(k[1], d, d),
+            "wv": dense(k[2], d, d), "wo": dense(k[3], d, d),
+            "w1": dense(k[4], d, cfg.d_ff_mult * d),
+            "w2": dense(k[4], cfg.d_ff_mult * d, d),
+        })
+    return params
+
+
+def apply_tiny(cfg: TinyClassifierConfig, params: Dict, tokens: jax.Array
+               ) -> jax.Array:
+    """tokens (B, L) int32 -> class scores (B, C) f32."""
+    b, l = tokens.shape
+    x = params["embed"][tokens] + params["pos"][None, :l]
+    h = cfg.num_heads
+    hd = cfg.d_model // h
+    for blk in params["blocks"]:
+        q = (x @ blk["wq"]).reshape(b, l, h, hd)
+        k = (x @ blk["wk"]).reshape(b, l, h, hd)
+        v = (x @ blk["wv"]).reshape(b, l, h, hd)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, l, cfg.d_model)
+        x = x + o @ blk["wo"]
+        x = x + jax.nn.relu(x @ blk["w1"]) @ blk["w2"]
+    pooled = x.mean(axis=1)
+    return pooled @ params["head"]
+
+
+def train_tiny(cfg: TinyClassifierConfig, tokens: np.ndarray,
+               labels: np.ndarray, steps: int = 300, batch: int = 128,
+               lr: float = 3e-3, seed: int = 0) -> Dict:
+    params = init_tiny(cfg, jax.random.PRNGKey(seed))
+    opt = jax.tree.map(lambda p: jnp.zeros_like(p), params)  # momentum
+
+    def loss_fn(p, tok, lab):
+        logits = apply_tiny(cfg, p, tok)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, lab[:, None], 1))
+
+    @jax.jit
+    def step(p, m, tok, lab):
+        g = jax.grad(loss_fn)(p, tok, lab)
+        m = jax.tree.map(lambda mi, gi: 0.9 * mi + gi, m, g)
+        p = jax.tree.map(lambda pi, mi: pi - lr * mi, p, m)
+        return p, m
+
+    rng = np.random.default_rng(seed)
+    n = len(tokens)
+    for _ in range(steps):
+        idx = rng.integers(0, n, batch)
+        params, opt = step(params, opt,
+                           jnp.asarray(tokens[idx]), jnp.asarray(labels[idx]))
+    return params
+
+
+# per-size training budgets: capacity x steps is what separates the family
+# on the hard (positional) half of the task — the Fig. 1 accuracy spread
+_FAMILY_STEPS = (400, 500, 700, 1000, 1400)
+_FAMILY_LR = (2e-2, 2e-2, 1e-2, 8e-3, 5e-3)
+
+
+def train_tiny_family(n_train: int = 3072, n_val: int = 1024,
+                      seed: int = 0, cache_path: str = "",
+                      family: Tuple[TinyClassifierConfig, ...] = TINY_FAMILY,
+                      steps_scale: float = 1.0
+                      ) -> Tuple[Dict[str, Dict], Dict[str, np.ndarray],
+                                 np.ndarray, np.ndarray]:
+    """Train the family; returns (params_by_name, val_scores_by_name,
+    val_tokens, val_labels). With ``cache_path``, loads/saves an .npz
+    artifact so benchmarks don't retrain."""
+    import os
+    if cache_path and os.path.exists(cache_path):
+        return load_tiny_family(cache_path, family)
+    tok_tr, lab_tr, _ = synthetic_classification_data(n_train, seed=seed)
+    tok_va, lab_va, _ = synthetic_classification_data(n_val, seed=seed + 1)
+    params_by, scores_by = {}, {}
+    for i, cfg in enumerate(family):
+        params = train_tiny(
+            cfg, tok_tr, lab_tr,
+            steps=max(1, int(_FAMILY_STEPS[i % 5] * steps_scale)),
+            lr=_FAMILY_LR[i % 5], batch=64, seed=seed + i)
+        params_by[cfg.name] = params
+        scores_by[cfg.name] = np.asarray(
+            apply_tiny(cfg, params, jnp.asarray(tok_va)))
+    if cache_path:
+        save_tiny_family(cache_path, params_by, scores_by, tok_va, lab_va)
+    return params_by, scores_by, tok_va, lab_va
+
+
+def save_tiny_family(path: str, params_by: Dict, scores_by: Dict,
+                     tok_va: np.ndarray, lab_va: np.ndarray) -> None:
+    import os
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat: Dict[str, np.ndarray] = {"val_tokens": tok_va, "val_labels": lab_va}
+    for name, params in params_by.items():
+        leaves, _ = jax.tree_util.tree_flatten(params)
+        for i, leaf in enumerate(leaves):
+            flat[f"p::{name}::{i}"] = np.asarray(leaf)
+        flat[f"s::{name}"] = scores_by[name]
+    np.savez_compressed(path, **flat)
+
+
+def load_tiny_family(path: str,
+                     family: Tuple[TinyClassifierConfig, ...] = TINY_FAMILY
+                     ) -> Tuple[Dict, Dict, np.ndarray, np.ndarray]:
+    data = np.load(path)
+    tok_va, lab_va = data["val_tokens"], data["val_labels"]
+    params_by, scores_by = {}, {}
+    for cfg in family:
+        template = init_tiny(cfg, jax.random.PRNGKey(0))
+        leaves, treedef = jax.tree_util.tree_flatten(template)
+        loaded = [jnp.asarray(data[f"p::{cfg.name}::{i}"])
+                  for i in range(len(leaves))]
+        params_by[cfg.name] = jax.tree_util.tree_unflatten(treedef, loaded)
+        scores_by[cfg.name] = data[f"s::{cfg.name}"]
+    return params_by, scores_by, tok_va, lab_va
+
+
+def validation_record_from_scores(scores: np.ndarray, labels: np.ndarray
+                                  ) -> ValidationRecord:
+    certs = np.asarray(top2_gap(jnp.asarray(scores)))
+    correct = scores.argmax(-1) == labels
+    return ValidationRecord(certs=certs, correct=correct,
+                            preds=scores.argmax(-1))

@@ -1,0 +1,8 @@
+from repro.training.optimizer import (AdamWConfig, adamw_update,
+                                      init_opt_state, opt_state_pspecs)
+from repro.training.train_step import TrainStepConfig, make_train_step
+from repro.training.data import SyntheticDataset
+
+__all__ = ["AdamWConfig", "adamw_update", "init_opt_state",
+           "opt_state_pspecs", "TrainStepConfig", "make_train_step",
+           "SyntheticDataset"]

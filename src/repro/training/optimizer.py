@@ -1,0 +1,133 @@
+"""AdamW, implemented directly on pytrees (no external optimizer dep).
+
+Moments are float32 regardless of the (typically bf16) parameter dtype; the
+update math runs in float32 and casts back. Optimizer-state sharding follows
+the parameter sharding, with an optional extra ZeRO-1 shard over the 'pod'
+axis (``opt_state_pspecs(..., zero1_axis='pod')``): moments are sharded over
+DCN, and XLA inserts exactly one reduce-scatter + all-gather pair per step on
+the pod axis — the classic ZeRO-1 communication pattern.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    # linear warmup then cosine decay to lr * min_lr_ratio
+    warmup_steps: int = 100
+    decay_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.learning_rate * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.learning_rate * cos)
+
+
+def init_opt_state(params: Pytree, spec_only: bool = False) -> Dict[str, Any]:
+    def zeros_like_f32(p):
+        if spec_only:
+            return jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    step = (jax.ShapeDtypeStruct((), jnp.int32) if spec_only
+            else jnp.zeros((), jnp.int32))
+    return {
+        "m": jax.tree.map(zeros_like_f32, params),
+        "v": jax.tree.map(zeros_like_f32, params),
+        "step": step,
+    }
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def _is_decayable(path) -> bool:
+    """No weight decay on norms / biases / 1-D params (standard practice)."""
+    name = None
+    for k in path:
+        if hasattr(k, "key"):
+            name = str(k.key)
+    return name not in ("scale", "bias", "conv_b", "bq", "bk", "bv",
+                        "dt_proj_b", "A_log", "D", "q_norm_scale",
+                        "k_norm_scale")
+
+
+def adamw_update(params: Pytree, grads: Pytree, state: Dict[str, Any],
+                 cfg: AdamWConfig) -> Tuple[Pytree, Dict[str, Any],
+                                            Dict[str, jax.Array]]:
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip_norm / (gnorm + 1e-9))
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    new_p, new_m, new_v = [], [], []
+    for (path, p), g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        gf = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * gf
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(gf)
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if _is_decayable(path):
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        new_leaf = p.astype(jnp.float32) - lr * update
+        new_p.append(new_leaf.astype(p.dtype))
+        new_m.append(m)
+        new_v.append(v)
+
+    unflatten = jax.tree_util.tree_unflatten
+    params_treedef = jax.tree.structure(params)
+    new_params = unflatten(params_treedef, new_p)
+    new_state = {"m": unflatten(params_treedef, new_m),
+                 "v": unflatten(params_treedef, new_v),
+                 "step": step}
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics
+
+
+def opt_state_pspecs(param_pspecs: Pytree, zero1_axis: Optional[str] = None
+                     ) -> Dict[str, Any]:
+    """Moment pspecs mirror the param pspecs; with ``zero1_axis`` the first
+    unsharded dim of each moment is additionally sharded over that axis
+    (ZeRO-1 over DCN; see module docstring)."""
+    def moment_spec(spec: P) -> P:
+        if zero1_axis is None:
+            return spec
+        parts = list(spec) if len(spec) else []
+        for i, axis in enumerate(parts):
+            if axis is None:
+                parts[i] = zero1_axis
+                return P(*parts)
+        return spec  # every dim already sharded
+
+    specs = jax.tree.map(moment_spec, param_pspecs,
+                         is_leaf=lambda s: isinstance(s, P))
+    return {"m": specs, "v": specs, "step": P()}

@@ -1,0 +1,32 @@
+"""Shared fixtures. NOTE: no XLA device-count flags here — smoke tests and
+benches must see the real (single) device; multi-device tests run in
+subprocesses that set XLA_FLAGS before importing jax."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def bert_like_profiles():
+    from repro.core.profiles import synthetic_family
+    return synthetic_family(
+        ["tiny", "mini", "small", "medium", "base"],
+        base_runtime=2e-4, runtime_ratio=2.4, base_acc=0.70,
+        acc_gain=0.05, mem_base=0.4e9, seed=3)
+
+
+@pytest.fixture(scope="session")
+def llama_like_profiles():
+    from repro.core.profiles import synthetic_family
+    return synthetic_family(
+        ["l3b", "l7b", "l13b", "l70b"],
+        base_runtime=3e-2, runtime_ratio=2.2, base_acc=0.45,
+        acc_gain=0.05, mem_base=2e9, seed=4)
+
+
+@pytest.fixture(scope="session")
+def small_plan(bert_like_profiles):
+    from repro.core import HardwareSpec, SLO, optimize_gear_plan
+    hw = HardwareSpec(num_devices=4, mem_per_device=16e9)
+    slo = SLO(kind="latency", latency_p95=0.4)
+    return optimize_gear_plan(bert_like_profiles, hw, slo,
+                              qps_max=7600, n_ranges=8), hw

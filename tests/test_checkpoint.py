@@ -1,0 +1,66 @@
+"""Checkpoint manager: round trip (incl. bf16), retention, crash safety."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+
+
+def _tree():
+    return {
+        "w": jnp.asarray(np.random.default_rng(0).standard_normal((4, 8)),
+                         jnp.bfloat16),
+        "m": {"v": jnp.arange(5, dtype=jnp.float32),
+              "step": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_roundtrip_bf16(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    mgr.save(3, tree)
+    restored, meta = mgr.restore(tree)
+    assert meta["step"] == 3
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert str(np.asarray(a).dtype) == str(np.asarray(b).dtype)
+
+
+def test_latest_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    assert mgr.latest_step() == 4
+    assert mgr.all_steps() == [3, 4]  # retention pruned 1, 2
+
+
+def test_crash_safety_tmp_ignored(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    mgr.save(1, tree)
+    # simulate a crash mid-save: orphan tmp dir must not shadow LATEST
+    os.makedirs(tmp_path / "step_000000002.tmp")
+    assert mgr.latest_step() == 1
+    restored, meta = mgr.restore(tree)
+    assert meta["step"] == 1
+
+
+def test_gear_plan_checkpointing(tmp_path, small_plan):
+    report, _ = small_plan
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(10, {"x": jnp.zeros(1)}, gear_plan_json=report.plan.to_json())
+    from repro.core import GearPlan
+    js = mgr.restore_gear_plan()
+    plan = GearPlan.from_json(js)
+    assert plan.n_ranges == report.plan.n_ranges
+
+
+def test_restore_missing_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        mgr.restore({"x": jnp.zeros(1)})

@@ -1,0 +1,107 @@
+"""Assigned-architecture configs: exact assignment numbers + derived counts."""
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.shapes import SHAPES, cell_is_applicable, skip_reason
+
+ASSIGNED = {
+    # arch: (layers, d_model, heads, kv, d_ff, vocab)
+    "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+    "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+    "falcon-mamba-7b": (64, 4096, 1, 1, 0, 65024),
+    "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+    "olmo-1b": (16, 2048, 16, 16, 8192, 50304),
+    "qwen3-32b": (64, 5120, 64, 8, 25600, 151936),
+    "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32000),
+    "qwen2-0.5b": (24, 896, 14, 2, 4864, 151936),
+    "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+    "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+}
+
+
+def test_all_archs_registered():
+    assert set(ARCH_IDS) == set(ASSIGNED)
+
+
+@pytest.mark.parametrize("arch", list(ASSIGNED))
+def test_assignment_numbers(arch):
+    cfg = get_config(arch)
+    l, d, h, kv, ff, v = ASSIGNED[arch]
+    assert cfg.num_layers == l
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+
+
+def test_moe_configs():
+    llama4 = get_config("llama4-maverick-400b-a17b").moe
+    assert llama4.num_experts == 128 and llama4.top_k == 1
+    qmoe = get_config("qwen2-moe-a2.7b").moe
+    assert qmoe.num_experts == 60 and qmoe.top_k == 4
+    assert qmoe.num_shared_experts == 4
+    jamba = get_config("jamba-v0.1-52b").moe
+    assert jamba.num_experts == 16 and jamba.top_k == 2
+
+
+def test_param_counts_match_names():
+    """Total/active param counts should land near the published sizes."""
+    def total_b(arch):
+        return get_config(arch).param_count() / 1e9
+
+    def active_b(arch):
+        return get_config(arch).active_param_count() / 1e9
+
+    assert 350 < total_b("llama4-maverick-400b-a17b") < 450
+    assert 12 < active_b("llama4-maverick-400b-a17b") < 22
+    assert 25 < total_b("qwen3-32b") < 40
+    assert 5.5 < total_b("falcon-mamba-7b") < 9
+    assert 40 < total_b("jamba-v0.1-52b") < 65
+    assert 9 < active_b("jamba-v0.1-52b") < 16
+    assert 10 < total_b("qwen2-moe-a2.7b") < 18
+    assert 2 < active_b("qwen2-moe-a2.7b") < 4.5
+    assert 0.4 < total_b("qwen2-0.5b") < 0.8
+    assert 1.1 < total_b("olmo-1b") < 1.6
+    assert 1.4 < total_b("h2o-danube-1.8b") < 2.2
+
+
+def test_hybrid_pattern():
+    cfg = get_config("jamba-v0.1-52b")
+    attn_layers = [i for i in range(cfg.num_layers)
+                   if cfg.layer_is_attention(i)]
+    assert len(attn_layers) == 4  # 1:7 interleave over 32 layers
+    moe_layers = [i for i in range(cfg.num_layers) if cfg.layer_is_moe(i)]
+    assert len(moe_layers) == 16  # every other layer
+
+
+def test_shape_cell_accounting():
+    """40 cells = 33 runnable + 7 documented long_500k skips."""
+    runnable, skips = 0, 0
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            if cell_is_applicable(cfg, shape):
+                runnable += 1
+            else:
+                skips += 1
+                assert skip_reason(cfg, shape)
+                assert shape.name == "long_500k"
+    assert runnable == 33 and skips == 7
+
+
+def test_long_context_rules():
+    assert get_config("falcon-mamba-7b").supports_long_context
+    assert get_config("jamba-v0.1-52b").supports_long_context
+    assert get_config("h2o-danube-1.8b").supports_long_context  # SWA
+    assert not get_config("qwen3-32b").supports_long_context
+    assert not get_config("llama4-maverick-400b-a17b").supports_long_context
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_configs_reduced(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.d_model <= 128
+    assert cfg.vocab_size <= 512
+    assert cfg.num_layers <= 8
+    assert cfg.family == get_config(arch).family

@@ -1,0 +1,122 @@
+"""Cascade semantics + certainty estimation, incl. hypothesis properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cascade import (Cascade, enumerate_model_orderings,
+                                evaluate_cascade, run_cascade_on_scores)
+from repro.core.certainty import (CERTAINTY_ESTIMATORS, threshold_grid,
+                                  top2_gap)
+from repro.core.profiles import (ModelProfile, ValidationRecord,
+                                 synthetic_family)
+
+
+def test_eq5_top2_gap():
+    import jax.numpy as jnp
+    scores = jnp.asarray([[1.0, 5.0, 3.0], [0.0, 0.0, 0.0]])
+    gap = top2_gap(scores)
+    assert float(gap[0]) == 2.0
+    assert float(gap[1]) == 0.0
+
+
+def test_single_model_cascade_equals_model(bert_like_profiles):
+    for name, prof in bert_like_profiles.items():
+        ev = evaluate_cascade(Cascade((name,), ()), bert_like_profiles)
+        assert ev.accuracy == pytest.approx(prof.accuracy)
+        assert ev.fractions == (1.0,)
+
+
+def test_zero_threshold_never_forwards(bert_like_profiles):
+    c = Cascade(("tiny", "base"), (0.0,))
+    ev = evaluate_cascade(c, bert_like_profiles)
+    # certs are >= 0 -> everything resolves at the first model
+    assert ev.fractions[1] == 0.0
+    assert ev.accuracy == pytest.approx(
+        bert_like_profiles["tiny"].accuracy)
+
+
+def test_huge_threshold_always_forwards(bert_like_profiles):
+    c = Cascade(("tiny", "base"), (1e9,))
+    ev = evaluate_cascade(c, bert_like_profiles)
+    assert ev.fractions[1] == 1.0
+    assert ev.accuracy == pytest.approx(
+        bert_like_profiles["base"].accuracy)
+
+
+def test_cascade_beats_small_costs_less_than_big(bert_like_profiles):
+    """The Fig. 1 story: a good cascade ~ big-model accuracy, lower cost."""
+    grid = threshold_grid(bert_like_profiles["tiny"].validation.certs)
+    best = None
+    for t in grid:
+        ev = evaluate_cascade(Cascade(("tiny", "base"), (float(t),)),
+                              bert_like_profiles)
+        if best is None or ev.accuracy > best.accuracy:
+            best = ev
+    base = bert_like_profiles["base"]
+    assert best.accuracy >= base.accuracy - 0.01
+    assert best.avg_cost < base.runtime_per_sample(1.0)
+
+
+@given(st.lists(st.floats(0.0, 1.0), min_size=2, max_size=2))
+@settings(max_examples=25, deadline=None)
+def test_fractions_monotone_in_threshold(ths):
+    """Forwarded fraction is monotone non-decreasing in the threshold."""
+    profiles = synthetic_family(["a", "b"], seed=0, n_val=512)
+    lo, hi = sorted(ths)
+    ev_lo = evaluate_cascade(Cascade(("a", "b"), (lo,)), profiles)
+    ev_hi = evaluate_cascade(Cascade(("a", "b"), (hi,)), profiles)
+    assert ev_hi.fractions[1] >= ev_lo.fractions[1] - 1e-12
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_fractions_decrease_along_cascade(seed):
+    profiles = synthetic_family(["a", "b", "c"], seed=seed % 1000, n_val=256)
+    rng = np.random.default_rng(seed)
+    ths = tuple(sorted(rng.uniform(0, 0.8, 2), reverse=True))
+    ev = evaluate_cascade(Cascade(("a", "b", "c"), ths), profiles)
+    assert ev.fractions[0] == 1.0
+    assert all(ev.fractions[i + 1] <= ev.fractions[i] + 1e-12
+               for i in range(2))
+    # cost is the fraction-weighted sum of per-model costs
+    manual = sum(f * profiles[m].runtime_per_sample(1.0)
+                 for f, m in zip(ev.fractions, ("a", "b", "c")))
+    assert ev.avg_cost == pytest.approx(manual)
+
+
+def test_run_cascade_on_scores_matches_eval():
+    """Online execution on raw scores == offline replay on records."""
+    rng = np.random.default_rng(0)
+    n, v = 512, 8
+    scores = {m: rng.standard_normal((n, v)) * (1 + i)
+              for i, m in enumerate(["s", "l"])}
+    labels = rng.integers(0, v, n)
+    import jax.numpy as jnp
+    profiles = {}
+    for m, sc in scores.items():
+        certs = np.asarray(top2_gap(jnp.asarray(sc)))
+        profiles[m] = ModelProfile(
+            name=m, mem_bytes=1.0, batch_sizes=np.array([1.0]),
+            batch_runtimes=np.array([1e-3 if m == "s" else 5e-3]),
+            validation=ValidationRecord(certs=certs,
+                                        correct=sc.argmax(-1) == labels))
+    c = Cascade(("s", "l"), (0.8,))
+    preds, resolver, _ = run_cascade_on_scores(c, scores)
+    online_acc = (preds == labels).mean()
+    ev = evaluate_cascade(c, profiles)
+    assert online_acc == pytest.approx(ev.accuracy)
+    assert (resolver == 1).mean() == pytest.approx(ev.fractions[1])
+
+
+def test_orderings_by_cost(bert_like_profiles):
+    order = enumerate_model_orderings(bert_like_profiles)
+    costs = [bert_like_profiles[m].runtime_per_sample(1.0) for m in order]
+    assert costs == sorted(costs)
+
+
+def test_estimators_registry():
+    import jax.numpy as jnp
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((4, 16)))
+    for name, fn in CERTAINTY_ESTIMATORS.items():
+        out = fn(x)
+        assert out.shape == (4,), name

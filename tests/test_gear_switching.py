@@ -1,0 +1,68 @@
+"""Producer gear-switching semantics: §5 α-hysteresis + Eq.-5 property."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cascade import Cascade
+from repro.core.lp import Replica
+from repro.core.simulator import ServingSimulator, SimConfig, make_gear
+from repro.core.gears import Gear, GearPlan, SLO
+
+
+def _plan(profiles, n_dev=2):
+    reps = [Replica(m, d, profiles[m].runtime_per_sample(1.0))
+            for m in profiles for d in range(n_dev)]
+    from repro.core.gears import uniform_load_fractions
+    names = sorted(profiles,
+                   key=lambda m: profiles[m].runtime_per_sample(1.0))
+    slow = make_gear(Cascade((names[-1],), ()), reps)   # accurate gear
+    fast = make_gear(Cascade((names[0],), ()), reps)    # cheap gear
+    return GearPlan(qps_max=1000.0, gears=[slow, fast], replicas=reps,
+                    num_devices=n_dev,
+                    slo=SLO(kind="latency", latency_p95=1.0)), reps
+
+
+def test_upshift_on_spike_downshift_after(bert_like_profiles):
+    plan, reps = _plan(bert_like_profiles)
+    sim = ServingSimulator(bert_like_profiles, plan.replicas,
+                           plan.num_devices)
+    trace = np.concatenate([np.full(5, 50.0), np.full(5, 900.0),
+                            np.full(10, 50.0)])
+    res = sim.run_trace(plan, trace)
+    kinds = [g for _, g in res.gear_switches]
+    assert 1 in kinds          # upshifted to the fast gear during the spike
+    assert kinds[-1] == 0      # and came back down afterwards
+    t_up = next(t for t, g in res.gear_switches if g == 1)
+    assert 4.9 <= t_up <= 6.0  # within a measurement interval of the spike
+
+
+def test_hysteresis_defers_downshift(bert_like_profiles):
+    """With a large backlog, qps < alpha * Q0 must hold the fast gear."""
+    plan, reps = _plan(bert_like_profiles)
+    # alpha=8 default; huge backlog via warm start at moderate qps
+    sim = ServingSimulator(bert_like_profiles, plan.replicas,
+                           plan.num_devices, SimConfig(alpha=8.0))
+    # spike then silence: the backlog from the spike must drain in the
+    # fast gear before any downshift
+    trace = np.concatenate([np.full(3, 2000.0), np.full(6, 10.0)])
+    res = sim.run_trace(plan, trace)
+    downs = [t for t, g in res.gear_switches if g == 0]
+    ups = [t for t, g in res.gear_switches if g == 1]
+    assert ups and downs
+    assert downs[-1] > 3.0  # not before the spike ends
+    assert res.completed == res.offered
+
+
+@given(st.integers(0, 10 ** 6), st.integers(2, 6), st.integers(2, 64))
+@settings(max_examples=25, deadline=None)
+def test_top2gap_nonnegative_and_shift_invariant(seed, b, v):
+    """Eq. 5 properties: gap >= 0; invariant to additive logit shifts."""
+    import jax.numpy as jnp
+    from repro.core.certainty import top2_gap
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((b, v)).astype(np.float32)
+    g1 = np.asarray(top2_gap(jnp.asarray(x)))
+    assert (g1 >= 0).all()
+    shift = rng.standard_normal((b, 1)).astype(np.float32)
+    g2 = np.asarray(top2_gap(jnp.asarray(x + shift)))
+    np.testing.assert_allclose(g1, g2, atol=1e-4)

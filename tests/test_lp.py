@@ -1,0 +1,96 @@
+"""Simplex LP + load-balancing LP (Eq. 1-3), incl. hypothesis feasibility
+properties and the bisection <-> direct-LP cross-check."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lp import (Replica, linprog, min_utilization,
+                           min_utilization_lp, solve_load_balance)
+
+
+def test_linprog_known_solution():
+    res = linprog(np.array([-1.0, -1.0]),
+                  np.array([[1.0, 0.0], [0.0, 1.0], [1.0, 1.0]]),
+                  np.array([2.0, 3.0, 4.0]))
+    assert res.status == "optimal"
+    assert res.objective == pytest.approx(-4.0)
+
+
+def test_linprog_infeasible():
+    res = linprog(np.array([1.0]), np.array([[1.0], [-1.0]]),
+                  np.array([-5.0, 3.0]))  # x <= -5 and x >= -3
+    assert res.status == "infeasible"
+
+
+def test_linprog_geq_via_negation():
+    res = linprog(np.array([1.0]), np.array([[-1.0]]), np.array([-3.0]))
+    assert res.status == "optimal"
+    assert res.x[0] == pytest.approx(3.0)
+
+
+@given(st.integers(0, 10 ** 6))
+@settings(max_examples=30, deadline=None)
+def test_linprog_feasibility_property(seed):
+    """On random feasible instances, the solution satisfies constraints."""
+    rng = np.random.default_rng(seed)
+    n, m = rng.integers(2, 6), rng.integers(2, 6)
+    a = rng.uniform(-1, 1, (m, n))
+    x0 = rng.uniform(0, 2, n)           # known feasible point
+    b = a @ x0 + rng.uniform(0.1, 1.0, m)
+    c = rng.uniform(-1, 1, n)
+    res = linprog(c, a, b)
+    if res.status == "optimal":
+        assert np.all(a @ res.x <= b + 1e-6)
+        assert np.all(res.x >= -1e-9)
+        assert c @ res.x <= c @ x0 + 1e-6  # at least as good as x0
+    else:
+        assert res.status == "unbounded"  # possible with negative costs
+
+
+def _mk_replicas():
+    return [Replica("a", 0, 0.001), Replica("a", 1, 0.001),
+            Replica("b", 0, 0.010), Replica("b", 1, 0.010)]
+
+
+def test_load_balance_meets_demand():
+    q = solve_load_balance(_mk_replicas(), {"a": 500.0, "b": 60.0}, 2, 1.0)
+    assert q is not None
+    assert q[0] + q[1] >= 500.0 - 1e-6
+    assert q[2] + q[3] >= 60.0 - 1e-6
+
+
+def test_load_balance_infeasible_when_overloaded():
+    q = solve_load_balance(_mk_replicas(), {"a": 500.0, "b": 200.0}, 2, 1.0)
+    assert q is None  # 0.5 + 2.0 device-seconds > 2 devices
+
+
+def test_missing_model_infeasible():
+    q = solve_load_balance([Replica("a", 0, 0.001)], {"b": 1.0}, 1, 1.0)
+    assert q is None
+
+
+def test_min_utilization_known_value():
+    u, q = min_utilization(_mk_replicas(), {"a": 500.0, "b": 60.0}, 2)
+    # total work = 0.5 + 0.6 = 1.1 device-seconds over 2 devices
+    assert u == pytest.approx(0.55, abs=0.01)
+
+
+@given(st.integers(0, 10 ** 6))
+@settings(max_examples=15, deadline=None)
+def test_direct_lp_matches_bisection(seed):
+    """min_utilization_lp (1 LP) == the paper's bisection (within tol)."""
+    rng = np.random.default_rng(seed)
+    n_dev = int(rng.integers(2, 5))
+    models = ["m0", "m1", "m2"][:rng.integers(2, 4)]
+    reps = []
+    for m_i, m in enumerate(models):
+        for d in range(n_dev):
+            if rng.random() < 0.75:
+                reps.append(Replica(m, d, float(rng.uniform(1e-4, 5e-3))))
+    demand = {m: float(rng.uniform(10, 300)) for m in models}
+    u_bis, _ = min_utilization(reps, demand, n_dev, tol=1e-4)
+    u_lp, _ = min_utilization_lp(reps, demand, n_dev)
+    if u_bis is None or u_lp is None:
+        assert u_bis is None and u_lp is None
+    else:
+        assert u_lp == pytest.approx(u_bis, abs=5e-3)

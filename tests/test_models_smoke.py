@@ -1,0 +1,119 @@
+"""Per-architecture smoke tests (assignment requirement): reduced config,
+one forward/train step on CPU, output shapes + no NaNs; plus prefill/decode
+consistency against the full forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.models import model as M
+
+
+def make_batch(cfg, b=2, s=24, with_labels=True, rng=0):
+    key = jax.random.PRNGKey(rng)
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if with_labels:
+        batch["labels"] = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    if cfg.frontend.kind == "vision":
+        batch["prefix_embeddings"] = jnp.ones(
+            (b, cfg.frontend.num_prefix_embeddings,
+             cfg.frontend.frontend_dim), jnp.bfloat16)
+    if cfg.is_encoder_decoder:
+        batch["source_frames"] = jax.random.normal(
+            key, (b, 16, cfg.frontend.frontend_dim or cfg.d_model)
+        ).astype(jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    logits, aux = M.forward(params, cfg, batch)
+    s_tot = 24 + (cfg.frontend.num_prefix_embeddings
+                  if cfg.frontend.kind == "vision" else 0)
+    assert logits.shape == (2, s_tot, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    loss, metrics = M.train_loss(params, cfg, batch, remat=True)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+    grads = jax.grad(lambda p: M.train_loss(p, cfg, batch, remat=True)[0]
+                     )(params)
+    gleaves = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g.astype(jnp.float32))))
+               for g in gleaves)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_shapes(arch):
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 16
+    batch = make_batch(cfg, b, s, with_labels=False)
+    logits, cache = M.prefill(params, cfg, batch, cache_len=s + 4)
+    assert logits.shape == (b, cfg.vocab_size)
+    tok = jnp.zeros((b, 1), jnp.int32)
+    dlogits, cache2 = M.decode_step(params, cfg, tok, cache,
+                                    jnp.asarray(s, jnp.int32))
+    assert dlogits.shape == (b, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(dlogits)))
+    # cache structure preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "h2o-danube-1.8b",
+                                  "falcon-mamba-7b", "seamless-m4t-large-v2",
+                                  "olmo-1b", "qwen3-32b"])
+def test_decode_matches_forward(arch):
+    """Teacher-forced decode equals the full forward (exact for non-MoE)."""
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    b, s = 2, 13
+    toks = jax.random.randint(jax.random.PRNGKey(2), (b, s + 1), 0,
+                              cfg.vocab_size)
+    full = make_batch(cfg, b, s + 1, with_labels=False, rng=3)
+    full["tokens"] = toks
+    pre = dict(full)
+    pre["tokens"] = toks[:, :s]
+    logits_full, _ = M.forward(params, cfg, full)
+    logits_pre, cache = M.prefill(params, cfg, pre, cache_len=s + 1)
+    np.testing.assert_allclose(np.asarray(logits_pre),
+                               np.asarray(logits_full[:, s - 1]),
+                               atol=2e-2, rtol=0)
+    dl, _ = M.decode_step(params, cfg, toks[:, s:s + 1], cache,
+                          jnp.asarray(s, jnp.int32))
+    np.testing.assert_allclose(np.asarray(dl),
+                               np.asarray(logits_full[:, s]),
+                               atol=5e-2, rtol=0)
+
+
+def test_sliding_window_ring_buffer():
+    """Danube's SWA ring cache: decode past the window matches forward."""
+    cfg = get_smoke_config("h2o-danube-1.8b")
+    assert cfg.sliding_window == 64
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    b, s = 1, 80  # past the 64-token window
+    toks = jax.random.randint(jax.random.PRNGKey(2), (b, s + 1), 0,
+                              cfg.vocab_size)
+    logits_full, _ = M.forward(params, cfg, {"tokens": toks})
+    _, cache = M.prefill(params, cfg, {"tokens": toks[:, :s]},
+                         cache_len=s + 1)
+    assert cache["blocks"][0]["k"].shape[2] == cfg.sliding_window
+    dl, _ = M.decode_step(params, cfg, toks[:, s:s + 1], cache,
+                          jnp.asarray(s, jnp.int32))
+    np.testing.assert_allclose(np.asarray(dl), np.asarray(logits_full[:, s]),
+                               atol=5e-2, rtol=0)
+
+
+def test_block_pattern_structure():
+    from repro.models.model import block_pattern
+    from repro.configs import get_config
+    jamba = block_pattern(get_config("jamba-v0.1-52b"))
+    assert len(jamba) == 8
+    assert [sp.mixer for sp in jamba].count("attn") == 1
+    assert jamba[4].mixer == "attn"
+    assert [sp.ffn for sp in jamba].count("moe") == 4
+    llama4 = block_pattern(get_config("llama4-maverick-400b-a17b"))
+    assert [sp.ffn for sp in llama4] == ["dense", "moe"]

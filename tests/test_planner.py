@@ -1,0 +1,149 @@
+"""Algorithm 1 end-to-end: plans satisfy the SLO in simulation; errors
+propagate; infeasibility is reported; plans round-trip through JSON."""
+import numpy as np
+import pytest
+
+from repro.core import (GearPlan, HardwareSpec, InfeasiblePlanError, SLO,
+                        ServingSimulator, optimize_gear_plan)
+from repro.core.traces import diurnal_like_trace, zipf_prior
+
+
+def test_latency_slo_plan(small_plan, bert_like_profiles):
+    report, hw = small_plan
+    plan = report.plan
+    assert plan.n_ranges == 8
+    # high-QPS ranges get faster (cheaper) cascades than low-QPS ranges
+    acc = [g.expected_accuracy for g in plan.gears]
+    assert acc[0] >= acc[-1]
+    # every gear respects the latency SLO in planning
+    assert all(g.expected_p95 <= 0.4 + 1e-6 for g in plan.gears)
+    # trace simulation meets the SLO
+    sim = ServingSimulator(bert_like_profiles, plan.replicas, hw.num_devices)
+    trace = diurnal_like_trace(seconds=60, peak_qps=7600, seed=5)
+    res = sim.run_trace(plan, trace)
+    assert res.stable
+    assert res.p95 <= 0.4
+    assert res.accuracy > bert_like_profiles["tiny"].accuracy
+
+
+def test_accuracy_slo_plan(bert_like_profiles):
+    hw = HardwareSpec(num_devices=4, mem_per_device=16e9)
+    slo = SLO(kind="accuracy", min_accuracy=0.93)
+    report = optimize_gear_plan(bert_like_profiles, hw, slo, qps_max=5000,
+                                n_ranges=8)
+    plan = report.plan
+    prior = zipf_prior(8)
+    weighted = float(sum(g.expected_accuracy * w
+                         for g, w in zip(plan.gears, prior)))
+    assert weighted >= 0.93 - 1e-6
+
+
+def test_infeasible_raises(bert_like_profiles):
+    hw = HardwareSpec(num_devices=1, mem_per_device=16e9)
+    slo = SLO(kind="latency", latency_p95=0.05)
+    with pytest.raises(InfeasiblePlanError):
+        optimize_gear_plan(bert_like_profiles, hw, slo, qps_max=500000,
+                           n_ranges=4)
+
+
+def test_memory_constraint_respected(bert_like_profiles):
+    hw = HardwareSpec(num_devices=4, mem_per_device=16e9)
+    slo = SLO(kind="latency", latency_p95=0.4)
+    report = optimize_gear_plan(bert_like_profiles, hw, slo, qps_max=5000,
+                                n_ranges=6)
+    mem = np.zeros(hw.num_devices)
+    for r in report.plan.replicas:
+        mem[r.device] += bert_like_profiles[r.model].mem_bytes
+    assert (mem <= hw.mem_per_device + 1e-6).all()
+
+
+def test_every_used_model_has_a_replica(small_plan):
+    report, _ = small_plan
+    plan = report.plan
+    placed = {r.model for r in plan.replicas}
+    for g in plan.gears:
+        for m in g.cascade.models:
+            assert m in placed
+
+
+def test_load_fractions_normalised(small_plan):
+    report, _ = small_plan
+    for g in report.plan.gears:
+        for m, fr in g.load_fractions.items():
+            assert sum(fr.values()) == pytest.approx(1.0, abs=1e-6)
+
+
+def test_plan_json_roundtrip(small_plan):
+    report, _ = small_plan
+    plan = report.plan
+    plan2 = GearPlan.from_json(plan.to_json())
+    assert plan2.qps_max == plan.qps_max
+    assert len(plan2.gears) == len(plan.gears)
+    for g1, g2 in zip(plan.gears, plan2.gears):
+        assert g1.cascade == g2.cascade
+        assert g1.min_queue_lens == g2.min_queue_lens
+    assert [(r.model, r.device) for r in plan2.replicas] == \
+        [(r.model, r.device) for r in plan.replicas]
+
+
+def test_gear_lookup_boundaries(small_plan):
+    report, _ = small_plan
+    plan = report.plan
+    assert plan.gear_index_for_qps(0.0) == 0
+    assert plan.gear_index_for_qps(plan.qps_max * 2) == plan.n_ranges - 1
+    w = plan.range_width
+    assert plan.gear_index_for_qps(w * 2.5) == 2
+
+
+def test_planner_beats_random_assignment(bert_like_profiles):
+    """Fig.-10 flavour: the planner's plan dominates a random one."""
+    hw = HardwareSpec(num_devices=4, mem_per_device=16e9)
+    slo = SLO(kind="latency", latency_p95=0.4)
+    report = optimize_gear_plan(bert_like_profiles, hw, slo, qps_max=6000,
+                                n_ranges=6, seed=0)
+    plan = report.plan
+    sim = ServingSimulator(bert_like_profiles, plan.replicas,
+                           hw.num_devices)
+    trace = diurnal_like_trace(seconds=40, peak_qps=6000, seed=9)
+    res = sim.run_trace(plan, trace)
+
+    # random plan: same placement, random single-model gears
+    import copy
+    rng = np.random.default_rng(0)
+    rnd = copy.deepcopy(plan)
+    from repro.core.cascade import Cascade
+    from repro.core.gears import uniform_load_fractions
+    models = list(bert_like_profiles)
+    for g in rnd.gears:
+        m = models[rng.integers(len(models))]
+        g.cascade = Cascade((m,), ())
+        g.min_queue_lens = {m: 1}
+        g.load_fractions = uniform_load_fractions(rnd.replicas, (m,))
+    res_rnd = sim.run_trace(rnd, trace)
+    ok = res.p95 <= 0.4
+    rnd_worse = (res_rnd.p95 > 0.4 or not res_rnd.stable
+                 or res_rnd.accuracy <= res.accuracy + 0.005)
+    assert ok and rnd_worse
+
+
+def test_elastic_replan_grow(bert_like_profiles):
+    from repro.core.planner import make_state
+    from repro.core.plan_state import OK
+    from repro.core.submodules import SUBMODULES
+    from repro.distributed.fault_tolerance import elastic_replan
+    hw = HardwareSpec(num_devices=3, mem_per_device=16e9)
+    state = make_state(bert_like_profiles, hw,
+                       SLO(kind="latency", latency_p95=0.4), 5000, 6)
+    error, cur = OK, 0
+    for _ in range(200):
+        error, state = SUBMODULES[cur](error, state)
+        if error.is_ok:
+            cur = (cur + 1) % 4
+            if cur == 0 and state.min_qlens:
+                break
+        else:
+            cur -= 1
+    bigger = elastic_replan(state, 6)
+    assert bigger.hardware.num_devices == 6
+    assert len(bigger.replicas) >= len(state.replicas)
+    assert max(bigger.util) <= max(state.util) + 1e-6

@@ -1,0 +1,115 @@
+"""Real serving runtime + baselines + engine bucketing."""
+import numpy as np
+import pytest
+
+from repro.core import HardwareSpec, SLO, ServingSimulator
+from repro.core.simulator import trace_to_arrivals
+from repro.serving.baselines import (CocktailPlusPolicy, DynBaPolicy,
+                                     MSPlusPolicy)
+
+
+def test_engine_bucketing_and_padding():
+    import jax.numpy as jnp
+    from repro.serving.engine import InferenceEngine
+    calls = []
+
+    def apply_fn(params, tokens):
+        calls.append(tokens.shape[0])
+        return jnp.zeros((tokens.shape[0], 2))
+
+    eng = InferenceEngine("x", apply_fn, {}, buckets=(1, 2, 4, 8))
+    out = eng.infer(np.zeros((3, 16), np.int32))
+    assert out.shape == (3, 2)
+    assert calls[-1] == 4  # padded to the 4-bucket
+    out = eng.infer(np.zeros((13, 16), np.int32))  # oversize: split 8 + 8pad
+    assert out.shape == (13, 2)
+
+
+def test_dynba_policy(bert_like_profiles):
+    hw = HardwareSpec(num_devices=2, mem_per_device=16e9)
+    pol = DynBaPolicy(model="medium")
+    gears, sel, reps, nd = pol.build(bert_like_profiles, hw,
+                                     SLO(kind="latency", latency_p95=0.4),
+                                     2000)
+    assert len(gears) == 1
+    sim = ServingSimulator(bert_like_profiles, reps, nd)
+    res = sim.run_policy(gears, sel, np.full(10, 200.0))
+    assert res.stable
+    assert res.accuracy == pytest.approx(
+        bert_like_profiles["medium"].accuracy, abs=0.02)
+
+
+def test_msplus_switches_models(bert_like_profiles):
+    hw = HardwareSpec(num_devices=2, mem_per_device=16e9)
+    pol = MSPlusPolicy(n_ranges=6)
+    gears, sel, reps, nd = pol.build(bert_like_profiles, hw,
+                                     SLO(kind="latency", latency_p95=0.4),
+                                     6000)
+    # low range uses a more accurate model than the top range
+    lo = gears[0].cascade.models[0]
+    hi = gears[-1].cascade.models[0]
+    assert bert_like_profiles[lo].accuracy >= \
+        bert_like_profiles[hi].accuracy
+    trace = np.concatenate([np.full(10, 100.0), np.full(10, 5500.0)])
+    sim = ServingSimulator(bert_like_profiles, reps, nd)
+    res = sim.run_policy(gears, sel, trace)
+    assert len(res.gear_switches) >= 1
+
+
+def test_cocktail_autoscales(bert_like_profiles):
+    hw = HardwareSpec(num_devices=4, mem_per_device=16e9)
+    trace = np.concatenate([np.full(15, 50.0), np.full(15, 900.0),
+                            np.full(15, 50.0)])
+    pol = CocktailPlusPolicy(scale_interval=5.0, target_util=0.7,
+                             forecast=trace)
+    gears, sel, reps, nd = pol.build(bert_like_profiles, hw,
+                                     SLO(kind="latency", latency_p95=0.4),
+                                     1000)
+    sim = ServingSimulator(bert_like_profiles, reps, nd)
+    res = sim.run_policy(gears, sel, trace)
+    cost = CocktailPlusPolicy.active_device_cost(res, gears)
+    assert 1.0 <= cost <= hw.num_devices
+    assert len(res.gear_switches) >= 1  # it scaled
+
+
+@pytest.mark.slow
+def test_real_runtime_tiny_models(tmp_path):
+    """End-to-end REAL serving: threaded producer/consumer over jitted tiny
+    models, cascade semantics verified on wall clock."""
+    import jax
+    from repro.core import HardwareSpec, SLO, optimize_gear_plan
+    from repro.serving.engine import InferenceEngine, profile_engine
+    from repro.serving.runtime import CascadeServer, Request
+    from repro.serving.tinymodels import (TINY_FAMILY, apply_tiny,
+                                          synthetic_classification_data,
+                                          train_tiny_family,
+                                          validation_record_from_scores)
+    fam = TINY_FAMILY[:3]
+    params_by, scores_by, tok_va, lab_va = train_tiny_family(
+        n_train=1024, n_val=512, steps_scale=0.3, family=fam,
+        cache_path="benchmarks/artifacts/tiny_family_test.npz")
+    profiles = {}
+    engines = {}
+    for cfg in fam:
+        rec = validation_record_from_scores(scores_by[cfg.name], lab_va)
+        eng = InferenceEngine(cfg.name,
+                              lambda p, t, c=cfg: apply_tiny(c, p, t),
+                              params_by[cfg.name])
+        engines[cfg.name] = eng
+        profiles[cfg.name] = profile_engine(
+            eng, 32, batch_sizes=(1, 4, 16), repeats=2, validation=rec)
+    hw = HardwareSpec(num_devices=2, mem_per_device=16e9)
+    plan = optimize_gear_plan(profiles, hw,
+                              SLO(kind="latency", latency_p95=0.5),
+                              qps_max=300, n_ranges=4).plan
+    trace = np.full(4, 60.0)
+    n = int(trace.sum()) + 4
+    toks, labels, _ = synthetic_classification_data(n, seed=7)
+    reqs = [Request(rid=i, tokens=toks[i]) for i in range(n)]
+    server = CascadeServer(plan, engines)
+    done = server.run_trace(reqs, trace, drain=2.0)
+    assert len(done) >= 0.95 * len(trace_to_arrivals(trace))
+    lats = np.array([r.latency for r in done])
+    assert np.quantile(lats, 0.95) < 1.0
+    acc = np.mean([int(r.pred == labels[r.rid]) for r in done])
+    assert acc > 0.5

@@ -1,0 +1,102 @@
+"""Sharding rules: param logical axes, sanitisation, cache layouts."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, get_smoke_config
+from repro.distributed.context import DistContext
+from repro.distributed import sharding as sh
+from repro.models import model as M
+
+CTX = DistContext(mesh=None, batch_axes=("data",))
+CTX_POD = DistContext(mesh=None, batch_axes=("pod", "data"))
+
+
+def _axes_of(params, *path):
+    axes = sh.param_logical_axes(params)
+    node = axes
+    for k in path:
+        node = node[k]
+    return node
+
+
+def test_param_rules_dense():
+    cfg = get_smoke_config("qwen3-32b")
+    params = M.init_params(cfg, spec_only=True)
+    assert _axes_of(params, "embed", "embedding") == ("vocab", "fsdp")
+    assert _axes_of(params, "embed", "lm_head") == ("fsdp", "vocab")
+    # stacked block leaves get a leading None for the layer dim
+    assert _axes_of(params, "blocks", 0, "attn", "wq") == \
+        (None, "fsdp", "heads")
+    assert _axes_of(params, "blocks", 0, "attn", "wo") == \
+        (None, "heads", "fsdp")
+    assert _axes_of(params, "blocks", 0, "ffn", "w_down") == \
+        (None, "ffn", "fsdp")
+
+
+def test_param_rules_expert_vs_shared():
+    cfg = get_smoke_config("qwen2-moe-a2.7b")
+    params = M.init_params(cfg, spec_only=True)
+    # routed experts: EP over the data axis, TP over ffn — no extra fsdp
+    assert _axes_of(params, "blocks", 0, "moe", "w_gate") == \
+        (None, "ep", None, "ffn")
+    # the shared expert is a plain dense FFN
+    assert _axes_of(params, "blocks", 0, "moe", "shared", "w_gate") == \
+        (None, "fsdp", "ffn")
+
+
+def test_param_rules_mamba():
+    cfg = get_smoke_config("falcon-mamba-7b")
+    params = M.init_params(cfg, spec_only=True)
+    assert _axes_of(params, "blocks", 0, "mamba", "in_proj") == \
+        (None, "fsdp", "d_inner")
+    assert _axes_of(params, "blocks", 0, "mamba", "out_proj") == \
+        (None, "d_inner", "fsdp")
+    assert _axes_of(params, "blocks", 0, "mamba", "A_log") == \
+        (None, "d_inner", None)
+
+
+def test_fsdp_only_in_train_mode():
+    spec_train = sh.logical_pspec(("fsdp", "heads"), CTX, "train")
+    spec_serve = sh.logical_pspec(("fsdp", "heads"), CTX, "serve")
+    assert spec_train == P("data", "model")
+    assert spec_serve == P(None, "model")
+
+
+def test_batch_axes_multipod():
+    spec = sh.logical_pspec(("batch", None), CTX_POD, "train")
+    assert spec == P(("pod", "data"), None)
+
+
+def test_sanitize_pspec():
+    mesh = None
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16, "pod": 2}
+    # kv=2 heads can't shard over model=16 -> dropped
+    out = sh.sanitize_pspec((24, 128, 32768, 2, 64),
+                            P(None, "data", None, "model", None), FakeMesh())
+    assert out == P(None, "data", None, None, None)
+    # batch 1 can't shard over data -> dropped; 32768 % 16 == 0 stays
+    out2 = sh.sanitize_pspec((1, 32768), P("data", "model"), FakeMesh())
+    assert out2 == P(None, "model")
+    # tuple axes: ('pod','data') = 32-way on batch 256 stays
+    out3 = sh.sanitize_pspec((256, 10), P(("pod", "data"), None), FakeMesh())
+    assert out3 == P(("pod", "data"), None)
+
+
+def test_cache_layouts():
+    cfg = get_smoke_config("qwen3-32b")
+    cache = M.init_cache(cfg, batch=4, cache_len=64, spec_only=True)
+    axes = sh.cache_logical_axes(cache)
+    k_axes = axes["blocks"][0]["k"]
+    assert k_axes == (None, "batch", None, "kv_heads", None)
+    axes_seq = sh.cache_logical_axes(cache, seq_sharded=True)
+    assert axes_seq["blocks"][0]["k"] == (None, "batch", "kv_seq", None, None)
+
+
+def test_tree_bytes():
+    tree = {"a": jnp.zeros((2, 3), jnp.bfloat16),
+            "b": jnp.zeros((4,), jnp.float32)}
+    assert sh.tree_bytes(tree) == 2 * 3 * 2 + 4 * 4

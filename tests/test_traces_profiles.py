@@ -1,0 +1,99 @@
+"""Trace generators, profiles, cost model, and App. C.2 replanning."""
+import numpy as np
+import pytest
+
+from repro.core.profiles import ModelProfile, ValidationRecord, \
+    synthetic_family
+from repro.core.traces import (azure_like_trace, diurnal_like_trace,
+                               measured_qps_distribution, spiky_trace,
+                               zipf_prior)
+
+
+def test_zipf_prior_properties():
+    p = zipf_prior(8)
+    assert p.sum() == pytest.approx(1.0)
+    assert (np.diff(p) < 0).all()  # low-QPS ranges are most frequent
+
+
+@pytest.mark.parametrize("fn,peak", [(azure_like_trace, 60.0),
+                                     (diurnal_like_trace, 7600.0)])
+def test_traces_deterministic_and_scaled(fn, peak):
+    a = fn(seconds=100, peak_qps=peak, seed=4)
+    b = fn(seconds=100, peak_qps=peak, seed=4)
+    np.testing.assert_array_equal(a, b)
+    assert a.max() == pytest.approx(peak)
+    assert (a >= 0).all()
+    c = fn(seconds=100, peak_qps=peak, seed=5)
+    assert not np.array_equal(a, c)
+
+
+def test_traces_short_windows():
+    # regression: generators must not crash on short windows
+    assert len(azure_like_trace(seconds=10, peak_qps=10)) == 10
+    assert len(diurnal_like_trace(seconds=10, peak_qps=10)) == 10
+
+
+def test_spiky_trace_shape():
+    t = spiky_trace(seconds=60, base_qps=100, spike_qps=1000, spike_len=5)
+    assert t.max() == 1000
+    assert np.median(t) == 100
+
+
+def test_measured_distribution():
+    trace = np.array([10.0] * 80 + [90.0] * 20)
+    d = measured_qps_distribution(trace, 4, 100.0)
+    assert d[0] == pytest.approx(0.8)
+    assert d[3] == pytest.approx(0.2)
+
+
+def test_profile_runtime_interpolation():
+    p = ModelProfile(name="x", mem_bytes=1.0,
+                     batch_sizes=np.array([1.0, 4.0, 16.0]),
+                     batch_runtimes=np.array([1e-3, 2e-3, 6e-3]),
+                     validation=ValidationRecord(certs=np.zeros(4),
+                                                 correct=np.ones(4, bool)))
+    assert p.runtime(1) == pytest.approx(1e-3)
+    assert p.runtime(8) == pytest.approx(10e-3 / 3 )  # interp 4..16
+    assert p.runtime(32) > p.runtime(16)  # extrapolates upward
+    assert p.runtime_per_sample(16) < p.runtime_per_sample(1)  # batching wins
+    d = p.to_dict()
+    p2 = ModelProfile.from_dict(d)
+    assert p2.runtime(8) == pytest.approx(p.runtime(8))
+
+
+def test_cost_model_scales_sanely():
+    from repro.configs import get_config
+    from repro.profiling.cost_model import (analytic_runtime,
+                                            min_slice_chips, model_flops)
+    small = get_config("qwen2-0.5b")
+    big = get_config("qwen3-32b")
+    # bigger model: more flops, more chips, slower per step
+    assert model_flops(big, 4096, 4096) > 10 * model_flops(small, 4096, 4096)
+    assert min_slice_chips(big) > min_slice_chips(small)
+    rt_s = analytic_runtime(small, 8, 2048, "decode", 1)
+    rt_b = analytic_runtime(big, 8, 2048, "decode", min_slice_chips(big))
+    assert rt_b > rt_s  # even on its slice, the 32B model is slower
+
+
+def test_replan_with_measured_distribution():
+    """App. C.2: deviation detection + replanning shifts accuracy toward
+    the ranges the workload actually occupies."""
+    from repro.core import HardwareSpec, SLO
+    from repro.core.planner import (check_qps_distribution,
+                                    optimize_gear_plan,
+                                    replan_with_measured)
+    from repro.core.traces import zipf_prior
+    profiles = synthetic_family(["a", "b", "c"], base_runtime=2e-4,
+                                runtime_ratio=2.5, seed=6)
+    hw = HardwareSpec(num_devices=2, mem_per_device=16e9)
+    slo = SLO(kind="latency", latency_p95=0.4)
+    plan = optimize_gear_plan(profiles, hw, slo, qps_max=4000, n_ranges=4)
+    # workload that lives at HIGH qps (anti-Zipf)
+    trace = np.full(100, 3600.0)
+    deviates, tv = check_qps_distribution(zipf_prior(4), trace, 4000.0)
+    assert deviates and tv > 0.5
+    replanned = replan_with_measured(profiles, hw, slo, 4000.0, trace,
+                                     n_ranges=4)
+    # the replanned top range is at least as accurate as the original's
+    assert replanned.plan.gears[-1].expected_accuracy >= \
+        plan.plan.gears[-1].expected_accuracy - 1e-9
