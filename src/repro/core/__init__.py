@@ -14,6 +14,10 @@ from repro.core.plan_state import (HardwareSpec, InfeasiblePlanError,
 from repro.core.planner import PlannerReport, optimize_gear_plan
 from repro.core.profiles import ModelProfile, ProfileSet, ValidationRecord, \
     synthetic_family
+from repro.core.scheduling import (CascadeHop, DecisionTrace, GearSelector,
+                                   Resolved, RoutePool, SchedulerConfig,
+                                   SchedulerCore, plan_target,
+                                   with_hysteresis)
 from repro.core.simulator import ServingSimulator, SimConfig, SimResult, \
     make_gear
 
@@ -24,5 +28,7 @@ __all__ = [
     "InfeasiblePlanError", "PlanError", "PlannerState", "PlannerReport",
     "optimize_gear_plan", "ModelProfile", "ProfileSet", "ValidationRecord",
     "synthetic_family", "ServingSimulator", "SimConfig", "SimResult",
-    "make_gear",
+    "make_gear", "SchedulerCore", "SchedulerConfig", "GearSelector",
+    "DecisionTrace", "RoutePool", "Resolved", "CascadeHop", "plan_target",
+    "with_hysteresis",
 ]

@@ -1,0 +1,276 @@
+"""SchedulerCore: the single home of every online serving decision.
+
+The offline gear planner is only as good as the simulator's fidelity to the
+online system (paper §5, App. C, Fig. 13), so the decision logic must not be
+duplicated. This module owns all four decisions as pure functions over
+explicit state; the discrete-event ``ServingSimulator`` and the threaded
+``CascadeServer`` are thin *drivers* over it (DESIGN.md §2):
+
+* ``route(model, gear, u)``        — weighted replica routing (LP fractions)
+* ``select_gear(...)``             — gear switching; the §5 α-hysteresis is
+                                     composed in via ``with_hysteresis``
+* ``should_fire(...)``             — min-queue-length batch trigger with the
+                                     head-of-line timeout (§4.5)
+* ``next_hop(stage, cert, gear)``  — cascade continuation vs. resolution
+
+Drivers own *state and time* (queues, clocks, threads, the event heap); the
+core owns *decisions*. A new scheduling policy is one selector/config here —
+never a parallel edit of simulator and runtime.
+
+``DecisionTrace`` records every decision the core makes so that the two
+executors can be checked for exact decision parity (decision-trace equality,
+not wall-clock — ``tests/test_scheduling_parity.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import (Callable, Dict, List, Optional, Sequence, Tuple, Union)
+
+import numpy as np
+
+from repro.core.gears import Gear, GearPlan
+from repro.core.lp import Replica
+
+
+@dataclass(frozen=True)
+class SchedulerConfig:
+    """Knobs shared by every executor (simulator and real runtime)."""
+    max_wait: float = 0.05          # head-of-line timeout (impl. necessity)
+    measure_interval: float = 0.1   # producer QPS measurement window (§5)
+    alpha: float = 8.0              # gear-downgrade hysteresis (§5)
+    max_batch: int = 512
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Gear selection: the GearSelector protocol + α-hysteresis composition
+# ---------------------------------------------------------------------------
+
+GearSelector = Callable[[float, float, int, int], int]
+# (time, measured_qps, current_gear_idx, first_model_queue_len) -> gear idx
+
+
+def plan_target(plan: GearPlan) -> GearSelector:
+    """Raw §5 producer target: the plan's gear for the measured QPS range
+    (no hysteresis — compose with ``with_hysteresis``)."""
+    def target(t: float, measured_qps: float, cur: int, q0: int) -> int:
+        return plan.gear_index_for_qps(measured_qps)
+    return target
+
+
+def with_hysteresis(target: GearSelector, alpha: float) -> GearSelector:
+    """§5 α-hysteresis: never downgrade while the first model's backlog is
+    large relative to the measured rate (measured < α·Q0) — drain first.
+    This is the ONLY implementation of the rule; both executors compose it."""
+    def select(t: float, measured_qps: float, cur: int, q0: int) -> int:
+        tgt = target(t, measured_qps, cur, q0)
+        if tgt < cur and measured_qps < alpha * q0:
+            return cur
+        return tgt
+    return select
+
+
+# ---------------------------------------------------------------------------
+# Cascade continuation
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Resolved:
+    """The sample is answered at this cascade stage."""
+    stage: int
+
+
+@dataclass(frozen=True)
+class CascadeHop:
+    """The sample was not certain enough: forward to the next model."""
+    next_model: str
+    next_stage: int
+
+
+Hop = Union[Resolved, CascadeHop]
+
+
+def is_ensemble(gear: Gear) -> bool:
+    return getattr(gear, "mode", "cascade") == "ensemble"
+
+
+def majority_vote(n_correct_votes: int, n_members: int) -> bool:
+    """Ensemble decision (Cocktail+): strict majority of member votes."""
+    return n_correct_votes * 2 > n_members
+
+
+# ---------------------------------------------------------------------------
+# Deterministic routing randomness (shared so executors can be compared)
+# ---------------------------------------------------------------------------
+
+class RoutePool:
+    """Pre-drawn pool of uniforms consumed one per routing decision.
+
+    Both executors draw from the same construction so a parity test can give
+    them literally the same stream (pool size changes the wrap-around, hence
+    the sequence — use ``for_arrivals`` to match the simulator's sizing).
+    """
+    __slots__ = ("_pool", "_ptr", "_n")
+
+    def __init__(self, seed: int, size: int = 4096):
+        self._pool = np.random.default_rng(seed).random(
+            max(size, 1)).tolist()
+        self._n = len(self._pool)
+        self._ptr = 0
+
+    @classmethod
+    def for_arrivals(cls, seed: int, n_arrivals: int) -> "RoutePool":
+        return cls(seed, n_arrivals * 4 + 16)
+
+    def next(self) -> float:
+        ptr = self._ptr
+        if ptr >= self._n:
+            ptr = ptr % self._n
+        self._ptr = ptr + 1
+        return self._pool[ptr]
+
+
+# ---------------------------------------------------------------------------
+# Decision trace (parity checking)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class DecisionTrace:
+    """Append-only record of the core's decisions, in call order.
+
+    Routing, gear switches and cascade hops are recorded by the core itself;
+    batch firings are recorded by the driver at queue-pop time (the core's
+    ``should_fire`` is consulted arbitrarily often by polling drivers, so the
+    *positive* decision — which samples were batched on which replica — is
+    the comparable event).
+    """
+    routes: List[Tuple[str, int]] = field(default_factory=list)
+    gear_switches: List[Tuple[int, int]] = field(default_factory=list)
+    fires: List[Tuple[int, Tuple[int, ...]]] = field(default_factory=list)
+    hops: List[Tuple[int, float, str]] = field(default_factory=list)
+
+    def record_fire(self, ridx: int, sample_ids: Sequence[int]) -> None:
+        self.fires.append((int(ridx), tuple(int(s) for s in sample_ids)))
+
+    def summary(self) -> Dict[str, int]:
+        return {"routes": len(self.routes),
+                "gear_switches": len(self.gear_switches),
+                "fires": len(self.fires), "hops": len(self.hops)}
+
+
+# ---------------------------------------------------------------------------
+# The core
+# ---------------------------------------------------------------------------
+
+class SchedulerCore:
+    """Pure, side-effect-free serving decisions over explicit state.
+
+    Holds only immutable context: the fixed replica placement (replicas never
+    move at runtime — no model loading on the critical path), the shared
+    config, and the gear-selection policy. All mutable serving state (queues,
+    clocks, device status) lives in the driver and is passed in as plain
+    arguments, so one core instance can serve any number of runs and the
+    same instance can be shared across executors.
+    """
+
+    def __init__(self, replicas: Sequence[Replica],
+                 cfg: SchedulerConfig = SchedulerConfig(),
+                 selector: Optional[GearSelector] = None,
+                 trace: Optional[DecisionTrace] = None):
+        self.replicas = list(replicas)
+        self.cfg = cfg
+        self.selector: GearSelector = selector or (lambda t, q, g, q0: g)
+        self.trace = trace
+        self.reps_of: Dict[str, List[int]] = {}
+        self.reps_on_dev: Dict[int, List[int]] = {}
+        for i, r in enumerate(self.replicas):
+            self.reps_of.setdefault(r.model, []).append(i)
+            self.reps_on_dev.setdefault(r.device, []).append(i)
+        # per-(gear, stage) hop memo: the two possible outcomes of next_hop
+        # are fixed per gear+stage, only the cert comparison varies — caching
+        # them keeps the hot completion path allocation-free. The strong ref
+        # to the gear object in the entry pins its id, so id-keyed entries
+        # can never alias a new gear, and identity is re-checked on hit.
+        # _route_memo does the same for the per-(gear, model) cumulative
+        # routing table.
+        self._hop_memo: Dict[Tuple[int, int], tuple] = {}
+        self._route_memo: Dict[Tuple[int, str], tuple] = {}
+        self._fire_wait = cfg.max_wait - 1e-9
+
+    # ----------------------------------------------------------- routing
+    def route(self, model: str, gear: Gear, u: float) -> int:
+        """Pick the replica for one sample of ``model`` under ``gear``'s LP
+        load fractions, using the uniform draw ``u`` in [0, 1)."""
+        ent = self._route_memo.get((id(gear), model))
+        if ent is None or ent[0] is not gear:
+            fracs = gear.load_fractions.get(model)
+            idxs = self.reps_of.get(model, [])
+            if not idxs:
+                raise RuntimeError(f"no replica for model {model}")
+            if not fracs:
+                ent = (gear, None, idxs)
+            else:
+                cum, acc = [], 0.0
+                for rj, frac in fracs.items():
+                    acc += frac
+                    cum.append((acc + 1e-12, rj))
+                ent = (gear, cum, next(iter(fracs)))
+            self._route_memo[(id(gear), model)] = ent
+        if ent[1] is None:
+            idxs = ent[2]
+            ridx = idxs[int(u * len(idxs)) % len(idxs)]
+        else:
+            ridx = ent[2]
+            for acc, rj in ent[1]:
+                if u <= acc:
+                    ridx = rj
+                    break
+        if self.trace is not None:
+            self.trace.routes.append((model, ridx))
+        return ridx
+
+    # ---------------------------------------------------- gear selection
+    def select_gear(self, t: float, measured_qps: float, cur_gear: int,
+                    first_queue_len: int, n_gears: int) -> int:
+        """One producer measurement tick: apply the selection policy
+        (α-hysteresis included when composed via ``with_hysteresis``) and
+        clamp to the gear table."""
+        new = int(self.selector(t, measured_qps, cur_gear, first_queue_len))
+        new = min(max(new, 0), n_gears - 1)
+        if self.trace is not None and new != cur_gear:
+            self.trace.gear_switches.append((cur_gear, new))
+        return new
+
+    # ------------------------------------------------------ batch trigger
+    def should_fire(self, queue_len: int, head_wait: float, model: str,
+                    gear: Gear) -> bool:
+        """Fire when the queue reaches the gear's min-queue-length (§4.5) or
+        the head-of-line sample has waited ``max_wait``."""
+        if queue_len <= 0:
+            return False
+        return queue_len >= gear.min_queue_lens.get(model, 1) or \
+            head_wait >= self._fire_wait
+
+    def batch_size(self, queue_len: int) -> int:
+        return min(queue_len, self.cfg.max_batch)
+
+    # ------------------------------------------------ cascade continuation
+    def next_hop(self, stage: int, cert: float, gear: Gear) -> Hop:
+        """Resolve or forward one sample completing cascade ``stage``."""
+        ent = self._hop_memo.get((id(gear), stage))
+        if ent is None or ent[0] is not gear:
+            casc = gear.cascade
+            if stage < len(casc.thresholds):
+                thr: Optional[float] = casc.thresholds[stage]
+                fwd: Optional[CascadeHop] = CascadeHop(
+                    next_model=casc.models[stage + 1], next_stage=stage + 1)
+            else:
+                thr, fwd = None, None
+            ent = (gear, thr, fwd, Resolved(stage=stage))
+            self._hop_memo[(id(gear), stage)] = ent
+        thr = ent[1]
+        hop: Hop = ent[2] if (thr is not None and cert < thr) else ent[3]
+        if self.trace is not None:
+            out = "resolve" if isinstance(hop, Resolved) else hop.next_model
+            self.trace.hops.append((stage, float(cert), out))
+        return hop

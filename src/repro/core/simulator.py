@@ -9,6 +9,13 @@ non-certain samples cascade to the next model at batch completion. Per-sample
 certainty/correctness replays the recorded validation behaviour
 (``ModelProfile.validation``), cycling through the validation set.
 
+Every serving *decision* — routing, gear selection, batch trigger, cascade
+continuation — is delegated to the shared ``repro.core.scheduling
+.SchedulerCore``; this module is only the discrete-event *driver* (state,
+time, the event heap). The threaded ``repro.serving.runtime.CascadeServer``
+drives the very same core, so simulator and real system cannot drift
+(DESIGN.md §2; parity is asserted by ``tests/test_scheduling_parity.py``).
+
 Also executes *ensemble* gears (all members vote; used by the Cocktail+
 baseline) through the same machinery.
 
@@ -20,7 +27,6 @@ from __future__ import annotations
 
 import heapq
 import math
-from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -30,15 +36,18 @@ from repro.core.cascade import Cascade
 from repro.core.gears import Gear, GearPlan, uniform_load_fractions
 from repro.core.lp import Replica
 from repro.core.profiles import ProfileSet
+from repro.core.scheduling import (CascadeHop, DecisionTrace, GearSelector,
+                                   RoutePool, SchedulerConfig, SchedulerCore,
+                                   is_ensemble, majority_vote, plan_target,
+                                   with_hysteresis)
+
+__all__ = ["SimConfig", "SimResult", "ServingSimulator", "GearSelector",
+           "trace_to_arrivals", "make_gear"]
 
 
 @dataclass(frozen=True)
-class SimConfig:
-    max_wait: float = 0.05          # head-of-line timeout (impl. necessity)
-    measure_interval: float = 0.1   # producer QPS measurement window (§5)
-    alpha: float = 8.0              # gear-downgrade hysteresis (§5)
-    max_batch: int = 512
-    seed: int = 0
+class SimConfig(SchedulerConfig):
+    """Shared scheduling knobs plus simulator-only calibration."""
     # fixed per-batch serving overhead (queueing machinery, dispatch),
     # calibrated against the real runtime (bench_simulator_fidelity)
     dispatch_overhead: float = 0.0
@@ -90,25 +99,67 @@ class SimResult:
             if self.horizon else 0.0
 
 
-class _RepQ:
-    __slots__ = ("samples", "stages", "times")
+class _ArrayQueue:
+    """Flat ring-buffer replica queue of (sample id, stage, enqueue time).
 
-    def __init__(self):
-        self.samples: deque = deque()
-        self.stages: deque = deque()
-        self.times: deque = deque()
+    Replaces the previous three-deque replica queue: each field lives in one
+    preallocated flat ring array, so a batch pop is a contiguous slice copy
+    (two when the ring wraps) instead of ``3 * batch_size`` popleft calls +
+    per-sample tuple builds, and the head-of-line time is a single indexed
+    read. Slots are plain Python lists because the hot path is scalar reads
+    and writes — numpy's per-element coercion is ~3x slower there.
+    """
+    __slots__ = ("sid", "stage", "t", "head", "n", "cap")
 
-    def push(self, sid: int, stage: int, t: float):
-        self.samples.append(sid)
-        self.stages.append(stage)
-        self.times.append(t)
+    def __init__(self, cap: int = 64):
+        self.sid = [0] * cap
+        self.stage = [0] * cap
+        self.t = [0.0] * cap
+        self.head = 0
+        self.n = 0
+        self.cap = cap
 
-    def __len__(self):
-        return len(self.samples)
+    def __len__(self) -> int:
+        return self.n
 
+    def head_time(self) -> float:
+        return self.t[self.head]
 
-GearSelector = Callable[[float, float, int, int], int]
-# (time, measured_qps, current_gear_idx, first_model_queue_len) -> gear idx
+    def push(self, sid: int, stage: int, t: float) -> None:
+        cap = self.cap
+        if self.n == cap:
+            self._grow()
+            cap = self.cap
+        tail = self.head + self.n
+        if tail >= cap:
+            tail -= cap
+        self.sid[tail] = sid
+        self.stage[tail] = stage
+        self.t[tail] = t
+        self.n += 1
+
+    def _grow(self) -> None:
+        cap, h = self.cap, self.head
+        self.sid = self.sid[h:] + self.sid[:h] + [0] * cap
+        self.stage = self.stage[h:] + self.stage[:h] + [0] * cap
+        self.t = self.t[h:] + self.t[:h] + [0.0] * cap
+        self.head = 0
+        self.cap = cap * 2
+
+    def pop(self, k: int) -> Tuple[List[int], List[int]]:
+        """Pop the ``k`` oldest entries -> (sample ids, stages)."""
+        cap, h = self.cap, self.head
+        end = h + k
+        if end <= cap:
+            sids = self.sid[h:end]
+            stages = self.stage[h:end]
+        else:
+            sids = self.sid[h:] + self.sid[:end - cap]
+            stages = self.stage[h:] + self.stage[:end - cap]
+        self.head = end % cap
+        self.n -= k
+        return sids, stages
+
 
 # (time, device, kind, factor): kind in {"fail", "slow", "recover"}
 DeviceEvent = Tuple[float, int, str, float]
@@ -139,58 +190,74 @@ class ServingSimulator:
                   drain: float = 2.0,
                   device_events: Optional[List[DeviceEvent]] = None,
                   on_failure: Optional[Callable] = None,
-                  hedge=None) -> SimResult:
+                  hedge=None,
+                  decision_trace: Optional[DecisionTrace] = None
+                  ) -> SimResult:
         """Replay a trace (per-second QPS) with the §5 producer policy."""
         arrivals = trace_to_arrivals(qps_per_sec)
         horizon = float(len(qps_per_sec)) + drain
-
-        def selector(t: float, measured_qps: float, cur: int,
-                     q0: int) -> int:
-            target = plan.gear_index_for_qps(measured_qps)
-            if target < cur and measured_qps < self.cfg.alpha * q0:
-                return cur       # backlog hysteresis: don't downgrade yet
-            return target
-
+        selector = with_hysteresis(plan_target(plan), self.cfg.alpha)
         return self._run(arrivals, plan.gears, selector, horizon=horizon,
                          device_events=device_events, on_failure=on_failure,
-                         hedge=hedge)
+                         hedge=hedge, decision_trace=decision_trace)
 
     def run_policy(self, gears: List[Gear], selector: GearSelector,
-                   qps_per_sec: np.ndarray, drain: float = 2.0) -> SimResult:
+                   qps_per_sec: np.ndarray, drain: float = 2.0,
+                   decision_trace: Optional[DecisionTrace] = None
+                   ) -> SimResult:
         """Custom gear list + selector (baseline policies)."""
         arrivals = trace_to_arrivals(qps_per_sec)
         horizon = float(len(qps_per_sec)) + drain
-        return self._run(arrivals, gears, selector, horizon=horizon)
+        return self._run(arrivals, gears, selector, horizon=horizon,
+                         decision_trace=decision_trace)
 
     # ----------------------------------------------------------------- core
     def _run(self, arrivals: np.ndarray, gears: List[Gear],
              selector: GearSelector, horizon: float,
              device_events: Optional[List[DeviceEvent]] = None,
              on_failure: Optional[Callable] = None,
-             hedge=None) -> SimResult:
+             hedge=None,
+             decision_trace: Optional[DecisionTrace] = None) -> SimResult:
         cfg = self.cfg
         profiles = self.profiles
         replicas = self.replicas
         n_arr = len(arrivals)
-        rng = np.random.default_rng(cfg.seed)
-        route_u = rng.random(n_arr * 4 + 16)  # routing randomness pool
-        route_ptr = 0
+        core = SchedulerCore(replicas, cfg, selector=selector,
+                             trace=decision_trace)
+        pool = RoutePool.for_arrivals(cfg.seed, n_arr)
 
-        # per-sample records
+        # per-sample records (plain lists: the loop is scalar reads/writes,
+        # where list indexing beats numpy's per-element boxing ~3x; converted
+        # to arrays once at the end)
         arrive = np.asarray(arrivals, np.float64)
-        complete = np.full(n_arr, np.nan)
-        correct = np.zeros(n_arr, bool)
-        resolver = np.full(n_arr, -1, np.int32)
-        gear_of = np.zeros(n_arr, np.int32)
+        arrive_l = arrive.tolist()
+        complete = [math.nan] * n_arr
+        correct = [False] * n_arr
+        resolver = [-1] * n_arr
+        gear_of = [0] * n_arr
         # duplicate-suppression for hedged/re-issued work: a sample is only
         # processed at its current stage
-        cur_stage = np.zeros(n_arr, np.int32)
-        val_idx = np.arange(n_arr) % self._val_n
-        votes = {}           # ensemble mode: sid -> [n_remaining, n_correct_votes, n_members]
+        cur_stage = [0] * n_arr
+        val_n = self._val_n
+        votes = {}   # ensemble mode: sid -> [n_remaining, n_correct, n_members]
+        # per-model validation replay as scalar lists + per-batch-size
+        # runtime memo (same values, no repeated np.interp on the hot path)
+        certs_of = {m: p.validation.certs.tolist()
+                    for m, p in profiles.items()}
+        corr_of = {m: p.validation.correct.tolist()
+                   for m, p in profiles.items()}
+        rt_memo: Dict[Tuple[str, int], float] = {}
+        ens_memo: Dict[int, Tuple[Gear, bool]] = {}
+
+        def gear_is_ensemble(g: Gear) -> bool:
+            ent = ens_memo.get(id(g))
+            if ent is None or ent[0] is not g:
+                ent = (g, is_ensemble(g))
+                ens_memo[id(g)] = ent
+            return ent[1]
 
         # state
-        qs: List[_RepQ] = [_RepQ() for _ in replicas]
-        dev_free = np.zeros(self.num_devices)
+        qs: List[_ArrayQueue] = [_ArrayQueue() for _ in replicas]
         dev_busy = np.zeros(self.num_devices)
         dev_idle = np.ones(self.num_devices, bool)
         dev_alive = np.ones(self.num_devices, bool)
@@ -201,14 +268,8 @@ class ServingSimulator:
         switches: List[Tuple[float, int]] = []
         per_model_batches: Dict[str, int] = {}
         per_model_samples: Dict[str, int] = {}
-
-        # replica lookup per model
-        reps_of: Dict[str, List[int]] = {}
-        for i, r in enumerate(replicas):
-            reps_of.setdefault(r.model, []).append(i)
-        reps_on_dev: Dict[int, List[int]] = {}
-        for i, r in enumerate(replicas):
-            reps_on_dev.setdefault(r.device, []).append(i)
+        reps_of = core.reps_of
+        reps_on_dev = core.reps_on_dev
 
         # event heap: (time, seq, kind, payload)
         heap: List[Tuple[float, int, str, tuple]] = []
@@ -219,65 +280,53 @@ class ServingSimulator:
             heapq.heappush(heap, (t, seq, kind, payload))
             seq += 1
 
-        def route(model: str, gear: Gear) -> int:
-            nonlocal route_ptr
-            fracs = gear.load_fractions.get(model)
-            idxs = reps_of.get(model, [])
-            if not idxs:
-                raise RuntimeError(f"no replica for model {model}")
-            if not fracs:
-                u = route_u[route_ptr % len(route_u)]
-                route_ptr += 1
-                return idxs[int(u * len(idxs)) % len(idxs)]
-            u = route_u[route_ptr % len(route_u)]
-            route_ptr += 1
-            acc = 0.0
-            for ridx, f in fracs.items():
-                acc += f
-                if u <= acc + 1e-12:
-                    return ridx
-            return next(iter(fracs))
-
         def enqueue(sid: int, stage: int, model: str, t: float, gear: Gear):
-            ridx = route(model, gear)
+            ridx = core.route(model, gear, pool.next())
             qs[ridx].push(sid, stage, t)
             per_model_samples[model] = per_model_samples.get(model, 0) + 1
-            # head-of-line timeout for this enqueue
-            push_event(t + cfg.max_wait, "timeout", (ridx,))
             # consumer polls on enqueue (cascaded samples must not wait for
             # the next arrival to trigger their target device)
             try_start(ridx, t)
+            if qs[ridx].n:
+                # head-of-line timeout for this enqueue; skipped when the
+                # sample already left with the batch fired above
+                push_event(t + cfg.max_wait, "timeout", (ridx,))
+
+        max_batch = cfg.max_batch
 
         def try_start(ridx: int, t: float):
             """Start a batch on replica ridx if triggered and device idle."""
             q = qs[ridx]
-            if not len(q):
+            qlen = q.n
+            if not qlen:
                 return
             r = replicas[ridx]
             if not dev_idle[r.device] or not dev_alive[r.device]:
                 return
             gear = gears[cur_gear]
-            b_min = gear.min_queue_lens.get(r.model, 1)
-            head_wait = t - q.times[0]
-            if len(q) < b_min and head_wait < cfg.max_wait - 1e-9:
+            if not core.should_fire(qlen, t - q.t[q.head], r.model, gear):
                 return
-            bsz = min(len(q), cfg.max_batch)
-            batch = [(q.samples.popleft(), q.stages.popleft(),
-                      q.times.popleft()) for _ in range(bsz)]
-            rt = profiles[r.model].runtime(bsz) + cfg.dispatch_overhead
+            bsz = qlen if qlen < max_batch else max_batch
+            sids, stages = q.pop(bsz)
+            if decision_trace is not None:
+                decision_trace.record_fire(ridx, sids)
+            rt = rt_memo.get((r.model, bsz))
+            if rt is None:
+                rt = profiles[r.model].runtime(bsz) + cfg.dispatch_overhead
+                rt_memo[(r.model, bsz)] = rt
             rt_actual = rt * dev_speed[r.device]
             dev_idle[r.device] = False
             dev_busy[r.device] += rt_actual
             per_model_batches[r.model] = per_model_batches.get(r.model, 0) + 1
             push_event(t + rt_actual, "complete",
-                       (ridx, batch, dev_epoch[r.device]))
+                       (ridx, sids, stages, dev_epoch[r.device]))
             if hedge is not None and hedge.enabled and \
                     rt_actual > hedge.hedge_multiplier * rt:
                 # straggler: re-issue on a sibling replica after the
                 # expected runtime; duplicate completions are suppressed
                 # by the per-sample stage guard
                 push_event(t + rt * hedge.hedge_multiplier, "hedge",
-                           (ridx, batch))
+                           (ridx, sids, stages))
 
         def finish_sample(sid: int, stage: int, t: float, is_correct: bool):
             complete[sid] = t
@@ -285,30 +334,29 @@ class ServingSimulator:
             resolver[sid] = stage
             cur_stage[sid] = 1 << 30
 
-        def on_complete(ridx: int, batch, t: float):
+        def on_complete(ridx: int, sids, stages, t: float):
             r = replicas[ridx]
-            rec = profiles[r.model].validation
-            for sid, stage, _ in batch:
+            certs = certs_of[r.model]
+            corr = corr_of[r.model]
+            for sid, stage in zip(sids, stages):
                 if cur_stage[sid] != stage:
                     continue  # hedged duplicate / stale work
                 g = gears[gear_of[sid]]
-                vi = val_idx[sid]
-                if getattr(g, "mode", "cascade") == "ensemble":
+                vi = sid % val_n
+                if gear_is_ensemble(g):
                     st = votes[sid]
                     st[0] -= 1
-                    st[1] += int(rec.correct[vi])
+                    st[1] += int(corr[vi])
                     if st[0] == 0:
                         finish_sample(sid, stage, t,
-                                      st[1] * 2 > st[2])
+                                      majority_vote(st[1], st[2]))
                     continue
-                casc = g.cascade
-                if stage < len(casc.thresholds) and \
-                        rec.certs[vi] < casc.thresholds[stage]:
-                    nxt = casc.models[stage + 1]
-                    cur_stage[sid] = stage + 1
-                    enqueue(sid, stage + 1, nxt, t, g)
+                hop = core.next_hop(stage, certs[vi], g)
+                if isinstance(hop, CascadeHop):
+                    cur_stage[sid] = hop.next_stage
+                    enqueue(sid, hop.next_stage, hop.next_model, t, g)
                 else:
-                    finish_sample(sid, stage, t, bool(rec.correct[vi]))
+                    finish_sample(sid, stage, t, corr[vi])
             if dev_alive[r.device]:
                 dev_idle[r.device] = True
                 for rj in reps_on_dev.get(r.device, []):
@@ -322,8 +370,8 @@ class ServingSimulator:
             for rj in reps_of.get(model, []):
                 if rj == ridx or not dev_alive[replicas[rj].device]:
                     continue
-                if best is None or len(qs[rj]) < best_q:
-                    best, best_q = rj, len(qs[rj])
+                if best is None or qs[rj].n < best_q:
+                    best, best_q = rj, qs[rj].n
             return best
 
         def on_device_event(t: float, dev: int, kind: str, factor: float):
@@ -336,6 +384,12 @@ class ServingSimulator:
                 if not dev_alive[dev]:
                     dev_alive[dev] = True
                     dev_idle[dev] = True
+                    # work routed here during the outage has only expired
+                    # timeouts left — restart it now
+                    for rj in reps_on_dev.get(dev, []):
+                        try_start(rj, t)
+                        if not dev_idle[dev]:
+                            break
                 return
             # fail: kill the device, invalidate its in-flight batch, move
             # queued samples to sibling replicas
@@ -343,14 +397,13 @@ class ServingSimulator:
             dev_idle[dev] = False
             dev_epoch[dev] += 1
             for rj in reps_on_dev.get(dev, []):
-                q = qs[rj]
-                moved = [(q.samples.popleft(), q.stages.popleft(),
-                          q.times.popleft()) for _ in range(len(q))]
+                sids, stages = qs[rj].pop(qs[rj].n)
                 alt = sibling_replica(rj)
-                for sid, stage, _t0 in moved:
-                    if alt is not None:
-                        qs[alt].push(sid, stage, t)
-                        push_event(t + cfg.max_wait, "timeout", (alt,))
+                if alt is None:
+                    continue
+                for sid, stage in zip(sids, stages):
+                    qs[alt].push(sid, stage, t)
+                    push_event(t + cfg.max_wait, "timeout", (alt,))
             if on_failure is not None:
                 new_gears = on_failure(t, dev)
                 if new_gears is not None:
@@ -367,7 +420,7 @@ class ServingSimulator:
         arr_ptr = 0
         inf = math.inf
         while True:
-            t_arr = arrive[arr_ptr] if arr_ptr < n_arr else inf
+            t_arr = arrive_l[arr_ptr] if arr_ptr < n_arr else inf
             t_evt = heap[0][0] if heap else inf
             t = min(t_arr, t_evt, meas_end)
             if t > horizon or t == inf:
@@ -378,9 +431,9 @@ class ServingSimulator:
                 g = gears[cur_gear]
                 m0 = g.cascade.models[0]
                 for ridx in reps_of.get(m0, []):
-                    first_q += len(qs[ridx])
-                new_gear = selector(t, measured, cur_gear, first_q)
-                new_gear = int(np.clip(new_gear, 0, len(gears) - 1))
+                    first_q += qs[ridx].n
+                new_gear = core.select_gear(t, measured, cur_gear, first_q,
+                                            len(gears))
                 if new_gear != cur_gear:
                     switches.append((t, new_gear))
                     cur_gear = new_gear
@@ -393,56 +446,60 @@ class ServingSimulator:
                 meas_count += 1
                 g = gears[cur_gear]
                 gear_of[sid] = cur_gear
-                if getattr(g, "mode", "cascade") == "ensemble":
+                if gear_is_ensemble(g):
                     members = g.cascade.models
                     votes[sid] = [len(members), 0, len(members)]
                     for m in members:
                         enqueue(sid, 0, m, t_arr, g)
                 else:
                     enqueue(sid, 0, g.cascade.models[0], t_arr, g)
-                ridx_hint = None
-                for d in range(self.num_devices):
-                    if dev_idle[d]:
-                        for rj in reps_on_dev.get(d, []):
-                            try_start(rj, t_arr)
             else:
                 _, _, kind, payload = heapq.heappop(heap)
                 if kind == "complete":
-                    ridx, batch, epoch = payload
+                    ridx, sids, stages, epoch = payload
                     if epoch != dev_epoch[replicas[ridx].device]:
                         # device died mid-batch: re-issue surviving work
                         alt = sibling_replica(ridx)
-                        for sid, stage, _t0 in batch:
-                            if alt is not None and cur_stage[sid] == stage:
-                                qs[alt].push(sid, stage, t_evt)
-                                push_event(t_evt + cfg.max_wait, "timeout",
-                                           (alt,))
+                        if alt is not None:
+                            for sid, stage in zip(sids, stages):
+                                if cur_stage[sid] == stage:
+                                    qs[alt].push(sid, stage, t_evt)
+                                    push_event(t_evt + cfg.max_wait,
+                                               "timeout", (alt,))
                     else:
-                        on_complete(ridx, batch, t_evt)
+                        on_complete(ridx, sids, stages, t_evt)
                 elif kind == "timeout":
                     try_start(payload[0], t_evt)
                 elif kind == "hedge":
-                    ridx, batch = payload
+                    ridx, sids, stages = payload
                     alt = sibling_replica(ridx)
                     if alt is not None:
                         pushed = False
-                        for sid, stage, _t0 in batch:
+                        for sid, stage in zip(sids, stages):
                             if cur_stage[sid] == stage:
                                 qs[alt].push(sid, stage, t_evt)
                                 pushed = True
                         if pushed:
+                            # immediate poll, plus the head-of-line timeout
+                            # in case the sibling is below its min-queue
+                            # trigger right now
                             push_event(t_evt, "timeout", (alt,))
+                            push_event(t_evt + cfg.max_wait, "timeout",
+                                       (alt,))
                 elif kind == "devevent":
                     on_device_event(t_evt, *payload)
 
-        done = ~np.isnan(complete)
+        complete_a = np.asarray(complete, np.float64)
+        correct_a = np.asarray(correct, bool)
+        resolver_a = np.asarray(resolver, np.int32)
+        done = ~np.isnan(complete_a)
         backlog = int(n_arr - done.sum())
         return SimResult(
-            latencies=(complete[done] - arrive[done]),
-            correct=correct[done],
+            latencies=(complete_a[done] - arrive[done]),
+            correct=correct_a[done],
             arrive_times=arrive[done],
-            complete_times=complete[done],
-            resolver=resolver[done],
+            complete_times=complete_a[done],
+            resolver=resolver_a[done],
             completed=int(done.sum()),
             offered=n_arr,
             backlog_end=backlog,

@@ -32,8 +32,10 @@ def azure_like_trace(seconds: int = 1200, peak_qps: float = 60.0,
     spikes and second-scale burstiness (cf. Shahrad et al. 2020)."""
     rng = np.random.default_rng(seed)
     t = np.arange(seconds, dtype=np.float64)
-    base = np.exp(rng.normal(0.0, 0.45, seconds)).cumsum()
-    base = np.exp(np.sin(2 * np.pi * t / 600.0) * 0.5)  # slow oscillation
+    # bursty base load: geometric random walk (damped so the drift stays
+    # O(1) over the window) modulated by a slow oscillation
+    walk = rng.normal(0.0, 0.45, seconds).cumsum() * 0.1
+    base = np.exp(walk + np.sin(2 * np.pi * t / 600.0) * 0.5)
     noise = np.exp(rng.normal(0, 0.35, seconds))
     spikes = np.zeros(seconds)
     n_spikes = max(3, seconds // 240)

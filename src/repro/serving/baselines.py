@@ -13,6 +13,12 @@ discrete-event simulator as CascadeServe for apples-to-apples cost curves.
 Each baseline exposes ``build(profiles, hardware, slo, qps_max)`` returning
 (gears, selector, replicas, num_devices) for ``ServingSimulator.run_policy``,
 plus a small hyperparameter grid (the paper grid-searches baselines).
+
+The selectors conform to the shared ``repro.core.scheduling.GearSelector``
+protocol — the same contract the §5 producer policy uses — so every
+baseline can also execute on the REAL runtime: ``build_plan`` packages the
+policy as ``(GearPlan, selector)`` for
+``CascadeServer(plan, engines, selector=selector)``.
 """
 from __future__ import annotations
 
@@ -28,7 +34,35 @@ from repro.core.gears import Gear, GearPlan, SLO, uniform_load_fractions
 from repro.core.lp import Replica
 from repro.core.plan_state import HardwareSpec
 from repro.core.profiles import ProfileSet
-from repro.core.simulator import GearSelector, make_gear
+from repro.core.scheduling import GearSelector, is_ensemble
+from repro.core.simulator import make_gear
+
+
+class BaselinePolicy:
+    """Shared packaging: any policy whose ``build`` returns
+    (gears, selector, replicas, num_devices) can run on either executor."""
+
+    def build(self, profiles: ProfileSet, hw: HardwareSpec, slo: SLO,
+              qps_max: float
+              ) -> Tuple[List[Gear], GearSelector, List[Replica], int]:
+        raise NotImplementedError
+
+    def build_plan(self, profiles: ProfileSet, hw: HardwareSpec, slo: SLO,
+                   qps_max: float) -> Tuple[GearPlan, GearSelector]:
+        """The same policy as a (GearPlan, GearSelector) pair, directly
+        servable by ``CascadeServer(plan, engines, selector=selector)``."""
+        gears, selector, reps, num_devices = self.build(
+            profiles, hw, slo, qps_max)
+        if any(is_ensemble(g) for g in gears):
+            # CascadeServer has no voting path: a silent fallback would
+            # serve only the first ensemble member and misreport accuracy
+            raise NotImplementedError(
+                "ensemble-mode gears execute on the simulator only; the "
+                "real runtime cannot majority-vote yet")
+        plan = GearPlan(qps_max=qps_max, gears=list(gears),
+                        replicas=list(reps), num_devices=num_devices,
+                        slo=slo)
+        return plan, selector
 
 
 def _replicate_everywhere(profiles: ProfileSet, models: Sequence[str],
@@ -61,7 +95,7 @@ def _replicate_everywhere(profiles: ProfileSet, models: Sequence[str],
 # ---------------------------------------------------------------------------
 
 @dataclass
-class DynBaPolicy:
+class DynBaPolicy(BaselinePolicy):
     model: str
 
     def build(self, profiles: ProfileSet, hw: HardwareSpec, slo: SLO,
@@ -80,7 +114,7 @@ class DynBaPolicy:
 # ---------------------------------------------------------------------------
 
 @dataclass
-class MSPlusPolicy:
+class MSPlusPolicy(BaselinePolicy):
     n_ranges: int = 8
     # safety factor on the capacity estimate when choosing the model per range
     headroom: float = 1.0
@@ -118,7 +152,7 @@ class MSPlusPolicy:
 # ---------------------------------------------------------------------------
 
 @dataclass
-class CocktailPlusPolicy:
+class CocktailPlusPolicy(BaselinePolicy):
     scale_interval: float = 10.0   # coarse autoscaling period (paper §6.3)
     target_util: float = 0.7
     ensemble_size: int = 3         # odd, majority vote

@@ -7,6 +7,17 @@ consumer thread per device polls its replicas' queues and triggers inference
 when a queue reaches the gear's min-queue-length (or the head-of-line
 timeout fires); non-certain samples cascade to the next model's queue.
 
+Every serving *decision* — routing, gear selection, batch trigger, cascade
+continuation — is delegated to the shared ``repro.core.scheduling
+.SchedulerCore``, the same object the discrete-event simulator drives, so
+the gear planner's simulator cannot drift from the served system (DESIGN.md
+§2). This module owns only threads, queues and the wall clock. The decision
+path is factored into step methods (``submit`` / ``_poll_replica`` /
+``_run_batch`` / ``_gear_step``) that the threaded loops call with wall
+time and ``run_virtual`` calls with simulated time — the latter makes the
+runtime's decisions deterministic and directly comparable to the simulator
+(tests/test_scheduling_parity.py).
+
 In the paper each box is a Ray actor; here they are threads in one process
 (the decision logic — the paper's contribution — is identical; process
 isolation is an orchestration detail, DESIGN.md §3). Wall-clock timing makes
@@ -14,16 +25,20 @@ this the ground truth for the simulator-fidelity benchmark (Fig. 13).
 """
 from __future__ import annotations
 
+import heapq
 import threading
 import time
 from collections import deque
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.certainty import CERTAINTY_ESTIMATORS
 from repro.core.gears import GearPlan
+from repro.core.scheduling import (CascadeHop, DecisionTrace, GearSelector,
+                                   RoutePool, SchedulerConfig, SchedulerCore,
+                                   plan_target, with_hysteresis)
 from repro.serving.engine import InferenceEngine
 
 
@@ -67,130 +82,152 @@ class _ReplicaQueue:
 
 
 class CascadeServer:
-    """Gear-plan-driven online server over real InferenceEngines."""
+    """Gear-plan-driven online server over real InferenceEngines.
+
+    ``selector`` overrides the default §5 plan policy (plan target composed
+    with α-hysteresis) — this is how the baseline policies of
+    ``repro.serving.baselines`` execute on the real runtime, via the same
+    ``GearSelector`` protocol the simulator uses.
+    """
 
     def __init__(self, plan: GearPlan, engines: Dict[str, InferenceEngine],
-                 estimator: str = "top2_gap", alpha: float = 8.0,
+                 estimator="top2_gap", alpha: float = 8.0,
                  measure_interval: float = 0.1, max_wait: float = 0.05,
-                 max_batch: int = 128):
+                 max_batch: int = 128,
+                 selector: Optional[GearSelector] = None,
+                 route_pool: Optional[RoutePool] = None,
+                 decision_trace: Optional[DecisionTrace] = None,
+                 seed: int = 0):
         self.plan = plan
         self.engines = engines
-        self.est = CERTAINTY_ESTIMATORS[estimator]
-        self.alpha = alpha
-        self.measure_interval = measure_interval
-        self.max_wait = max_wait
-        self.max_batch = max_batch
+        self.est = estimator if callable(estimator) \
+            else CERTAINTY_ESTIMATORS[estimator]
+        self.cfg = SchedulerConfig(
+            max_wait=max_wait, measure_interval=measure_interval,
+            alpha=alpha, max_batch=max_batch, seed=seed)
+        self.core = SchedulerCore(
+            plan.replicas, self.cfg,
+            selector=selector or with_hysteresis(plan_target(plan), alpha),
+            trace=decision_trace)
+        self.route_pool = route_pool or RoutePool(seed)
 
         self.queues: List[_ReplicaQueue] = [
             _ReplicaQueue() for _ in plan.replicas]
-        self._reps_of: Dict[str, List[int]] = {}
-        for i, r in enumerate(plan.replicas):
-            self._reps_of.setdefault(r.model, []).append(i)
-        self._reps_on_dev: Dict[int, List[int]] = {}
-        for i, r in enumerate(plan.replicas):
-            self._reps_on_dev.setdefault(r.device, []).append(i)
-
         self.cur_gear = 0
         self._arr_count = 0
         self._count_lock = threading.Lock()
-        self._rng = np.random.default_rng(0)
         self._stop = threading.Event()
         self.completed: List[Request] = []
         self._done_lock = threading.Lock()
         self.gear_switches: List = []
         self._threads: List[threading.Thread] = []
 
-    # ---------------------------------------------------------------- routing
-    def _route(self, model: str) -> int:
-        gear = self.plan.gears[self.cur_gear]
-        fracs = gear.load_fractions.get(model)
-        idxs = self._reps_of[model]
-        if not fracs:
-            return idxs[self._rng.integers(len(idxs))]
-        u = self._rng.random()
-        acc = 0.0
-        for ridx, f in fracs.items():
-            acc += f
-            if u <= acc + 1e-12:
-                return ridx
-        return next(iter(fracs))
+    # --------------------------------------------------- decision steps
+    # These four methods are the ONLY places serving decisions are taken,
+    # and each consists of one SchedulerCore call plus state updates. The
+    # threaded loops feed them wall time; run_virtual feeds them simulated
+    # time. Policy must go into the core, never in here.
 
-    def submit(self, req: Request) -> None:
-        req.t_arrive = time.monotonic()
+    def submit(self, req: Request, now: Optional[float] = None) -> int:
+        """Accept one request: stamp arrival, route to a replica queue of
+        the current gear's first model. Returns the chosen replica index."""
+        t = time.monotonic() if now is None else now
+        req.t_arrive = t
         with self._count_lock:
             self._arr_count += 1
         req.gear_idx = self.cur_gear
         gear = self.plan.gears[self.cur_gear]
         req.stage = 0
-        self.queues[self._route(gear.cascade.models[0])].push(
-            req, req.t_arrive)
+        ridx = self.core.route(gear.cascade.models[0], gear,
+                               self.route_pool.next())
+        self.queues[ridx].push(req, t)
+        return ridx
 
-    # -------------------------------------------------------------- producer
-    def _producer_loop(self):
-        """QPS measurement + gear switching (§5)."""
-        while not self._stop.is_set():
-            time.sleep(self.measure_interval)
-            with self._count_lock:
-                measured = self._arr_count / self.measure_interval
-                self._arr_count = 0
-            gear = self.plan.gears[self.cur_gear]
-            q0 = sum(len(self.queues[i])
-                     for i in self._reps_of[gear.cascade.models[0]])
-            target = self.plan.gear_index_for_qps(measured)
-            if target < self.cur_gear and measured < self.alpha * q0:
-                continue  # hysteresis: drain the backlog first
-            if target != self.cur_gear:
-                self.gear_switches.append((time.monotonic(), target))
-                self.cur_gear = target
+    def _gear_step(self, now: float, measured_qps: float) -> None:
+        """One producer measurement tick (§5)."""
+        gear = self.plan.gears[self.cur_gear]
+        q0 = sum(len(self.queues[i])
+                 for i in self.core.reps_of[gear.cascade.models[0]])
+        new = self.core.select_gear(now, measured_qps, self.cur_gear, q0,
+                                    len(self.plan.gears))
+        if new != self.cur_gear:
+            self.gear_switches.append((now, new))
+            self.cur_gear = new
 
-    # -------------------------------------------------------------- consumer
-    def _consumer_loop(self, device: int):
-        my_reps = self._reps_on_dev.get(device, [])
-        while not self._stop.is_set():
-            ran = False
-            now = time.monotonic()
-            gear = self.plan.gears[self.cur_gear]
-            for ridx in my_reps:
-                q = self.queues[ridx]
-                if not len(q):
-                    continue
-                model = self.plan.replicas[ridx].model
-                b_min = gear.min_queue_lens.get(model, 1)
-                head = q.head_time()
-                if len(q) < b_min and (head is None or
-                                       now - head < self.max_wait):
-                    continue
-                batch = q.pop_batch(self.max_batch)
-                if not batch:
-                    continue
-                self._run_batch(model, batch)
-                ran = True
-            if not ran:
-                time.sleep(0.0005)
+    def _poll_replica(self, ridx: int, now: float) -> Optional[List]:
+        """Batch-trigger decision for one replica: pop and return the batch
+        if the core says fire, else None."""
+        q = self.queues[ridx]
+        qlen = len(q)
+        if not qlen:
+            return None
+        model = self.plan.replicas[ridx].model
+        head = q.head_time()
+        head_wait = now - head if head is not None else 0.0
+        gear = self.plan.gears[self.cur_gear]
+        if not self.core.should_fire(qlen, head_wait, model, gear):
+            return None
+        batch = q.pop_batch(self.core.batch_size(qlen))
+        if not batch:
+            return None
+        if self.core.trace is not None:
+            self.core.trace.record_fire(ridx, [r.rid for r, _ in batch])
+        return batch
 
-    def _run_batch(self, model: str, batch: List) -> None:
+    def _run_batch(self, model: str, batch: List,
+                   now: Optional[float] = None,
+                   on_enqueue: Optional[Callable[[int, float], None]] = None
+                   ) -> None:
+        """Infer one batch, then resolve or cascade each sample per the
+        core's continuation decision. ``on_enqueue(ridx, t)`` is notified of
+        each cascade push (run_virtual uses it to schedule polls; the
+        threaded consumers poll continuously and pass nothing)."""
         reqs = [r for r, _ in batch]
         tokens = np.stack([r.tokens for r in reqs])
         scores = self.engines[model].infer(tokens)
-        certs = np.asarray(self.est(scores))
+        certs = np.asarray(self.est(scores), np.float64)
         preds = scores.argmax(-1)
-        t = time.monotonic()
+        t = time.monotonic() if now is None else now
         for i, req in enumerate(reqs):
             gear = self.plan.gears[req.gear_idx]
-            casc = gear.cascade
-            stage = req.stage
-            if stage < len(casc.thresholds) and \
-                    certs[i] < casc.thresholds[stage]:
-                req.stage += 1
-                nxt = casc.models[stage + 1]
-                self.queues[self._route(nxt)].push(req, t)
+            hop = self.core.next_hop(req.stage, float(certs[i]), gear)
+            if isinstance(hop, CascadeHop):
+                req.stage = hop.next_stage
+                ridx = self.core.route(hop.next_model, gear,
+                                       self.route_pool.next())
+                self.queues[ridx].push(req, t)
+                if on_enqueue is not None:
+                    on_enqueue(ridx, t)
             else:
                 req.t_done = t
                 req.pred = int(preds[i])
                 req.cert = float(certs[i])
-                req.resolver = stage
+                req.resolver = hop.stage
                 with self._done_lock:
                     self.completed.append(req)
+
+    # -------------------------------------------------- threaded drivers
+    def _producer_loop(self):
+        """QPS measurement + gear switching (§5)."""
+        while not self._stop.is_set():
+            time.sleep(self.cfg.measure_interval)
+            with self._count_lock:
+                measured = self._arr_count / self.cfg.measure_interval
+                self._arr_count = 0
+            self._gear_step(time.monotonic(), measured)
+
+    def _consumer_loop(self, device: int):
+        my_reps = self.core.reps_on_dev.get(device, [])
+        while not self._stop.is_set():
+            ran = False
+            now = time.monotonic()
+            for ridx in my_reps:
+                batch = self._poll_replica(ridx, now)
+                if batch:
+                    self._run_batch(self.plan.replicas[ridx].model, batch)
+                    ran = True
+            if not ran:
+                time.sleep(0.0005)
 
     # ------------------------------------------------------------- lifecycle
     def start(self) -> None:
@@ -225,4 +262,96 @@ class CascadeServer:
             self.submit(requests[i])
         time.sleep(drain)
         self.stop()
+        return list(self.completed)
+
+    # ------------------------------------------------- virtual-time driver
+    def run_virtual(self, requests: Sequence[Request],
+                    qps_per_sec: np.ndarray,
+                    batch_runtime: Callable[[str, int], float],
+                    drain: float = 2.0) -> List[Request]:
+        """Deterministic open-loop replay in VIRTUAL time: no threads, no
+        wall clock, no sleeps.
+
+        Exercises the identical decision path as the threaded server —
+        ``submit`` → ``_poll_replica`` → ``_run_batch`` → ``_gear_step`` —
+        but drives it from a discrete event loop whose service times come
+        from ``batch_runtime(model, batch_size)`` (e.g. a ModelProfile's
+        ``runtime``) instead of the wall clock. Event ordering mirrors the
+        simulator's loop (arrivals win ties over queue events; measurement
+        ticks fire only when strictly earliest), so a ``DecisionTrace``
+        captured here is directly comparable to one from
+        ``ServingSimulator.run_trace`` — that equality is the planner's
+        fidelity contract (tests/test_scheduling_parity.py).
+        """
+        from repro.core.simulator import trace_to_arrivals
+        arrivals = trace_to_arrivals(qps_per_sec).tolist()
+        n_arr = len(arrivals)
+        assert len(requests) >= n_arr
+        horizon = float(len(qps_per_sec)) + drain
+        replicas = self.plan.replicas
+        reps_on_dev = self.core.reps_on_dev
+        max_wait = self.cfg.max_wait
+        dev_idle = [True] * self.plan.num_devices
+
+        heap: List[Tuple[float, int, str, tuple]] = []
+        seq = 0
+
+        def push_event(t, kind, payload):
+            nonlocal seq
+            heapq.heappush(heap, (t, seq, kind, payload))
+            seq += 1
+
+        def try_fire(ridx: int, t: float):
+            dev = replicas[ridx].device
+            if not dev_idle[dev]:
+                return
+            batch = self._poll_replica(ridx, t)
+            if not batch:
+                return
+            rt = batch_runtime(replicas[ridx].model, len(batch))
+            dev_idle[dev] = False
+            push_event(t + rt, "complete", (ridx, batch))
+
+        def on_enqueue(ridx: int, t: float):
+            # mirror the simulator's enqueue: poll the target replica, then
+            # arm the head-of-line timeout if the sample is still queued
+            try_fire(ridx, t)
+            if len(self.queues[ridx]):
+                push_event(t + max_wait, "timeout", (ridx,))
+
+        meas_end = self.cfg.measure_interval
+        arr_ptr = 0
+        inf = float("inf")
+        while True:
+            t_arr = arrivals[arr_ptr] if arr_ptr < n_arr else inf
+            t_evt = heap[0][0] if heap else inf
+            t = min(t_arr, t_evt, meas_end)
+            if t > horizon or t == inf:
+                break
+            if t == meas_end and t < min(t_arr, t_evt):
+                with self._count_lock:
+                    measured = self._arr_count / self.cfg.measure_interval
+                    self._arr_count = 0
+                self._gear_step(t, measured)
+                meas_end += self.cfg.measure_interval
+                continue
+            if t_arr <= t_evt:
+                ridx = self.submit(requests[arr_ptr], now=t_arr)
+                arr_ptr += 1
+                on_enqueue(ridx, t_arr)
+            else:
+                _, _, kind, payload = heapq.heappop(heap)
+                if kind == "complete":
+                    ridx, batch = payload
+                    dev = replicas[ridx].device
+                    self._run_batch(replicas[ridx].model, batch, now=t_evt,
+                                    on_enqueue=on_enqueue)
+                    dev_idle[dev] = True
+                    for rj in reps_on_dev.get(dev, []):
+                        try_fire(rj, t_evt)
+                        if not dev_idle[dev]:
+                            break
+                else:  # timeout
+                    try_fire(payload[0], t_evt)
+
         return list(self.completed)

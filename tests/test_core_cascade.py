@@ -1,6 +1,7 @@
 """Cascade semantics + certainty estimation, incl. hypothesis properties."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cascade import (Cascade, enumerate_model_orderings,

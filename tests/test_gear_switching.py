@@ -1,6 +1,7 @@
 """Producer gear-switching semantics: §5 α-hysteresis + Eq.-5 property."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cascade import Cascade

@@ -2,6 +2,7 @@
 properties and the bisection <-> direct-LP cross-check."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.lp import (Replica, linprog, min_utilization,

@@ -1,0 +1,242 @@
+"""Decision parity between the two executors (the planner's fidelity
+contract, paper §5 / App. C / Fig. 13).
+
+The same gear plan, profiles and arrival schedule are fed through the
+discrete-event ``ServingSimulator`` and the real ``CascadeServer`` (driven
+in virtual time so its threads' wall clock is out of the picture), both
+delegating every decision to the shared ``SchedulerCore``. The recorded
+decision traces — replica routing, gear switches (α-hysteresis), batch
+firings (min-queue trigger + head-of-line timeout), and cascade
+continuations — must be *identical*, element for element.
+
+Plus unit coverage of the core's four decision functions.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (DecisionTrace, RoutePool, SchedulerConfig,
+                        SchedulerCore, ServingSimulator, SimConfig,
+                        plan_target, with_hysteresis)
+from repro.core.cascade import Cascade
+from repro.core.gears import GearPlan, SLO
+from repro.core.lp import Replica
+from repro.core.scheduling import CascadeHop, Resolved
+from repro.core.simulator import make_gear, trace_to_arrivals
+from repro.serving.runtime import CascadeServer, Request
+
+
+class _ReplayEngine:
+    """Fake engine: emits each request's profile-recorded certainty in
+    scores[:, 0] (tokens[0] carries the rid), so the runtime replays the
+    exact validation behaviour the simulator replays."""
+
+    def __init__(self, certs):
+        self.certs = np.asarray(certs, np.float64)
+
+    def infer(self, tokens):
+        vi = np.asarray(tokens)[:, 0] % len(self.certs)
+        out = np.zeros((len(vi), 2))
+        out[:, 0] = self.certs[vi]
+        return out
+
+
+def _cert_estimator(scores):
+    return scores[:, 0]
+
+
+def _setup(profiles):
+    models = ("tiny", "base")
+    reps = [Replica(m, d, profiles[m].runtime_per_sample(1.0))
+            for d in range(2) for m in models]
+    # gear 0: cascade with a real threshold + batch trigger > 1 (so the
+    # head-of-line timeout path fires); gear 1: cheap single model
+    g0 = make_gear(Cascade(models, (0.35,)), reps, {"tiny": 2})
+    g1 = make_gear(Cascade(("tiny",), ()), reps, {"tiny": 4})
+    plan = GearPlan(qps_max=400.0, gears=[g0, g1], replicas=reps,
+                    num_devices=2, slo=SLO(kind="latency", latency_p95=1.0))
+    # load step up (forces an upshift) then back down (hysteresis +
+    # downshift), long enough to drain
+    trace = np.concatenate([np.full(3, 40.0), np.full(3, 350.0),
+                            np.full(4, 40.0)])
+    return reps, plan, trace
+
+
+def test_executors_make_identical_decisions(bert_like_profiles):
+    profiles = bert_like_profiles
+    reps, plan, trace = _setup(profiles)
+    n_arr = len(trace_to_arrivals(trace))
+
+    tr_sim = DecisionTrace()
+    sim = ServingSimulator(profiles, plan.replicas, 2,
+                           SimConfig(max_batch=128))
+    res = sim.run_trace(plan, trace, decision_trace=tr_sim)
+
+    tr_srv = DecisionTrace()
+    engines = {m: _ReplayEngine(profiles[m].validation.certs)
+               for m in ("tiny", "base")}
+    server = CascadeServer(
+        plan, engines, estimator=_cert_estimator, max_batch=128,
+        route_pool=RoutePool.for_arrivals(0, n_arr),
+        decision_trace=tr_srv)
+    reqs = [Request(rid=i, tokens=np.array([i], np.int64))
+            for i in range(n_arr)]
+    done = server.run_virtual(
+        reqs, trace, batch_runtime=lambda m, b: profiles[m].runtime(b))
+
+    # the scenario must actually exercise every decision type
+    assert len(tr_sim.gear_switches) >= 2     # up AND back down
+    assert len(tr_sim.fires) > 10
+    assert any(h[2] != "resolve" for h in tr_sim.hops)   # cascaded work
+    assert any(h[2] == "resolve" for h in tr_sim.hops)
+
+    # decision-trace equality, element for element
+    assert tr_sim.routes == tr_srv.routes
+    assert tr_sim.gear_switches == tr_srv.gear_switches
+    assert tr_sim.fires == tr_srv.fires
+    assert tr_sim.hops == tr_srv.hops
+
+    # and the executors agree end-to-end
+    assert res.completed == len(done)
+    srv_by_rid = {r.rid: r for r in done}
+    assert res.completed == res.offered == len(srv_by_rid)
+
+
+def test_baseline_policy_runs_on_real_runtime(bert_like_profiles):
+    """MS+ (a baseline built for the simulator) served by CascadeServer via
+    the shared GearSelector protocol."""
+    from repro.core.plan_state import HardwareSpec
+    from repro.serving.baselines import MSPlusPolicy
+
+    profiles = bert_like_profiles
+    hw = HardwareSpec(num_devices=2, mem_per_device=16e9)
+    slo = SLO(kind="latency", latency_p95=0.4)
+    plan, selector = MSPlusPolicy(n_ranges=4).build_plan(
+        profiles, hw, slo, qps_max=2000.0)
+    trace = np.concatenate([np.full(3, 50.0), np.full(3, 1800.0)])
+    n_arr = len(trace_to_arrivals(trace))
+    engines = {m: _ReplayEngine(profiles[m].validation.certs)
+               for m in profiles}
+    server = CascadeServer(plan, engines, estimator=_cert_estimator,
+                           selector=selector)
+    reqs = [Request(rid=i, tokens=np.array([i], np.int64))
+            for i in range(n_arr)]
+    done = server.run_virtual(
+        reqs, trace, batch_runtime=lambda m, b: profiles[m].runtime(b))
+    assert len(done) >= 0.9 * n_arr
+    assert len(server.gear_switches) >= 1    # the policy actually switched
+
+    # the same policy on the simulator sees the same gear sequence
+    gears, sel, reps, nd = MSPlusPolicy(n_ranges=4).build(
+        profiles, hw, slo, 2000.0)
+    r_sim = ServingSimulator(profiles, reps, nd).run_policy(
+        gears, sel, trace)
+    assert [g for _, g in r_sim.gear_switches] == \
+        [g for _, g in server.gear_switches]
+
+
+# ---------------------------------------------------------------------------
+# Unit coverage of the four decision functions
+# ---------------------------------------------------------------------------
+
+def _core(reps, **cfg_kw):
+    return SchedulerCore(reps, SchedulerConfig(**cfg_kw))
+
+
+def test_route_follows_load_fractions(bert_like_profiles):
+    reps = [Replica("tiny", 0, 1e-3), Replica("tiny", 1, 1e-3)]
+    g = make_gear(Cascade(("tiny",), ()), reps,
+                  load_fractions={"tiny": {0: 0.25, 1: 0.75}})
+    core = _core(reps)
+    picks = [core.route("tiny", g, u) for u in np.linspace(0.001, 0.999, 200)]
+    frac0 = picks.count(0) / len(picks)
+    assert 0.2 < frac0 < 0.3
+    # deterministic in u
+    assert core.route("tiny", g, 0.1) == core.route("tiny", g, 0.1)
+    with pytest.raises(RuntimeError):
+        core.route("nope", g, 0.5)
+
+
+def test_hysteresis_holds_downgrade_until_drained():
+    sel = with_hysteresis(lambda t, q, cur, q0: 0, alpha=8.0)
+    # large backlog: hold the current (fast) gear
+    assert sel(0.0, 100.0, 2, 1000) == 2
+    # backlog drained: allow the downgrade
+    assert sel(0.0, 100.0, 2, 1) == 0
+    # upgrades are never held
+    up = with_hysteresis(lambda t, q, cur, q0: 3, alpha=8.0)
+    assert up(0.0, 100.0, 1, 10 ** 6) == 3
+
+
+def test_select_gear_clamps_and_records():
+    reps = [Replica("a", 0, 1e-3)]
+    tr = DecisionTrace()
+    core = SchedulerCore(reps, SchedulerConfig(),
+                         selector=lambda t, q, cur, q0: 99, trace=tr)
+    assert core.select_gear(0.0, 10.0, 0, 0, n_gears=3) == 2
+    assert tr.gear_switches == [(0, 2)]
+
+
+def test_should_fire_trigger_and_timeout():
+    reps = [Replica("a", 0, 1e-3)]
+    g = make_gear(Cascade(("a",), ()), reps, {"a": 4})
+    core = _core(reps, max_wait=0.05)
+    assert not core.should_fire(0, 99.0, "a", g)          # empty queue
+    assert not core.should_fire(3, 0.01, "a", g)          # below trigger
+    assert core.should_fire(4, 0.0, "a", g)               # trigger reached
+    assert core.should_fire(1, 0.05, "a", g)              # HOL timeout
+    assert core.should_fire(1, 0.05 - 1e-12, "a", g)      # boundary epsilon
+
+
+def test_next_hop_threshold_semantics():
+    reps = [Replica("a", 0, 1e-3), Replica("b", 0, 1e-2)]
+    g = make_gear(Cascade(("a", "b"), (0.5,)), reps)
+    core = _core(reps)
+    hop = core.next_hop(0, 0.3, g)
+    assert isinstance(hop, CascadeHop)
+    assert hop.next_model == "b" and hop.next_stage == 1
+    assert isinstance(core.next_hop(0, 0.5, g), Resolved)   # at threshold
+    last = core.next_hop(1, 0.0, g)                         # final stage
+    assert isinstance(last, Resolved) and last.stage == 1
+
+
+def test_recover_restarts_stranded_queues():
+    """A device that recovers after traffic stops must immediately restart
+    the work stranded on its replicas (no arrival or timeout is coming to
+    poll it during the drain)."""
+    from repro.core.profiles import synthetic_family
+    profiles = synthetic_family(["a", "b"], base_runtime=2e-4,
+                                runtime_ratio=3.0, base_acc=0.7,
+                                acc_gain=0.06, seed=3)
+    reps = [Replica(m, d, profiles[m].runtime_per_sample(1.0))
+            for d in range(2) for m in profiles]
+    g = make_gear(Cascade(("a", "b"), (0.3,)), reps)
+    plan = GearPlan(qps_max=500.0, gears=[g], replicas=reps, num_devices=2,
+                    slo=SLO(kind="latency", latency_p95=1.0))
+    sim = ServingSimulator(profiles, plan.replicas, 2)
+    trace = np.full(8, 30.0)
+    # fail mid-trace, recover during the drain: every head-of-line timeout
+    # armed for the stranded samples has already fired as a no-op
+    ev = [(2.0, 0, "fail", 0.0), (9.0, 0, "recover", 1.0)]
+    r = sim.run_trace(plan, trace, device_events=ev, drain=3.0)
+    assert r.completed == r.offered
+    assert r.backlog_end == 0
+
+
+def test_build_plan_rejects_ensemble_gears(bert_like_profiles):
+    """Cocktail+ gears majority-vote; CascadeServer has no voting path, so
+    packaging them for the real runtime must fail loudly, not silently
+    serve only the first member."""
+    from repro.core.plan_state import HardwareSpec
+    from repro.serving.baselines import CocktailPlusPolicy
+    hw = HardwareSpec(num_devices=2, mem_per_device=16e9)
+    with pytest.raises(NotImplementedError):
+        CocktailPlusPolicy().build_plan(
+            bert_like_profiles, hw, SLO(kind="latency", latency_p95=0.4),
+            1000.0)
+
+
+def test_plan_target_matches_plan(bert_like_profiles):
+    reps, plan, _ = _setup(bert_like_profiles)
+    tgt = plan_target(plan)
+    for qps in (0.0, 150.0, 399.0, 10_000.0):
+        assert tgt(0.0, qps, 0, 0) == plan.gear_index_for_qps(qps)

@@ -1,6 +1,7 @@
 """Discrete-event simulator invariants + fault-tolerance machinery."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cascade import Cascade
