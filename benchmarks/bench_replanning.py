@@ -1,0 +1,129 @@
+"""Online re-planning under load drift (beyond-paper: core/adaption.py).
+
+The drift scenario of the plan-lifecycle subsystem: offered QPS ramps to 2x
+the plan's ``qps_max``. With a ``PlanLifecycle`` attached, the monitor
+fires ``qps-exceeds-range``, the background planner (warm-started from the
+offline ``PlannerState``, placement pinned) publishes an extended plan, and
+the hot-swap remaps the gear index mid-run. The no-swap control — the
+pre-PR behaviour — clamps to the top gear and lets the backlog grow.
+
+Reported per executor policy:
+* p95 in the pre-drift, drift (pre/post swap), and post-swap windows —
+  the acceptance signal is p95 RECOVERING after the swap vs the control;
+* completion/backlog + accuracy (the swap trades accuracy for stability);
+* the swap time, epoch, and trigger reason;
+* swap-frozen baseline (MS+) for honesty: it detects the same drift but
+  is not allowed to act on it.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Results
+from repro.core import (BackgroundReplanner, HardwareSpec, MonitorConfig,
+                        PlanLifecycle, PlanMonitor, SLO, ServingSimulator,
+                        SimConfig, optimize_gear_plan, planner_replan_fn)
+from repro.core.profiles import synthetic_family
+from repro.serving.baselines import MSPlusPolicy
+
+QPS_MAX = 400.0
+
+
+def drift_family():
+    """Two models whose big member saturates between 1x and 2x qps_max, so
+    the drift genuinely breaks the accurate cascade (see test_adaption)."""
+    return synthetic_family(["small", "large"], base_runtime=2e-3,
+                            runtime_ratio=6.0, base_acc=0.7, acc_gain=0.08,
+                            mem_base=0.4e9, seed=5)
+
+
+def drift_trace(pre: int, overload: int) -> np.ndarray:
+    ramp = np.linspace(QPS_MAX * 0.75, 2 * QPS_MAX, 4)
+    return np.concatenate([np.full(pre, 300.0), ramp,
+                           np.full(overload, 2 * QPS_MAX)])
+
+
+def window_p95(result, lo: float, hi: float) -> float:
+    sel = (result.complete_times >= lo) & (result.complete_times < hi)
+    if sel.sum() < 5:
+        return float("nan")
+    return float(np.quantile(result.latencies[sel], 0.95)) * 1e3
+
+
+def main(quick: bool = False):
+    res = Results("bench_replanning")
+    profiles = drift_family()
+    hw = HardwareSpec(num_devices=2, mem_per_device=16e9)
+    slo = SLO(kind="latency", latency_p95=1.0)
+    report = optimize_gear_plan(profiles, hw, slo, qps_max=QPS_MAX,
+                                n_ranges=4)
+    plan = report.plan
+
+    pre, overload = (4, 12) if quick else (6, 24)
+    trace = drift_trace(pre, overload)
+    horizon = len(trace) + 3.0
+    sim = ServingSimulator(profiles, plan.replicas, 2, SimConfig())
+
+    def lifecycle():
+        return PlanLifecycle(
+            plan,
+            monitor=PlanMonitor(plan.provenance,
+                                MonitorConfig(qps_sustain_ticks=5,
+                                              cooldown=30.0)),
+            replanner=BackgroundReplanner(
+                planner_replan_fn(profiles, hw, slo, n_ranges=4,
+                                  warm_state=report.state),
+                plan_latency=1.0))
+
+    lc = lifecycle()
+    adaptive = sim.run_trace(plan, trace, drain=3.0, lifecycle=lc)
+    control = sim.run_trace(plan, trace, drain=3.0)
+
+    assert lc.swaps, "drift scenario failed to trigger a re-plan"
+    t_swap = lc.swaps[0].t
+    drift_start = float(pre)
+
+    for label, r in (("adaptive", adaptive), ("control", control)):
+        res.add(f"{label}_completed", r.completed, offered=r.offered,
+                backlog_end=r.backlog_end, stable=bool(r.stable),
+                accuracy=round(r.accuracy, 4))
+        res.add(f"{label}_p95ms_pre_drift",
+                round(window_p95(r, 0.0, drift_start), 1))
+        res.add(f"{label}_p95ms_drift_before_swap",
+                round(window_p95(r, drift_start, t_swap), 1))
+        res.add(f"{label}_p95ms_after_swap",
+                round(window_p95(r, t_swap + 2.0, horizon), 1))
+
+    res.add("swap_time_s", round(t_swap, 2),
+            epoch=lc.swaps[0].epoch, reason=lc.swaps[0].reason,
+            new_qps_max=lc.active.plan.qps_max,
+            planner_calls=len(lc.triggers))
+
+    # acceptance: p95 recovers after the swap; the control's does not
+    adp_after = window_p95(adaptive, t_swap + 2.0, horizon)
+    ctl_after = window_p95(control, t_swap + 2.0, horizon)
+    res.add("p95_recovered", bool(adp_after < 0.5 * ctl_after),
+            adaptive_after_ms=round(adp_after, 1),
+            control_after_ms=round(ctl_after, 1))
+
+    # swap-frozen baseline: same drift, same monitor, no action allowed
+    mplan, msel = MSPlusPolicy(n_ranges=4).build_plan(
+        profiles, hw, slo, QPS_MAX)
+    mlc = PlanLifecycle(
+        mplan,
+        monitor=PlanMonitor(mplan.provenance,
+                            MonitorConfig(qps_sustain_ticks=5,
+                                          cooldown=30.0)),
+        replanner=BackgroundReplanner(
+            planner_replan_fn(profiles, hw, slo, n_ranges=4),
+            plan_latency=1.0))
+    msim = ServingSimulator(profiles, mplan.replicas, 2, SimConfig())
+    mres = msim.run_trace(mplan, trace, drain=3.0, lifecycle=mlc)
+    res.add("msplus_frozen_swaps", len(mlc.swaps),
+            triggers_seen=len(mlc.triggers), stable=bool(mres.stable))
+
+    return res.finish()
+
+
+if __name__ == "__main__":
+    main()

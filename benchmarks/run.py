@@ -22,6 +22,7 @@ BENCHES = [
     "bench_kernels",             # TPU-target kernels
     "bench_roofline",            # §Roofline summary from the dry-run
     "bench_fault_tolerance",     # beyond-paper FT/elasticity
+    "bench_replanning",          # beyond-paper online re-planning drift
 ]
 
 

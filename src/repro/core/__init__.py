@@ -4,16 +4,20 @@ The paper's primary contribution — offline planner (SP1-SP4 submodules,
 EM-style error-driven co-optimisation), discrete-event simulator, LP load
 balancer, certainty estimation, cascade semantics, gear plans.
 """
+from repro.core.adaption import (BackgroundReplanner, MonitorConfig,
+                                 PlanLifecycle, PlanMonitor, PlanVersion,
+                                 ReplanTrigger, SwapEvent, planner_replan_fn,
+                                 provenance_for_plan)
 from repro.core.cascade import Cascade, CascadeEval, evaluate_cascade
 from repro.core.certainty import (CERTAINTY_ESTIMATORS, predict_with_certainty,
                                   top2_gap)
-from repro.core.gears import Gear, GearPlan, SLO
+from repro.core.gears import Gear, GearPlan, PlanProvenance, SLO
 from repro.core.lp import Replica, min_utilization, min_utilization_lp
 from repro.core.plan_state import (HardwareSpec, InfeasiblePlanError,
                                    PlanError, PlannerState)
 from repro.core.planner import PlannerReport, optimize_gear_plan
 from repro.core.profiles import ModelProfile, ProfileSet, ValidationRecord, \
-    synthetic_family
+    profile_digest, synthetic_family
 from repro.core.scheduling import (CascadeHop, DecisionTrace, GearSelector,
                                    Resolved, RoutePool, SchedulerConfig,
                                    SchedulerCore, plan_target,
@@ -31,4 +35,8 @@ __all__ = [
     "make_gear", "SchedulerCore", "SchedulerConfig", "GearSelector",
     "DecisionTrace", "RoutePool", "Resolved", "CascadeHop", "plan_target",
     "with_hysteresis",
+    # plan lifecycle (online re-planning, core/adaption.py)
+    "PlanProvenance", "PlanMonitor", "MonitorConfig", "ReplanTrigger",
+    "PlanVersion", "BackgroundReplanner", "PlanLifecycle", "SwapEvent",
+    "planner_replan_fn", "provenance_for_plan", "profile_digest",
 ]

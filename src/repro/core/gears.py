@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import json
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -66,6 +66,48 @@ class Gear:
             expected_p95=d.get("expected_p95", 0.0))
 
 
+@dataclass(frozen=True)
+class PlanProvenance:
+    """What the planner assumed when it produced a plan.
+
+    The online ``PlanMonitor`` (core/adaption.py) compares live
+    observations against exactly these assumptions to decide when the plan
+    has left its validity regime and a background re-plan is due. Baseline
+    policies mark their plans ``frozen``: they must never hot-swap, so the
+    re-planning ablation stays honest (the baselines get no capability the
+    original systems lacked).
+    """
+    qps_max: float
+    n_ranges: int
+    qps_prior: Tuple[float, ...]           # assumed time-in-range weights
+    num_devices: int
+    mem_per_device: float
+    profile_digest: str = ""               # hash of the ModelProfiles used
+    # per-model mean validation certainty (drift reference for the monitor)
+    cert_means: Tuple[Tuple[str, float], ...] = ()
+    frozen: bool = False                   # baselines: never hot-swap
+
+    def to_dict(self) -> Dict:
+        return {"qps_max": self.qps_max, "n_ranges": self.n_ranges,
+                "qps_prior": list(self.qps_prior),
+                "num_devices": self.num_devices,
+                "mem_per_device": self.mem_per_device,
+                "profile_digest": self.profile_digest,
+                "cert_means": [[m, c] for m, c in self.cert_means],
+                "frozen": self.frozen}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "PlanProvenance":
+        return cls(qps_max=float(d["qps_max"]), n_ranges=int(d["n_ranges"]),
+                   qps_prior=tuple(float(x) for x in d["qps_prior"]),
+                   num_devices=int(d["num_devices"]),
+                   mem_per_device=float(d["mem_per_device"]),
+                   profile_digest=d.get("profile_digest", ""),
+                   cert_means=tuple((m, float(c))
+                                    for m, c in d.get("cert_means", [])),
+                   frozen=bool(d.get("frozen", False)))
+
+
 @dataclass
 class GearPlan:
     qps_max: float
@@ -73,6 +115,7 @@ class GearPlan:
     replicas: List[Replica]        # fixed placement (model, device, runtime)
     num_devices: int
     slo: SLO
+    provenance: Optional[PlanProvenance] = None
 
     @property
     def n_ranges(self) -> int:
@@ -112,6 +155,8 @@ class GearPlan:
                           "runtime_per_sample": r.runtime_per_sample}
                          for r in self.replicas],
             "gears": [g.to_dict() for g in self.gears],
+            "provenance": self.provenance.to_dict()
+            if self.provenance is not None else None,
         }
 
     def to_json(self) -> str:
@@ -127,7 +172,9 @@ class GearPlan:
             replicas=[Replica(r["model"], int(r["device"]),
                               float(r["runtime_per_sample"]))
                       for r in d["replicas"]],
-            gears=[Gear.from_dict(g) for g in d["gears"]])
+            gears=[Gear.from_dict(g) for g in d["gears"]],
+            provenance=PlanProvenance.from_dict(d["provenance"])
+            if d.get("provenance") else None)
 
     @classmethod
     def from_json(cls, s: str) -> "GearPlan":

@@ -58,6 +58,11 @@ class PlannerState:
     sim_cfg: SimConfig = field(default_factory=SimConfig)
     sim_horizon: float = 2.0
     rng_seed: int = 0
+    # Online re-planning (core/adaption.py): keep the serving placement
+    # fixed — replicas never move at runtime, so a hot-swappable plan must
+    # re-optimise cascades/gears/batching OVER this placement. SP3 skips
+    # prune/add and only re-solves the per-range load-balancing LPs.
+    pinned_replicas: Optional[List[Replica]] = None
 
     # SP1: candidate cascades (Pareto set) and their validation evals
     cascades: List[Cascade] = field(default_factory=list)

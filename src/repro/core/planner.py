@@ -18,10 +18,10 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.cascade import evaluate_cascade
-from repro.core.gears import Gear, GearPlan, SLO
+from repro.core.gears import Gear, GearPlan, PlanProvenance, SLO
 from repro.core.plan_state import (HardwareSpec, InfeasiblePlanError, OK,
                                    PlanError, PlannerState)
-from repro.core.profiles import ProfileSet
+from repro.core.profiles import ProfileSet, profile_digest
 from repro.core.simulator import SimConfig
 from repro.core.submodules import SUBMODULES
 from repro.core.traces import zipf_prior
@@ -35,30 +35,64 @@ class PlannerReport:
     errors_resolved: int
     wall_seconds: float
     call_log: List[Tuple[str, str]] = field(default_factory=list)
+    # final planner state, so an online re-plan can warm-start from it
+    state: Optional[PlannerState] = None
 
 
 def make_state(profiles: ProfileSet, hardware: HardwareSpec, slo: SLO,
                qps_max: float, n_ranges: int = 8,
                qps_prior: Optional[np.ndarray] = None,
-               sim_cfg: SimConfig = SimConfig(), seed: int = 0
+               sim_cfg: SimConfig = SimConfig(), seed: int = 0,
+               pinned_replicas=None, warm_state: Optional[PlannerState] = None
                ) -> PlannerState:
     prior = qps_prior if qps_prior is not None else zipf_prior(n_ranges)
-    return PlannerState(profiles=profiles, hardware=hardware, slo=slo,
-                        qps_max=qps_max, n_ranges=n_ranges,
-                        qps_prior=np.asarray(prior, np.float64),
-                        sim_cfg=sim_cfg, rng_seed=seed)
+    if pinned_replicas is not None:
+        # immutable serving placement: only models already placed can
+        # appear in cascades, so restrict the search space up front
+        placed = {r.model for r in pinned_replicas}
+        profiles = {m: p for m, p in profiles.items() if m in placed}
+        if not profiles:
+            raise InfeasiblePlanError("pinned placement holds no profiled "
+                                      "model")
+    state = PlannerState(profiles=profiles, hardware=hardware, slo=slo,
+                         qps_max=qps_max, n_ranges=n_ranges,
+                         qps_prior=np.asarray(prior, np.float64),
+                         sim_cfg=sim_cfg, rng_seed=seed,
+                         pinned_replicas=list(pinned_replicas)
+                         if pinned_replicas is not None else None)
+    if warm_state is not None:
+        # warm start (online re-plan): reuse SP1's Pareto candidate set —
+        # validation evals are workload-independent and throughput
+        # estimates depend only on profiles+hardware, so the expensive
+        # cascade search resumes instead of restarting. Candidates over
+        # models absent from a pinned placement are dropped.
+        avail = set(profiles)
+        keep = [i for i, c in enumerate(warm_state.cascades)
+                if all(m in avail for m in c.models)]
+        state.cascades = [warm_state.cascades[i] for i in keep]
+        state.cascade_evals = [warm_state.cascade_evals[i] for i in keep]
+        state.cascade_tput = [warm_state.cascade_tput[i] for i in keep]
+    return state
 
 
 def optimize_gear_plan(profiles: ProfileSet, hardware: HardwareSpec,
                        slo: SLO, qps_max: float, n_ranges: int = 8,
                        qps_prior: Optional[np.ndarray] = None,
                        sim_cfg: SimConfig = SimConfig(), seed: int = 0,
-                       max_calls: int = 200) -> PlannerReport:
+                       max_calls: int = 200, pinned_replicas=None,
+                       warm_state: Optional[PlannerState] = None
+                       ) -> PlannerReport:
     """Algorithm 1. Raises InfeasiblePlanError when no plan can satisfy the
-    SLO on the given hardware."""
+    SLO on the given hardware.
+
+    ``pinned_replicas`` freezes the model placement (online re-planning:
+    replicas never move at runtime, DESIGN.md §Plan lifecycle) and
+    ``warm_state`` seeds SP1 with an earlier run's candidate cascades.
+    """
     t0 = time.time()
     state = make_state(profiles, hardware, slo, qps_max, n_ranges, qps_prior,
-                       sim_cfg, seed)
+                       sim_cfg, seed, pinned_replicas=pinned_replicas,
+                       warm_state=warm_state)
     modules = SUBMODULES
     names = ["SP1:search_cascades", "SP2:assign_cascades",
              "SP3:place_models", "SP4:tune_batch_sizes"]
@@ -101,7 +135,8 @@ def optimize_gear_plan(profiles: ProfileSet, hardware: HardwareSpec,
     return PlannerReport(plan=plan, iterations=calls // 4,
                          submodule_calls=calls,
                          errors_resolved=errors_resolved,
-                         wall_seconds=time.time() - t0, call_log=call_log)
+                         wall_seconds=time.time() - t0, call_log=call_log,
+                         state=state)
 
 
 def check_qps_distribution(plan_prior: np.ndarray, trace: np.ndarray,
@@ -144,4 +179,18 @@ def build_plan(state: PlannerState) -> GearPlan:
             expected_p95=state.range_p95[r] if state.range_p95 else 0.0))
     return GearPlan(qps_max=state.qps_max, gears=gears,
                     replicas=state.replicas,
-                    num_devices=state.hardware.num_devices, slo=state.slo)
+                    num_devices=state.hardware.num_devices, slo=state.slo,
+                    provenance=provenance_from_state(state))
+
+
+def provenance_from_state(state: PlannerState) -> PlanProvenance:
+    """Record what the planner assumed, for the online PlanMonitor."""
+    return PlanProvenance(
+        qps_max=state.qps_max, n_ranges=state.n_ranges,
+        qps_prior=tuple(float(w) for w in state.qps_prior),
+        num_devices=state.hardware.num_devices,
+        mem_per_device=state.hardware.mem_per_device,
+        profile_digest=profile_digest(state.profiles),
+        cert_means=tuple(
+            (m, float(state.profiles[m].validation.certs.mean()))
+            for m in sorted(state.profiles)))

@@ -111,6 +111,24 @@ class ModelProfile:
 ProfileSet = Dict[str, ModelProfile]
 
 
+def profile_digest(profiles: ProfileSet) -> str:
+    """Stable hash of everything the planner consumed from the profiles
+    (runtimes, memory, validation behaviour). Recorded in a plan's
+    ``PlanProvenance`` so the online monitor can tell "this plan was built
+    from different profiles" apart from workload drift."""
+    import hashlib
+    h = hashlib.sha256()
+    for name in sorted(profiles):
+        p = profiles[name]
+        h.update(name.encode())
+        h.update(np.float64(p.mem_bytes).tobytes())
+        h.update(np.asarray(p.batch_sizes, np.float64).tobytes())
+        h.update(np.asarray(p.batch_runtimes, np.float64).tobytes())
+        h.update(np.asarray(p.validation.certs, np.float64).tobytes())
+        h.update(np.asarray(p.validation.correct, bool).tobytes())
+    return h.hexdigest()[:16]
+
+
 # ---------------------------------------------------------------------------
 # Synthetic-but-calibrated model families (planner benchmarks for the big
 # archs, where per-sample validation behaviour cannot be measured on CPU)

@@ -148,14 +148,23 @@ class DecisionTrace:
     gear_switches: List[Tuple[int, int]] = field(default_factory=list)
     fires: List[Tuple[int, Tuple[int, ...]]] = field(default_factory=list)
     hops: List[Tuple[int, float, str]] = field(default_factory=list)
+    # plan hot-swaps (core/adaption.py): (new epoch, old gear, remapped
+    # gear). Swaps interleave with the other decisions in call order, so
+    # two executors must agree not only on WHETHER they swapped but on the
+    # epoch sequence and the QPS-range remap.
+    swaps: List[Tuple[int, int, int]] = field(default_factory=list)
 
     def record_fire(self, ridx: int, sample_ids: Sequence[int]) -> None:
         self.fires.append((int(ridx), tuple(int(s) for s in sample_ids)))
 
+    def record_swap(self, epoch: int, old_gear: int, new_gear: int) -> None:
+        self.swaps.append((int(epoch), int(old_gear), int(new_gear)))
+
     def summary(self) -> Dict[str, int]:
         return {"routes": len(self.routes),
                 "gear_switches": len(self.gear_switches),
-                "fires": len(self.fires), "hops": len(self.hops)}
+                "fires": len(self.fires), "hops": len(self.hops),
+                "swaps": len(self.swaps)}
 
 
 # ---------------------------------------------------------------------------
@@ -181,6 +190,10 @@ class SchedulerCore:
         self.cfg = cfg
         self.selector: GearSelector = selector or (lambda t, q, g, q0: g)
         self.trace = trace
+        # optional PlanMonitor (core/adaption.py): observes the certainty
+        # stream at the single point every executor's cascade decision
+        # passes through, so drift detection cannot diverge across drivers
+        self.monitor = None
         self.reps_of: Dict[str, List[int]] = {}
         self.reps_on_dev: Dict[int, List[int]] = {}
         for i, r in enumerate(self.replicas):
@@ -266,8 +279,11 @@ class SchedulerCore:
                     next_model=casc.models[stage + 1], next_stage=stage + 1)
             else:
                 thr, fwd = None, None
-            ent = (gear, thr, fwd, Resolved(stage=stage))
+            ent = (gear, thr, fwd, Resolved(stage=stage),
+                   casc.models[stage] if stage < len(casc.models) else "")
             self._hop_memo[(id(gear), stage)] = ent
+        if self.monitor is not None:
+            self.monitor.observe_cert(ent[4], cert)
         thr = ent[1]
         hop: Hop = ent[2] if (thr is not None and cert < thr) else ent[3]
         if self.trace is not None:

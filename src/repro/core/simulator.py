@@ -68,6 +68,8 @@ class SimResult:
     gear_switches: List[Tuple[float, int]] = field(default_factory=list)
     per_model_batches: Dict[str, int] = field(default_factory=dict)
     per_model_samples: Dict[str, int] = field(default_factory=dict)
+    # plan hot-swaps applied during the run: (time, epoch, reason)
+    plan_swaps: List[Tuple[float, int, str]] = field(default_factory=list)
 
     @property
     def accuracy(self) -> float:
@@ -191,15 +193,22 @@ class ServingSimulator:
                   device_events: Optional[List[DeviceEvent]] = None,
                   on_failure: Optional[Callable] = None,
                   hedge=None,
-                  decision_trace: Optional[DecisionTrace] = None
-                  ) -> SimResult:
-        """Replay a trace (per-second QPS) with the §5 producer policy."""
+                  decision_trace: Optional[DecisionTrace] = None,
+                  lifecycle=None) -> SimResult:
+        """Replay a trace (per-second QPS) with the §5 producer policy.
+
+        ``lifecycle`` (a ``repro.core.adaption.PlanLifecycle`` over the
+        same plan) enables online re-planning: it is stepped at every
+        measurement tick and its ``SwapEvent``s are applied atomically
+        (new gear table + QPS-remapped gear index + new selector).
+        """
         arrivals = trace_to_arrivals(qps_per_sec)
         horizon = float(len(qps_per_sec)) + drain
         selector = with_hysteresis(plan_target(plan), self.cfg.alpha)
         return self._run(arrivals, plan.gears, selector, horizon=horizon,
                          device_events=device_events, on_failure=on_failure,
-                         hedge=hedge, decision_trace=decision_trace)
+                         hedge=hedge, decision_trace=decision_trace,
+                         lifecycle=lifecycle)
 
     def run_policy(self, gears: List[Gear], selector: GearSelector,
                    qps_per_sec: np.ndarray, drain: float = 2.0,
@@ -217,13 +226,16 @@ class ServingSimulator:
              device_events: Optional[List[DeviceEvent]] = None,
              on_failure: Optional[Callable] = None,
              hedge=None,
-             decision_trace: Optional[DecisionTrace] = None) -> SimResult:
+             decision_trace: Optional[DecisionTrace] = None,
+             lifecycle=None) -> SimResult:
         cfg = self.cfg
         profiles = self.profiles
         replicas = self.replicas
         n_arr = len(arrivals)
         core = SchedulerCore(replicas, cfg, selector=selector,
                              trace=decision_trace)
+        if lifecycle is not None:
+            lifecycle.attach(core)
         pool = RoutePool.for_arrivals(cfg.seed, n_arr)
 
         # per-sample records (plain lists: the loop is scalar reads/writes,
@@ -234,7 +246,9 @@ class ServingSimulator:
         complete = [math.nan] * n_arr
         correct = [False] * n_arr
         resolver = [-1] * n_arr
-        gear_of = [0] * n_arr
+        # admitting gear OBJECT per sample: in-flight cascades must finish
+        # on the plan that admitted them even across plan hot-swaps
+        gear_of: List[Optional[Gear]] = [None] * n_arr
         # duplicate-suppression for hedged/re-issued work: a sample is only
         # processed at its current stage
         cur_stage = [0] * n_arr
@@ -266,6 +280,7 @@ class ServingSimulator:
         gears = list(gears)
         cur_gear = 0
         switches: List[Tuple[float, int]] = []
+        plan_swaps: List[Tuple[float, int, str]] = []
         per_model_batches: Dict[str, int] = {}
         per_model_samples: Dict[str, int] = {}
         reps_of = core.reps_of
@@ -341,7 +356,7 @@ class ServingSimulator:
             for sid, stage in zip(sids, stages):
                 if cur_stage[sid] != stage:
                     continue  # hedged duplicate / stale work
-                g = gears[gear_of[sid]]
+                g = gear_of[sid]
                 vi = sid % val_n
                 if gear_is_ensemble(g):
                     st = votes[sid]
@@ -409,6 +424,10 @@ class ServingSimulator:
                 if new_gears is not None:
                     gears = list(new_gears)
 
+        def feed_device_count():
+            if lifecycle is not None:
+                lifecycle.monitor.observe_devices(int(dev_alive.sum()))
+
         # scheduled device events (failures / stragglers)
         for ev_t, ev_d, ev_kind, ev_f in (device_events or []):
             push_event(ev_t, "devevent", (ev_d, ev_kind, ev_f))
@@ -427,6 +446,22 @@ class ServingSimulator:
                 break
             if t == meas_end and t < min(t_arr, t_evt):
                 measured = meas_count / cfg.measure_interval
+                if lifecycle is not None:
+                    # swap application MUST mirror CascadeServer._gear_step
+                    # step for step — the hot-swap parity test pins the two
+                    # copies to each other
+                    swap = lifecycle.step(t, measured, cur_gear)
+                    if swap is not None:
+                        # atomic hot-swap: new gear table, gear index
+                        # remapped by measured QPS range, new selector —
+                        # all within this tick, before any further decision
+                        gears = list(swap.plan.gears)
+                        if swap.selector is not None:
+                            core.selector = swap.selector
+                        plan_swaps.append((t, swap.epoch, swap.reason))
+                        if swap.new_gear != cur_gear:
+                            switches.append((t, swap.new_gear))
+                            cur_gear = swap.new_gear
                 first_q = 0
                 g = gears[cur_gear]
                 m0 = g.cascade.models[0]
@@ -445,7 +480,7 @@ class ServingSimulator:
                 arr_ptr += 1
                 meas_count += 1
                 g = gears[cur_gear]
-                gear_of[sid] = cur_gear
+                gear_of[sid] = g
                 if gear_is_ensemble(g):
                     members = g.cascade.models
                     votes[sid] = [len(members), 0, len(members)]
@@ -488,6 +523,7 @@ class ServingSimulator:
                                        (alt,))
                 elif kind == "devevent":
                     on_device_event(t_evt, *payload)
+                    feed_device_count()
 
         complete_a = np.asarray(complete, np.float64)
         correct_a = np.asarray(correct, bool)
@@ -507,7 +543,8 @@ class ServingSimulator:
             horizon=horizon,
             gear_switches=switches,
             per_model_batches=per_model_batches,
-            per_model_samples=per_model_samples)
+            per_model_samples=per_model_samples,
+            plan_swaps=plan_swaps)
 
 
 def trace_to_arrivals(qps_per_sec: np.ndarray) -> np.ndarray:

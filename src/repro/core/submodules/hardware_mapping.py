@@ -159,6 +159,29 @@ def place_models(error: PlanError, state: PlannerState
     hw = state.hardware
     used = state.models_used()
 
+    if state.pinned_replicas is not None:
+        # Online re-planning: the serving placement is immutable (no model
+        # loading on the critical path), so SP3 degenerates to re-solving
+        # the per-range load-balancing LPs over the pinned replicas. An SP4
+        # bottleneck error cannot be fixed by adding replicas — propagate
+        # it to SP2 so the offending cascade is blacklisted instead.
+        if not error.is_ok:
+            return PlanError("throughput", qps_range=error.qps_range,
+                             model=error.model,
+                             detail="placement pinned: cannot add replicas "
+                                    f"of {error.model}"), state
+        missing = [m for m in used
+                   if not any(r.model == m for r in state.pinned_replicas)]
+        if missing:
+            ranges = [r for r in range(state.n_ranges)
+                      if missing[0] in state.cascade_of_range(r).models]
+            return PlanError(
+                "placement",
+                qps_range=ranges[0] if ranges else state.n_ranges - 1,
+                model=missing[0],
+                detail=f"{missing[0]} not in the pinned placement"), state
+        return _balance_ranges(state, list(state.pinned_replicas))
+
     if not error.is_ok:
         # SP4 bottleneck: demand one more replica of the named model
         m = error.model
@@ -190,11 +213,16 @@ def place_models(error: PlanError, state: PlannerState
             detail=f"cannot pack one replica per model "
                    f"({[m for m in used]})"), state
 
-    # ---- per-range load balancing -------------------------------------------
+    return _balance_ranges(state, replicas)
+
+
+def _balance_ranges(state: PlannerState, replicas: List[Replica]
+                    ) -> Tuple[PlanError, PlannerState]:
+    """Per-range load balancing over a fixed replica list."""
     load_fracs, utils = [], []
     for r in range(state.n_ranges):
         u, q = min_utilization_lp(replicas, _qps_per_model(state, r),
-                                  hw.num_devices)
+                                  state.hardware.num_devices)
         if u is None:
             return PlanError(
                 "throughput", qps_range=r,

@@ -62,6 +62,12 @@ class BaselinePolicy:
         plan = GearPlan(qps_max=qps_max, gears=list(gears),
                         replicas=list(reps), num_devices=num_devices,
                         slo=slo)
+        # baselines are SWAP-FROZEN: a PlanLifecycle over this plan still
+        # monitors but never re-plans or hot-swaps. DynBa/MS+/Cocktail+
+        # had no online re-provisioning of the policy itself; granting
+        # them ours would make the re-planning ablation dishonest.
+        from repro.core.adaption import provenance_for_plan
+        plan.provenance = provenance_for_plan(plan, frozen=True)
         return plan, selector
 
 

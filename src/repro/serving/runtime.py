@@ -35,7 +35,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.certainty import CERTAINTY_ESTIMATORS
-from repro.core.gears import GearPlan
+from repro.core.gears import Gear, GearPlan
 from repro.core.scheduling import (CascadeHop, DecisionTrace, GearSelector,
                                    RoutePool, SchedulerConfig, SchedulerCore,
                                    plan_target, with_hysteresis)
@@ -53,6 +53,10 @@ class Request:
     resolver: int = -1          # cascade stage that resolved it
     gear_idx: int = 0
     stage: int = 0
+    # admitting gear OBJECT + plan epoch: across plan hot-swaps a request
+    # finishes its cascade on the plan that admitted it (core/adaption.py)
+    gear: Optional[Gear] = None
+    plan_epoch: int = 0
 
     @property
     def latency(self) -> float:
@@ -97,8 +101,13 @@ class CascadeServer:
                  selector: Optional[GearSelector] = None,
                  route_pool: Optional[RoutePool] = None,
                  decision_trace: Optional[DecisionTrace] = None,
-                 seed: int = 0):
-        self.plan = plan
+                 seed: int = 0, lifecycle=None):
+        # (active plan, current gear index, plan epoch) as ONE tuple: a
+        # hot-swap (or a gear switch) replaces the reference in a single
+        # assignment, so a concurrent submit/_poll_replica thread always
+        # reads a consistent triple — never the new plan with a stale gear
+        # index, nor an epoch tag contradicting the admitting gear
+        self._active: Tuple[GearPlan, int, int] = (plan, 0, 0)
         self.engines = engines
         self.est = estimator if callable(estimator) \
             else CERTAINTY_ESTIMATORS[estimator]
@@ -109,11 +118,16 @@ class CascadeServer:
             plan.replicas, self.cfg,
             selector=selector or with_hysteresis(plan_target(plan), alpha),
             trace=decision_trace)
+        # online re-planning (core/adaption.py): stepped at every producer
+        # measurement tick; its SwapEvents replace self.plan atomically
+        self.lifecycle = lifecycle
+        if lifecycle is not None:
+            lifecycle.attach(self.core)
+        self.plan_swaps: List[Tuple[float, int, str]] = []
         self.route_pool = route_pool or RoutePool(seed)
 
         self.queues: List[_ReplicaQueue] = [
             _ReplicaQueue() for _ in plan.replicas]
-        self.cur_gear = 0
         self._arr_count = 0
         self._count_lock = threading.Lock()
         self._stop = threading.Event()
@@ -121,6 +135,14 @@ class CascadeServer:
         self._done_lock = threading.Lock()
         self.gear_switches: List = []
         self._threads: List[threading.Thread] = []
+
+    @property
+    def plan(self) -> GearPlan:
+        return self._active[0]
+
+    @property
+    def cur_gear(self) -> int:
+        return self._active[1]
 
     # --------------------------------------------------- decision steps
     # These four methods are the ONLY places serving decisions are taken,
@@ -135,8 +157,11 @@ class CascadeServer:
         req.t_arrive = t
         with self._count_lock:
             self._arr_count += 1
-        req.gear_idx = self.cur_gear
-        gear = self.plan.gears[self.cur_gear]
+        plan, cur, epoch = self._active   # one consistent read
+        req.gear_idx = cur
+        gear = plan.gears[cur]
+        req.gear = gear
+        req.plan_epoch = epoch
         req.stage = 0
         ridx = self.core.route(gear.cascade.models[0], gear,
                                self.route_pool.next())
@@ -144,15 +169,32 @@ class CascadeServer:
         return ridx
 
     def _gear_step(self, now: float, measured_qps: float) -> None:
-        """One producer measurement tick (§5)."""
-        gear = self.plan.gears[self.cur_gear]
+        """One producer measurement tick (§5), plus the plan-lifecycle
+        step: drift monitoring, background re-plan hand-off, and the
+        atomic hot-swap (gear table + QPS-remapped gear index + selector
+        replaced within one tick, before any further decision)."""
+        plan, cur, epoch = self._active
+        if self.lifecycle is not None:
+            # swap application MUST mirror the simulator's measurement-tick
+            # branch (core/simulator.py) step for step — the hot-swap
+            # parity test pins the two copies to each other
+            swap = self.lifecycle.step(now, measured_qps, cur)
+            if swap is not None:
+                self._active = (swap.plan, swap.new_gear, swap.epoch)
+                if swap.selector is not None:
+                    self.core.selector = swap.selector
+                self.plan_swaps.append((now, swap.epoch, swap.reason))
+                if swap.new_gear != cur:
+                    self.gear_switches.append((now, swap.new_gear))
+                plan, cur, epoch = swap.plan, swap.new_gear, swap.epoch
+        gear = plan.gears[cur]
         q0 = sum(len(self.queues[i])
                  for i in self.core.reps_of[gear.cascade.models[0]])
-        new = self.core.select_gear(now, measured_qps, self.cur_gear, q0,
-                                    len(self.plan.gears))
-        if new != self.cur_gear:
+        new = self.core.select_gear(now, measured_qps, cur, q0,
+                                    len(plan.gears))
+        if new != cur:
             self.gear_switches.append((now, new))
-            self.cur_gear = new
+            self._active = (plan, new, epoch)
 
     def _poll_replica(self, ridx: int, now: float) -> Optional[List]:
         """Batch-trigger decision for one replica: pop and return the batch
@@ -161,10 +203,11 @@ class CascadeServer:
         qlen = len(q)
         if not qlen:
             return None
-        model = self.plan.replicas[ridx].model
+        plan, cur, _ = self._active     # one consistent read
+        model = plan.replicas[ridx].model
         head = q.head_time()
         head_wait = now - head if head is not None else 0.0
-        gear = self.plan.gears[self.cur_gear]
+        gear = plan.gears[cur]
         if not self.core.should_fire(qlen, head_wait, model, gear):
             return None
         batch = q.pop_batch(self.core.batch_size(qlen))
@@ -189,7 +232,11 @@ class CascadeServer:
         preds = scores.argmax(-1)
         t = time.monotonic() if now is None else now
         for i, req in enumerate(reqs):
-            gear = self.plan.gears[req.gear_idx]
+            # the ADMITTING gear, not the active plan's: in-flight work is
+            # immune to hot-swaps (requests from before lifecycle support
+            # fall back to the plan lookup)
+            gear = req.gear if req.gear is not None \
+                else self.plan.gears[req.gear_idx]
             hop = self.core.next_hop(req.stage, float(certs[i]), gear)
             if isinstance(hop, CascadeHop):
                 req.stage = hop.next_stage
@@ -231,6 +278,12 @@ class CascadeServer:
 
     # ------------------------------------------------------------- lifecycle
     def start(self) -> None:
+        # wall-clock mode: the re-planner must never run the optimiser on
+        # the producer tick that polls it — flip it to its daemon-thread
+        # mode (run_virtual never starts threads, so it stays deterministic)
+        if self.lifecycle is not None and \
+                self.lifecycle.replanner is not None:
+            self.lifecycle.replanner.threaded = True
         self._stop.clear()
         self._threads = [threading.Thread(target=self._producer_loop,
                                           daemon=True)]

@@ -1,0 +1,67 @@
+"""Deterministic example generators for the vendored hypothesis stub.
+
+Each strategy draws boundary values for the first examples (hypothesis'
+own heuristic: bugs live at the edges) and seeded-random values after,
+via ``example(rng, i)`` where ``i`` is the example index within one test.
+"""
+import numpy as np
+
+
+class SearchStrategy:
+    def example(self, rng: np.random.Generator, i: int):
+        raise NotImplementedError
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value, max_value):
+        self.lo = int(min_value)
+        self.hi = int(max_value)
+
+    def example(self, rng, i):
+        if i == 0:
+            return self.lo
+        if i == 1:
+            return self.hi
+        return int(rng.integers(self.lo, self.hi + 1))
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value, max_value):
+        self.lo = float(min_value)
+        self.hi = float(max_value)
+
+    def example(self, rng, i):
+        if i == 0:
+            return self.lo
+        if i == 1:
+            return self.hi
+        return float(rng.uniform(self.lo, self.hi))
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements, min_size=0, max_size=10):
+        self.elements = elements
+        self.min_size = int(min_size)
+        self.max_size = int(max_size)
+
+    def example(self, rng, i):
+        if i == 0:
+            size = self.min_size
+        elif i == 1:
+            size = self.max_size
+        else:
+            size = int(rng.integers(self.min_size, self.max_size + 1))
+        return [self.elements.example(rng, i + 2 + j)
+                for j in range(size)]
+
+
+def integers(min_value=0, max_value=2 ** 31 - 1):
+    return _Integers(min_value, max_value)
+
+
+def floats(min_value=0.0, max_value=1.0, **_ignored):
+    return _Floats(min_value, max_value)
+
+
+def lists(elements, min_size=0, max_size=10, **_ignored):
+    return _Lists(elements, min_size, max_size)

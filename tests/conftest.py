@@ -1,8 +1,20 @@
 """Shared fixtures. NOTE: no XLA device-count flags here — smoke tests and
 benches must see the real (single) device; multi-device tests run in
 subprocesses that set XLA_FLAGS before importing jax."""
+import os
+import sys
+
 import numpy as np
 import pytest
+
+# The five property-test modules guard with importorskip("hypothesis").
+# Where the real package is unavailable (hermetic CI container), expose the
+# vendored minimal stub in tests/_compat so the properties still EXECUTE
+# instead of silently skipping; a real installation always wins.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_compat"))
 
 
 @pytest.fixture(scope="session")

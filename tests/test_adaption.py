@@ -1,0 +1,360 @@
+"""Plan lifecycle (core/adaption.py): drift detection, background
+re-planning, atomic hot-swap — unit coverage plus the end-to-end drift
+scenario (offered QPS ramping past the planned range triggers a background
+re-plan and a hot-swap that restores stability)."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (BackgroundReplanner, HardwareSpec, MonitorConfig,
+                        PlanLifecycle, PlanMonitor, SLO, ServingSimulator,
+                        SimConfig, optimize_gear_plan, planner_replan_fn,
+                        provenance_for_plan)
+from repro.core.adaption import PlanVersion, ReplanTrigger
+from repro.core.cascade import Cascade
+from repro.core.gears import GearPlan, PlanProvenance
+from repro.core.lp import Replica
+from repro.core.plan_state import InfeasiblePlanError
+from repro.core.profiles import synthetic_family
+from repro.core.simulator import make_gear
+
+
+def _prov(qps_max=400.0, n_devices=2, **kw):
+    return PlanProvenance(qps_max=qps_max, n_ranges=4,
+                          qps_prior=(0.25,) * 4, num_devices=n_devices,
+                          mem_per_device=16e9, **kw)
+
+
+def _tiny_plan(profiles, reps, qps_max=400.0):
+    g = make_gear(Cascade(("a", "b"), (0.3,)), reps)
+    return GearPlan(qps_max=qps_max, gears=[g], replicas=reps,
+                    num_devices=2, slo=SLO(kind="latency", latency_p95=1.0))
+
+
+@pytest.fixture(scope="module")
+def slow_family():
+    # ratio 6: the big model sustains ~500 qps at full batching — above
+    # what the accurate cascade forwards at qps_max=400, far below it at
+    # 2x, so "load beyond the planned range" genuinely breaks the top gear
+    return synthetic_family(["a", "b"], base_runtime=2e-3,
+                            runtime_ratio=6.0, base_acc=0.7, acc_gain=0.08,
+                            mem_base=0.4e9, seed=5)
+
+
+# ---------------------------------------------------------------------------
+# PlanMonitor
+# ---------------------------------------------------------------------------
+
+def test_monitor_qps_exceeds_range_needs_sustain():
+    mon = PlanMonitor(_prov(400.0),
+                      MonitorConfig(qps_sustain_ticks=3, cooldown=100.0))
+    assert mon.on_tick(0.1, 500.0) is None
+    assert mon.on_tick(0.2, 500.0) is None
+    trig = mon.on_tick(0.3, 500.0)
+    assert trig is not None and trig.reason == "qps-exceeds-range"
+    assert trig.qps_window[-1] == 500.0
+    # cooldown: no re-trigger storm
+    assert mon.on_tick(0.4, 500.0) is None
+
+
+def test_monitor_sustain_resets_below_range():
+    mon = PlanMonitor(_prov(400.0),
+                      MonitorConfig(qps_sustain_ticks=3, cooldown=0.0))
+    mon.on_tick(0.1, 500.0)
+    mon.on_tick(0.2, 500.0)
+    mon.on_tick(0.3, 100.0)      # dips back into range -> counter resets
+    assert mon.on_tick(0.4, 500.0) is None
+    assert mon.on_tick(0.5, 500.0) is None
+    assert mon.on_tick(0.6, 500.0) is not None
+
+
+def test_monitor_device_loss():
+    mon = PlanMonitor(_prov(400.0, n_devices=4),
+                      MonitorConfig(device_loss_ticks=2, cooldown=100.0))
+    mon.observe_devices(3)
+    assert mon.on_tick(0.1, 10.0) is None
+    trig = mon.on_tick(0.2, 10.0)
+    assert trig is not None and trig.reason == "device-loss"
+    assert "3/4" in trig.detail
+
+
+def test_monitor_device_loss_reports_each_level_once():
+    """A pinned-placement re-plan cannot revive devices, so the same loss
+    level must not re-trigger forever (planner-cycle storm); a DEEPER loss
+    or a full recovery re-arms the trigger."""
+    mon = PlanMonitor(_prov(400.0, n_devices=4),
+                      MonitorConfig(device_loss_ticks=2, cooldown=0.0))
+    mon.observe_devices(3)
+    mon.on_tick(0.1, 10.0)
+    assert mon.on_tick(0.2, 10.0).reason == "device-loss"
+    for i in range(6):                       # same level: reported once
+        assert mon.on_tick(0.3 + 0.1 * i, 10.0) is None
+    mon.observe_devices(2)                   # deeper loss re-arms at once
+    trig = mon.on_tick(1.0, 10.0)            # (sustain already satisfied)
+    assert trig is not None and trig.reason == "device-loss"
+    mon.observe_devices(4)                   # full recovery re-arms
+    mon.on_tick(1.2, 10.0)
+    mon.observe_devices(3)
+    mon.on_tick(1.3, 10.0)
+    assert mon.on_tick(1.4, 10.0).reason == "device-loss"
+
+
+def test_monitor_device_count_survives_rebase():
+    """Device aliveness is world state, not per-plan drift state: a device
+    still dead across a hot-swap must stay visible to loss detection."""
+    mon = PlanMonitor(_prov(400.0, n_devices=2),
+                      MonitorConfig(device_loss_ticks=2, cooldown=0.0))
+    mon.observe_devices(1)
+    mon.rebase(_prov(800.0, n_devices=2), t=5.0)   # swap happened
+    mon.on_tick(5.1, 10.0)
+    trig = mon.on_tick(5.2, 10.0)
+    assert trig is not None and trig.reason == "device-loss"
+
+
+def test_monitor_certainty_drift():
+    mon = PlanMonitor(_prov(400.0, cert_means=(("a", 0.8),)),
+                      MonitorConfig(cert_drift_threshold=0.1,
+                                    cert_min_samples=10, cooldown=100.0))
+    for _ in range(9):
+        mon.observe_cert("a", 0.4)
+    assert mon.on_tick(0.1, 10.0) is None      # below min sample count
+    mon.observe_cert("a", 0.4)
+    trig = mon.on_tick(0.2, 10.0)
+    assert trig is not None and trig.reason == "certainty-drift"
+    # rebase clears the drift state (tick past the post-rebase cooldown,
+    # so the None verdict comes from the drift check, not the quiet period)
+    mon.rebase(_prov(400.0, cert_means=(("a", 0.4),)), t=0.2)
+    for _ in range(20):
+        mon.observe_cert("a", 0.4)
+    assert mon.on_tick(150.0, 10.0) is None
+
+
+def test_monitor_certainty_drift_reports_once_per_drift():
+    """Pinned re-plans keep the same profiles, so an unresolved drift must
+    not re-trigger a futile optimizer run every cooldown; recovery (e.g. a
+    re-profiled reference) re-arms the trigger."""
+    mon = PlanMonitor(_prov(400.0, cert_means=(("a", 0.8),)),
+                      MonitorConfig(cert_drift_threshold=0.1,
+                                    cert_min_samples=5, cooldown=0.0))
+    for _ in range(5):
+        mon.observe_cert("a", 0.4)
+    assert mon.on_tick(0.1, 10.0).reason == "certainty-drift"
+    for i in range(5):                       # same drift: reported once
+        assert mon.on_tick(0.2 + 0.1 * i, 10.0) is None
+    for _ in range(200):                     # mean recovers -> re-armed
+        mon.observe_cert("a", 0.8)
+    assert mon.on_tick(1.0, 10.0) is None
+    for _ in range(400):                     # fresh drift fires again
+        mon.observe_cert("a", 0.1)
+    assert mon.on_tick(1.1, 10.0).reason == "certainty-drift"
+
+
+def test_threaded_server_flips_replanner_to_background(slow_family):
+    """start() must move the optimiser off the producer tick: the
+    wall-clock server flips its replanner to daemon-thread mode (the
+    deterministic run_virtual path never starts threads, so it keeps the
+    synchronous publish-at-latency semantics)."""
+    from repro.serving.runtime import CascadeServer
+    reps = [Replica(m, d, slow_family[m].runtime_per_sample(1.0))
+            for d in range(2) for m in slow_family]
+    plan = _tiny_plan(slow_family, reps)
+    rp = BackgroundReplanner(lambda trig, active: plan, plan_latency=0.0)
+    lc = PlanLifecycle(plan, monitor=PlanMonitor(provenance_for_plan(plan)),
+                       replanner=rp)
+    server = CascadeServer(plan, engines={}, lifecycle=lc)
+    assert not rp.threaded
+    server.start()
+    try:
+        assert rp.threaded
+    finally:
+        server.stop()
+
+
+# ---------------------------------------------------------------------------
+# BackgroundReplanner
+# ---------------------------------------------------------------------------
+
+def _version(plan):
+    return PlanVersion(epoch=0, plan=plan,
+                       provenance=plan.provenance or
+                       provenance_for_plan(plan))
+
+
+def test_replanner_publishes_after_latency(slow_family):
+    reps = [Replica(m, d, slow_family[m].runtime_per_sample(1.0))
+            for d in range(2) for m in slow_family]
+    plan = _tiny_plan(slow_family, reps)
+    new_plan = _tiny_plan(slow_family, reps, qps_max=900.0)
+    rp = BackgroundReplanner(lambda trig, active: new_plan,
+                             plan_latency=0.5)
+    trig = ReplanTrigger("qps-exceeds-range", 1.0, 800.0)
+    assert rp.submit(trig, _version(plan), t=1.0)
+    assert not rp.submit(trig, _version(plan), t=1.1)   # one at a time
+    assert rp.poll(1.2) is None                          # not due yet
+    out = rp.poll(1.6)
+    assert out is not None and out.epoch == 1
+    assert out.plan.qps_max == 900.0
+    assert rp.poll(1.7) is None                          # published once
+
+
+def test_replanner_infeasible_records_failure(slow_family):
+    reps = [Replica(m, d, slow_family[m].runtime_per_sample(1.0))
+            for d in range(2) for m in slow_family]
+    plan = _tiny_plan(slow_family, reps)
+
+    def boom(trig, active):
+        raise InfeasiblePlanError("drifted workload unservable")
+
+    rp = BackgroundReplanner(boom, plan_latency=0.0)
+    rp.submit(ReplanTrigger("qps-exceeds-range", 0.0, 800.0),
+              _version(plan), t=0.0)
+    assert rp.poll(0.1) is None
+    assert len(rp.failures) == 1 and "unservable" in rp.failures[0][1]
+    assert not rp.busy                                  # slot freed
+
+    # ANY plan_fn exception degrades to keep-serving, never a crash
+    def bug(trig, active):
+        raise ValueError("numerics blew up")
+
+    rp2 = BackgroundReplanner(bug, plan_latency=0.0)
+    rp2.submit(ReplanTrigger("qps-exceeds-range", 0.0, 800.0),
+               _version(plan), t=0.0)
+    assert rp2.poll(0.1) is None
+    assert "ValueError" in rp2.failures[0][1]
+
+
+def test_replanner_threaded_mode(slow_family):
+    reps = [Replica(m, d, slow_family[m].runtime_per_sample(1.0))
+            for d in range(2) for m in slow_family]
+    plan = _tiny_plan(slow_family, reps)
+    new_plan = _tiny_plan(slow_family, reps, qps_max=900.0)
+    rp = BackgroundReplanner(lambda trig, active: new_plan,
+                             plan_latency=0.0, threaded=True)
+    t0 = time.monotonic()
+    rp.submit(ReplanTrigger("qps-exceeds-range", t0, 800.0),
+              _version(plan), t=t0)
+    out = None
+    for _ in range(200):                 # thread hand-off, bounded wait
+        out = rp.poll(time.monotonic())
+        if out is not None:
+            break
+        time.sleep(0.01)
+    assert out is not None and out.plan.qps_max == 900.0
+
+
+# ---------------------------------------------------------------------------
+# PlanLifecycle
+# ---------------------------------------------------------------------------
+
+def test_frozen_lifecycle_never_swaps(slow_family):
+    """Baseline plans are swap-frozen: triggers are observed but no re-plan
+    is ever submitted (the ablation must stay honest)."""
+    from repro.serving.baselines import MSPlusPolicy
+    hw = HardwareSpec(num_devices=2, mem_per_device=16e9)
+    plan, _ = MSPlusPolicy(n_ranges=4).build_plan(
+        slow_family, hw, SLO(kind="latency", latency_p95=1.0), 400.0)
+    assert plan.provenance is not None and plan.provenance.frozen
+    calls = []
+    rp = BackgroundReplanner(lambda trig, active: calls.append(1) or plan,
+                             plan_latency=0.0)
+    lc = PlanLifecycle(plan, monitor=PlanMonitor(
+        plan.provenance, MonitorConfig(qps_sustain_ticks=2, cooldown=0.0)),
+        replanner=rp)
+    for i in range(10):
+        assert lc.step(0.1 * (i + 1), 900.0, 0) is None
+    assert lc.triggers                      # drift WAS detected...
+    assert not calls and not lc.swaps       # ...but never acted upon
+
+
+def test_swap_selector_adopts_driver_alpha(slow_family):
+    """Post-swap selectors must keep the driver's tuned hysteresis alpha,
+    not silently reset to the default."""
+    from repro.core import SchedulerConfig, SchedulerCore
+    reps = [Replica(m, d, slow_family[m].runtime_per_sample(1.0))
+            for d in range(2) for m in slow_family]
+    g0 = make_gear(Cascade(("a", "b"), (0.3,)), reps)
+    g1 = make_gear(Cascade(("a",), ()), reps)
+    plan = GearPlan(qps_max=400.0, gears=[g0, g1], replicas=reps,
+                    num_devices=2, slo=SLO(kind="latency", latency_p95=1.0))
+    core = SchedulerCore(reps, SchedulerConfig(alpha=2.0))
+    lc = PlanLifecycle(plan)
+    lc.attach(core)
+    sel = lc.selector_factory(plan)
+    # downgrade 1->0 at measured=100 with q0=20: alpha=2 allows it
+    # (100 >= 2*20); the default alpha=8 would hold the current gear
+    assert sel(0.0, 100.0, 1, 20) == 0
+
+
+def test_placement_incompatible_plan_rejected(slow_family):
+    reps = [Replica(m, d, slow_family[m].runtime_per_sample(1.0))
+            for d in range(2) for m in slow_family]
+    plan = _tiny_plan(slow_family, reps)
+    moved = [Replica(r.model, (r.device + 1) % 2, r.runtime_per_sample)
+             for r in reps]
+    bad = GearPlan(qps_max=900.0,
+                   gears=[make_gear(Cascade(("a",), ()), moved)],
+                   replicas=moved, num_devices=2, slo=plan.slo)
+    lc = PlanLifecycle(plan, monitor=PlanMonitor(
+        provenance_for_plan(plan), MonitorConfig(qps_sustain_ticks=1,
+                                                 cooldown=100.0)),
+        replanner=BackgroundReplanner(lambda t_, a_: bad, plan_latency=0.0))
+    lc.step(0.1, 900.0, 0)                  # trigger + submit
+    assert lc.step(0.2, 900.0, 0) is None   # publish refused
+    assert lc.active.plan is plan           # still serving the old plan
+    assert any("placement-incompatible" in msg
+               for _, msg in lc.replanner.failures)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end drift scenario (the acceptance scenario, simulator side)
+# ---------------------------------------------------------------------------
+
+def test_drift_scenario_replans_and_recovers(slow_family):
+    """Offered QPS ramps to 2x qps_max: the monitor fires
+    ``qps-exceeds-range``, the background planner (warm-started, placement
+    pinned) publishes an extended plan, the swap is applied atomically,
+    and the simulator finishes the trace stably — while the identical run
+    WITHOUT a lifecycle is left clamped to the top gear with a growing
+    backlog."""
+    profiles = slow_family
+    hw = HardwareSpec(num_devices=2, mem_per_device=16e9)
+    slo = SLO(kind="latency", latency_p95=1.0)
+    report = optimize_gear_plan(profiles, hw, slo, qps_max=400.0,
+                                n_ranges=4)
+    plan = report.plan
+    assert plan.provenance is not None          # planner records provenance
+    assert plan.provenance.qps_max == 400.0
+    assert plan.provenance.profile_digest
+
+    # 4s in range, then 16s at 2x qps_max (long enough that the clamped
+    # control cannot hide the deficit in the drain)
+    trace = np.concatenate([np.full(4, 300.0), np.full(16, 800.0)])
+    sim = ServingSimulator(profiles, plan.replicas, 2, SimConfig())
+
+    def run(lifecycle):
+        return sim.run_trace(plan, trace, drain=2.0, lifecycle=lifecycle)
+
+    lc = PlanLifecycle(
+        plan,
+        monitor=PlanMonitor(plan.provenance,
+                            MonitorConfig(qps_sustain_ticks=5,
+                                          cooldown=30.0)),
+        replanner=BackgroundReplanner(
+            planner_replan_fn(profiles, hw, slo, n_ranges=4,
+                              warm_state=report.state),
+            plan_latency=1.0))
+    res = run(lc)
+    control = run(None)
+
+    assert len(res.plan_swaps) >= 1
+    t_swap, epoch, reason = res.plan_swaps[0]
+    assert reason == "qps-exceeds-range" and epoch == 1
+    assert lc.active.plan.qps_max >= 800.0      # range actually extended
+    # placement was pinned: the swapped plan is index-compatible
+    assert [(r.model, r.device) for r in lc.active.plan.replicas] == \
+        [(r.model, r.device) for r in plan.replicas]
+    # the re-planned run absorbs the drift; the clamped control does not
+    assert res.stable
+    assert not control.stable
+    assert res.completed > control.completed

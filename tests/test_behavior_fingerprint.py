@@ -1,0 +1,123 @@
+"""Golden behavior-fingerprint regression test.
+
+The discrete-event simulator is the planner's ground truth (DESIGN.md §4),
+so its *behavior* — not just its API — must be frozen: a refactor that
+shifts one routing draw or one batch boundary silently re-tunes every plan
+the repo produces. This test replays five canonical scenarios (fixed-rate,
+trace-driven gear switching, ensemble voting, device failure + recovery,
+hedged stragglers) and asserts the scalar outcomes are **bit-identical** to
+the committed fingerprint in ``tests/data/behavior_fingerprint.json``.
+
+Regenerating after an INTENTIONAL behavior change
+-------------------------------------------------
+Run the test module with the regen flag and commit the diff alongside the
+change that explains it::
+
+    PYTHONPATH=src REGEN_FINGERPRINT=1 python -m pytest \
+        tests/test_behavior_fingerprint.py -q
+
+The JSON then shows reviewers exactly which scenarios moved and by how
+much; an unexplained diff is a bug, not noise (the simulator is seeded and
+deterministic end to end). CI uploads this file as an artifact on failure
+so golden mismatches are inspectable without a local checkout.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.cascade import Cascade
+from repro.core.gears import GearPlan, SLO
+from repro.core.lp import Replica
+from repro.core.profiles import synthetic_family
+from repro.core.simulator import ServingSimulator, SimConfig, make_gear
+from repro.distributed.fault_tolerance import HedgePolicy
+
+FINGERPRINT_PATH = os.path.join(os.path.dirname(__file__), "data",
+                                "behavior_fingerprint.json")
+
+
+def _family():
+    return synthetic_family(["tiny", "mini", "base"], base_runtime=2e-4,
+                            runtime_ratio=2.4, base_acc=0.70, acc_gain=0.06,
+                            mem_base=0.4e9, seed=3)
+
+
+def _plan(profiles, reps):
+    g0 = make_gear(Cascade(("tiny", "base"), (0.35,)), reps, {"tiny": 2})
+    g1 = make_gear(Cascade(("tiny", "mini"), (0.2,)), reps, {"tiny": 4})
+    g2 = make_gear(Cascade(("tiny",), ()), reps, {"tiny": 8})
+    return GearPlan(qps_max=600.0, gears=[g0, g1, g2], replicas=reps,
+                    num_devices=2, slo=SLO(kind="latency", latency_p95=1.0))
+
+
+def _summarize(res):
+    """Scalar digest of one run. Floats are stored via repr round-trip, so
+    equality below is bit-equality of the underlying doubles."""
+    return {
+        "completed": int(res.completed),
+        "offered": int(res.offered),
+        "backlog_end": int(res.backlog_end),
+        "p95": float(res.p95),
+        "accuracy": float(res.accuracy),
+        "switches": len(res.gear_switches),
+        "busy": float(res.device_busy.sum()),
+    }
+
+
+def compute_fingerprint():
+    profiles = _family()
+    reps = [Replica(m, d, profiles[m].runtime_per_sample(1.0))
+            for d in range(2) for m in profiles]
+    plan = _plan(profiles, reps)
+    sim = ServingSimulator(profiles, reps, 2, SimConfig(max_batch=128))
+
+    out = {}
+
+    # 1. fixed-rate: constant arrivals, single gear (the planner's view)
+    out["fixed-rate"] = _summarize(
+        sim.run_fixed(plan.gears[0], qps=300.0, horizon=3.0))
+
+    # 2. trace: load step up and back down -> §5 producer switches gears
+    trace = np.concatenate([np.full(3, 60.0), np.full(3, 550.0),
+                            np.full(4, 60.0)])
+    out["trace"] = _summarize(sim.run_trace(plan, trace))
+
+    # 3. ensemble: all members vote, majority decides (Cocktail+ mode)
+    ens = make_gear(Cascade(("tiny", "mini", "base"), (0.0, 0.0)), reps,
+                    mode="ensemble")
+    ens_plan = GearPlan(qps_max=600.0, gears=[ens], replicas=reps,
+                        num_devices=2, slo=plan.slo)
+    out["ensemble"] = _summarize(
+        sim.run_trace(ens_plan, np.full(4, 80.0)))
+
+    # 4. device-failure: kill device 0 mid-trace, recover during drain
+    ev = [(2.0, 0, "fail", 0.0), (9.0, 0, "recover", 1.0)]
+    out["device-failure"] = _summarize(
+        sim.run_trace(plan, np.full(8, 50.0), device_events=ev, drain=3.0))
+
+    # 5. hedging: a straggling device + hedged re-issues on siblings
+    ev = [(1.0, 1, "slow", 5.0), (6.0, 1, "recover", 1.0)]
+    out["hedging"] = _summarize(
+        sim.run_trace(plan, np.full(8, 60.0), device_events=ev, drain=3.0,
+                      hedge=HedgePolicy(hedge_multiplier=3.0)))
+    return out
+
+
+def test_simulator_matches_golden_fingerprint():
+    fresh = compute_fingerprint()
+    if os.environ.get("REGEN_FINGERPRINT"):
+        os.makedirs(os.path.dirname(FINGERPRINT_PATH), exist_ok=True)
+        with open(FINGERPRINT_PATH, "w") as f:
+            json.dump(fresh, f, indent=1, sort_keys=True)
+            f.write("\n")
+        pytest.skip(f"fingerprint regenerated at {FINGERPRINT_PATH}")
+    assert os.path.exists(FINGERPRINT_PATH), \
+        "no golden fingerprint committed; run with REGEN_FINGERPRINT=1"
+    with open(FINGERPRINT_PATH) as f:
+        golden = json.load(f)
+    assert fresh == golden, (
+        "simulator behavior drifted from the golden fingerprint; if the "
+        "change is intentional, regenerate with REGEN_FINGERPRINT=1 and "
+        "commit the JSON diff with an explanation")

@@ -101,6 +101,84 @@ def test_executors_make_identical_decisions(bert_like_profiles):
     assert res.completed == res.offered == len(srv_by_rid)
 
 
+def test_hot_swap_decision_parity(bert_like_profiles):
+    """Mid-run plan hot-swap (core/adaption.py) through BOTH executors:
+    offered QPS ramps to 2x the plan's qps_max, the monitor triggers, the
+    background re-planner publishes an epoch-1 plan, and the swap-aware
+    decision traces — including the swap epochs and the QPS-range gear
+    remap — must stay element-wise identical."""
+    from repro.core.adaption import (BackgroundReplanner, MonitorConfig,
+                                     PlanLifecycle, PlanMonitor,
+                                     provenance_for_plan)
+
+    profiles = bert_like_profiles
+    reps, plan, _ = _setup(profiles)
+    # ramp to 2x qps_max (400): sustained over-range ticks trigger a swap
+    trace = np.concatenate([np.full(3, 40.0), np.full(4, 800.0),
+                            np.full(4, 40.0)])
+    n_arr = len(trace_to_arrivals(trace))
+
+    # deterministic "re-planned" plan over the SAME replicas: wider range,
+    # different gear table (a swap must remap the gear index by QPS range)
+    g0 = make_gear(Cascade(("tiny", "base"), (0.2,)), reps, {"tiny": 4})
+    g1 = make_gear(Cascade(("tiny",), ()), reps, {"tiny": 8})
+    new_plan = GearPlan(qps_max=1000.0, gears=[g0, g1], replicas=reps,
+                        num_devices=2, slo=plan.slo)
+
+    def lifecycle():
+        return PlanLifecycle(
+            plan,
+            monitor=PlanMonitor(provenance_for_plan(plan),
+                                MonitorConfig(qps_sustain_ticks=3,
+                                              cooldown=100.0)),
+            replanner=BackgroundReplanner(lambda trig, active: new_plan,
+                                          plan_latency=0.5))
+
+    tr_sim = DecisionTrace()
+    sim = ServingSimulator(profiles, plan.replicas, 2,
+                           SimConfig(max_batch=128))
+    lc_sim = lifecycle()
+    res = sim.run_trace(plan, trace, decision_trace=tr_sim,
+                        lifecycle=lc_sim)
+
+    tr_srv = DecisionTrace()
+    engines = {m: _ReplayEngine(profiles[m].validation.certs)
+               for m in ("tiny", "base")}
+    lc_srv = lifecycle()
+    server = CascadeServer(
+        plan, engines, estimator=_cert_estimator, max_batch=128,
+        route_pool=RoutePool.for_arrivals(0, n_arr),
+        decision_trace=tr_srv, lifecycle=lc_srv)
+    reqs = [Request(rid=i, tokens=np.array([i], np.int64))
+            for i in range(n_arr)]
+    done = server.run_virtual(
+        reqs, trace, batch_runtime=lambda m, b: profiles[m].runtime(b))
+
+    # the swap actually happened, in both, with identical epoch + remap
+    assert len(tr_sim.swaps) == 1
+    assert tr_sim.swaps == tr_srv.swaps
+    assert tr_sim.swaps[0][0] == 1            # epoch tag
+    assert res.plan_swaps == server.plan_swaps
+    assert res.plan_swaps[0][2] == "qps-exceeds-range"
+    assert lc_sim.active.plan is new_plan and lc_srv.active.plan is new_plan
+
+    # swap-inclusive decision-trace equality, element for element
+    assert tr_sim.routes == tr_srv.routes
+    assert tr_sim.gear_switches == tr_srv.gear_switches
+    assert tr_sim.fires == tr_srv.fires
+    assert tr_sim.hops == tr_srv.hops
+
+    # in-flight work admitted before the swap finished on the OLD plan's
+    # gear objects (epoch tagging): requests from the first phase resolved
+    # under epoch 0
+    by_epoch = {}
+    for r in done:
+        by_epoch.setdefault(r.plan_epoch, 0)
+        by_epoch[r.plan_epoch] += 1
+    assert by_epoch.get(0, 0) > 0 and by_epoch.get(1, 0) > 0
+    assert res.completed == len(done)
+
+
 def test_baseline_policy_runs_on_real_runtime(bert_like_profiles):
     """MS+ (a baseline built for the simulator) served by CascadeServer via
     the shared GearSelector protocol."""
