@@ -51,7 +51,10 @@ def window_p95(result, lo: float, hi: float) -> float:
 
 
 def main(quick: bool = False):
-    res = Results("bench_replanning")
+    pre, overload = (4, 12) if quick else (6, 24)
+    res = Results("bench_replanning", scenario={
+        "qps_max": QPS_MAX, "drift_factor": 2.0, "pre_seconds": pre,
+        "overload_seconds": overload, "quick": bool(quick)})
     profiles = drift_family()
     hw = HardwareSpec(num_devices=2, mem_per_device=16e9)
     slo = SLO(kind="latency", latency_p95=1.0)
@@ -59,7 +62,6 @@ def main(quick: bool = False):
                                 n_ranges=4)
     plan = report.plan
 
-    pre, overload = (4, 12) if quick else (6, 24)
     trace = drift_trace(pre, overload)
     horizon = len(trace) + 3.0
     sim = ServingSimulator(profiles, plan.replicas, 2, SimConfig())

@@ -32,27 +32,14 @@ def main(quick: bool = False):
     for e in engines.values():
         e.warmup(32)
 
-    # --- calibrate the runtime's fixed per-batch overhead (queue machinery,
-    # polling, GIL) against idle single requests — the DES then uses it as
-    # SimConfig.dispatch_overhead, exactly how the paper's simulator relies
-    # on profiles measured from the real system (App. C.1).
-    import time as _time
+    # calibrate the runtime's fixed per-batch overhead against idle single
+    # requests — the DES then uses it as SimConfig.dispatch_overhead,
+    # exactly how the paper's simulator relies on profiles measured from
+    # the real system (App. C.1); helper shared with bench_fidelity
+    from benchmarks.common import calibrate_dispatch_overhead
     from repro.core import SimConfig
-    probe = TINY_FAMILY[0].name
-    hw0 = HardwareSpec(num_devices=1, mem_per_device=16e9)
-    plan0 = optimize_gear_plan({probe: profiles[probe]}, hw0,
-                               SLO(kind="latency", latency_p95=1.0),
-                               qps_max=50, n_ranges=1).plan
-    toks0, _, _ = synthetic_classification_data(24, seed=3)
-    server0 = CascadeServer(plan0, {probe: engines[probe]})
-    server0.start()
-    for i in range(24):
-        server0.submit(Request(rid=i, tokens=toks0[i]))
-        _time.sleep(0.06)  # idle spacing: pure per-request overhead
-    _time.sleep(0.3)
-    server0.stop()
-    idle_lat = np.median([r.latency for r in server0.completed])
-    overhead = max(0.0, float(idle_lat) - profiles[probe].runtime(1))
+    overhead = calibrate_dispatch_overhead(profiles, engines=engines,
+                                           n_probes=24, spacing=0.06)
     res.add("calibrated_dispatch_overhead_ms", round(overhead * 1e3, 2))
 
     seconds = 8 if quick else 15

@@ -1,40 +1,79 @@
-"""Shared benchmark scaffolding: the two paper workloads, hardware, CSV."""
+"""Shared benchmark scaffolding: the two paper workloads, hardware, CSV +
+machine-readable BENCH_<name>.json artifacts (metrics + git SHA) so the
+perf trajectory accumulates across PRs."""
 from __future__ import annotations
 
 import json
 import os
+import subprocess
 import time
 from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core import HardwareSpec, SLO, ServingSimulator
+from repro.core.execution import EngineBackend, profile_backend
 from repro.core.profiles import ProfileSet, synthetic_family
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
 TINY_ARTIFACT = os.path.join(ARTIFACT_DIR, "tiny_family.npz")
 
 
+def tiny_engine_backend(artifact: str = TINY_ARTIFACT,
+                        family=None) -> EngineBackend:
+    """EngineBackend over a cached trained tiny family, with measured
+    profiles attached via the unified ``profile_backend`` entry point."""
+    from repro.serving.tinymodels import (TINY_FAMILY, load_tiny_family,
+                                          make_engine_backend)
+    family = family or TINY_FAMILY
+    return make_engine_backend(*load_tiny_family(artifact, family),
+                               family=family)
+
+
+def calibrate_dispatch_overhead(profiles: ProfileSet, backend=None,
+                                engines=None, n_probes: int = 16,
+                                spacing: float = 0.05) -> float:
+    """Fixed per-batch serving overhead (queue machinery, polling, GIL) of
+    the threaded runtime, measured on idle single requests — the DES
+    consumes it as ``SimConfig.dispatch_overhead`` (paper App. C.1:
+    profile the real system). Read at a LOW quantile: idle overhead is a
+    best-case machinery cost, and the idle-latency distribution on a
+    shared box is bimodal (OS-scheduling / lazy-jit tail up to ~300ms)
+    — a median read from the bad mode poisons every simulated latency
+    downstream. Shared by both Fig.-13 benches."""
+    import time
+    from repro.core import optimize_gear_plan
+    from repro.serving.runtime import CascadeServer, Request
+    from repro.serving.tinymodels import synthetic_classification_data
+    probe = min(profiles, key=lambda m: profiles[m].runtime(1))
+    hw0 = HardwareSpec(num_devices=1, mem_per_device=16e9)
+    plan0 = optimize_gear_plan(
+        {probe: profiles[probe]}, hw0,
+        SLO(kind="latency", latency_p95=1.0), qps_max=50, n_ranges=1).plan
+    toks, _, _ = synthetic_classification_data(n_probes, seed=3)
+    server = CascadeServer(
+        plan0, engines={probe: engines[probe]} if engines else None,
+        backend=backend)
+    server.start()
+    for i in range(n_probes):
+        server.submit(Request(rid=i, tokens=toks[i]))
+        time.sleep(spacing)   # idle spacing: pure per-request overhead
+    time.sleep(0.25)
+    server.stop()
+    if not server.completed:
+        return 0.0
+    idle_lat = float(np.quantile([r.latency for r in server.completed],
+                                 0.25))
+    return max(0.0, idle_lat - profiles[probe].runtime(1))
+
+
 def bert_workload(real: bool = True) -> ProfileSet:
     """Five fast models (the paper's BERT family). With ``real`` and a
     cached artifact, uses the trained tiny transformers with wall-clock CPU
-    profiles; otherwise the calibrated synthetic family."""
+    profiles (measured through the EngineBackend the runtime serves);
+    otherwise the calibrated synthetic family."""
     if real and os.path.exists(TINY_ARTIFACT):
-        from repro.serving.engine import InferenceEngine, profile_engine
-        from repro.serving.tinymodels import (TINY_FAMILY, apply_tiny,
-                                              load_tiny_family,
-                                              validation_record_from_scores)
-        params_by, scores_by, tok_va, lab_va = load_tiny_family(TINY_ARTIFACT)
-        out: ProfileSet = {}
-        for cfg in TINY_FAMILY:
-            rec = validation_record_from_scores(scores_by[cfg.name], lab_va)
-            eng = InferenceEngine(cfg.name,
-                                  lambda p, t, c=cfg: apply_tiny(c, p, t),
-                                  params_by[cfg.name])
-            out[cfg.name] = profile_engine(
-                eng, seq_len=32, batch_sizes=(1, 4, 16, 64), repeats=3,
-                validation=rec)
-        return out
+        return tiny_engine_backend().profiles
     return synthetic_family(["t-tiny", "t-mini", "t-small", "t-medium",
                              "t-base"], base_runtime=2e-4,
                             runtime_ratio=2.2, base_acc=0.80,
@@ -59,11 +98,28 @@ def llama_hw(n: int = 16) -> HardwareSpec:
     return HardwareSpec(num_devices=n, mem_per_device=32e9)
 
 
-class Results:
-    """name,value CSV emission + JSON artifact accumulation."""
+def git_sha() -> str:
+    """Current commit SHA (stamped into BENCH_*.json for the trajectory)."""
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)), timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
 
-    def __init__(self, bench: str):
+
+class Results:
+    """name,value CSV emission + JSON artifact accumulation.
+
+    ``finish()`` writes two artifacts: the historical ``<bench>.json`` row
+    dump and a machine-readable ``BENCH_<name>.json`` envelope (scenario,
+    metrics, git SHA, wall seconds) — the unit the perf trajectory and CI
+    artifact upload consume."""
+
+    def __init__(self, bench: str, scenario: Optional[Dict] = None):
         self.bench = bench
+        self.scenario = scenario or {}
         self.rows: List[Dict] = []
         self._t0 = time.time()
 
@@ -73,11 +129,27 @@ class Results:
         extras = " ".join(f"{k}={v}" for k, v in extra.items())
         print(f"{self.bench},{name},{value} {extras}".strip(), flush=True)
 
+    @property
+    def short_name(self) -> str:
+        return self.bench[len("bench_"):] if \
+            self.bench.startswith("bench_") else self.bench
+
     def finish(self) -> List[Dict]:
-        print(f"# {self.bench} done in {time.time() - self._t0:.1f}s",
-              flush=True)
+        wall = time.time() - self._t0
+        print(f"# {self.bench} done in {wall:.1f}s", flush=True)
         os.makedirs(ARTIFACT_DIR, exist_ok=True)
         path = os.path.join(ARTIFACT_DIR, f"{self.bench}.json")
         with open(path, "w") as f:
             json.dump(self.rows, f, indent=1, default=str)
+        envelope = {
+            "bench": self.bench,
+            "scenario": self.scenario,
+            "git_sha": git_sha(),
+            "wall_seconds": round(wall, 2),
+            "metrics": self.rows,
+        }
+        bench_path = os.path.join(ARTIFACT_DIR,
+                                  f"BENCH_{self.short_name}.json")
+        with open(bench_path, "w") as f:
+            json.dump(envelope, f, indent=1, default=str)
         return self.rows

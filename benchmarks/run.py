@@ -1,5 +1,8 @@
 """Benchmark harness: one module per paper table/figure. Emits
-``bench,name,value extras`` CSV lines + JSON artifacts per bench.
+``bench,name,value extras`` CSV lines plus, per bench, the historical
+``artifacts/<bench>.json`` row dump and a machine-readable
+``artifacts/BENCH_<name>.json`` envelope (scenario, metrics, git SHA) —
+the unit the perf trajectory and the CI artifact upload consume.
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
 """
@@ -19,6 +22,7 @@ BENCHES = [
     "bench_planner_cost",        # Fig. 11
     "bench_ablation",            # Fig. 12
     "bench_simulator_fidelity",  # Fig. 13 (REAL tiny models)
+    "bench_fidelity",            # Fig. 13 via the ExecutionBackend layer
     "bench_kernels",             # TPU-target kernels
     "bench_roofline",            # §Roofline summary from the dry-run
     "bench_fault_tolerance",     # beyond-paper FT/elasticity

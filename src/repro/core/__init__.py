@@ -11,6 +11,10 @@ from repro.core.adaption import (BackgroundReplanner, MonitorConfig,
 from repro.core.cascade import Cascade, CascadeEval, evaluate_cascade
 from repro.core.certainty import (CERTAINTY_ESTIMATORS, predict_with_certainty,
                                   top2_gap)
+from repro.core.execution import (BatchExecution, CostModelBackend,
+                                  EngineBackend, ExecutionBackend,
+                                  ReplayBackend, profile_backend,
+                                  resolve_estimator)
 from repro.core.gears import Gear, GearPlan, PlanProvenance, SLO
 from repro.core.lp import Replica, min_utilization, min_utilization_lp
 from repro.core.plan_state import (HardwareSpec, InfeasiblePlanError,
@@ -39,4 +43,7 @@ __all__ = [
     "PlanProvenance", "PlanMonitor", "MonitorConfig", "ReplanTrigger",
     "PlanVersion", "BackgroundReplanner", "PlanLifecycle", "SwapEvent",
     "planner_replan_fn", "provenance_for_plan", "profile_digest",
+    # execution backends (core/execution.py)
+    "BatchExecution", "ExecutionBackend", "ReplayBackend", "EngineBackend",
+    "CostModelBackend", "profile_backend", "resolve_estimator",
 ]

@@ -22,8 +22,13 @@ class Cascade:
     thresholds: Tuple[float, ...]      # len = len(models) - 1
 
     def __post_init__(self):
-        assert len(self.thresholds) == len(self.models) - 1, \
-            f"{len(self.models)} models need {len(self.models) - 1} thresholds"
+        # explicit ValueError, not assert: validation must survive python -O
+        if len(self.models) == 0:
+            raise ValueError("a cascade needs at least one model")
+        if len(self.thresholds) != len(self.models) - 1:
+            raise ValueError(
+                f"{len(self.models)} models need {len(self.models) - 1} "
+                f"thresholds, got {len(self.thresholds)}")
 
     def __str__(self) -> str:
         parts = []
@@ -62,7 +67,10 @@ def evaluate_cascade(cascade: Cascade, profiles: ProfileSet) -> CascadeEval:
     fractions: List[float] = []
     for i, name in enumerate(cascade.models):
         rec = profiles[name].validation
-        assert len(rec.certs) == n, "validation sets must align across family"
+        if len(rec.certs) != n:
+            raise ValueError(
+                f"validation sets must align across the family: "
+                f"{name} has {len(rec.certs)} samples, expected {n}")
         active = ~resolved
         fractions.append(float(active.mean()))
         if i < len(cascade.thresholds):
@@ -86,8 +94,8 @@ def run_cascade_on_scores(cascade: Cascade,
     """Online cascade execution on raw score matrices (N, V): returns
     (predictions, which-model-resolved, certainties). Used by tests and the
     real serving path for tiny models."""
-    from repro.core.certainty import CERTAINTY_ESTIMATORS
-    est = CERTAINTY_ESTIMATORS[estimator]
+    from repro.core.execution import resolve_estimator
+    est = resolve_estimator(estimator)
     first = model_scores[cascade.models[0]]
     n = first.shape[0]
     preds = np.zeros(n, np.int64)

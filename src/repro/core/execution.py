@@ -1,0 +1,372 @@
+"""ExecutionBackend: the single model-execution interface under serving.
+
+PR 1 unified *decisions* (``SchedulerCore``) and PR 2 the *plan lifecycle*
+(``adaption``); this module unifies *execution*. Both executors — the
+discrete-event ``ServingSimulator`` and the threaded ``CascadeServer`` —
+obtain per-sample (pred, certainty, correctness) and per-batch runtimes
+exclusively through one of these backends, never by special-casing where
+they came from (DESIGN.md §9). That is what makes the simulator-vs-server
+fidelity measurable (paper Fig. 13, App. C — ``benchmarks/bench_fidelity``)
+and lets any executor run on any physics:
+
+* ``ReplayBackend``    — validation-record replay + profile-interpolated
+  runtimes: today's simulator physics. Plugged into the wall-clock server
+  it gives compute-free high-QPS stress runs.
+* ``EngineBackend``    — bucketed jitted JAX models via ``InferenceEngine``:
+  today's server physics. Plugged into the simulator it runs REAL model
+  compute under a virtual clock.
+* ``CostModelBackend`` — the analytic TPU-v5e roofline for the assigned big
+  architectures (no accelerator in this container), replayed like profiles.
+
+Profile production is unified the same way: ``profile_backend(backend, ...)``
+is the one entry point that turns any backend into the ``ModelProfile``
+artifacts the gear planner consumes, so planner inputs are identical
+regardless of source (wall-clock measurement, analytic roofline, or a
+pre-existing profile).
+
+``resolve_estimator`` is the single home of the certainty-estimator lookup
+(previously duplicated across ``serving/runtime.py`` and ``core/cascade.py``).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import (Callable, Dict, List, Mapping, Optional, Sequence, Tuple,
+                    Union)
+
+import numpy as np
+
+from repro.core.profiles import ModelProfile, ProfileSet, ValidationRecord
+
+__all__ = ["BatchExecution", "ExecutionBackend", "ReplayBackend",
+           "EngineBackend", "CostModelBackend", "profile_backend",
+           "resolve_estimator"]
+
+
+def resolve_estimator(est: Union[str, Callable]) -> Callable:
+    """Resolve a certainty estimator name to its callable (passing callables
+    through). The ONLY place ``CERTAINTY_ESTIMATORS`` is consulted — the
+    estimator choice of a serving stack lives in its backend, nowhere else.
+    """
+    if callable(est):
+        return est
+    from repro.core.certainty import CERTAINTY_ESTIMATORS
+    try:
+        return CERTAINTY_ESTIMATORS[est]
+    except KeyError:
+        raise ValueError(
+            f"unknown certainty estimator {est!r}; available: "
+            f"{sorted(CERTAINTY_ESTIMATORS)}") from None
+
+
+@dataclass
+class BatchExecution:
+    """What executing one batch produced, per sample (aligned with the
+    submitted sample order).
+
+    ``certs`` always present — every cascade decision needs it. ``preds``
+    and ``correct`` are present when the backend can know them (an engine
+    without labels knows predictions but not correctness; a replay backend
+    without recorded preds knows correctness but not the label). ``elapsed``
+    is the wall seconds the execution physically took (None for virtual
+    backends, whose service time is ``batch_runtime``).
+    """
+    certs: Sequence[float]
+    preds: Optional[Sequence[int]] = None
+    correct: Optional[Sequence[bool]] = None
+    elapsed: Optional[float] = None
+
+
+class ExecutionBackend:
+    """Protocol: everything an executor may ask about model execution.
+
+    Drivers (simulator, server) own state and time; ``SchedulerCore`` owns
+    decisions; backends own *physics* — what a batch costs and what each
+    sample's prediction/certainty is.
+    """
+
+    name: str = "backend"
+
+    def models(self) -> List[str]:
+        raise NotImplementedError
+
+    def batch_runtime(self, model: str, batch_size: int) -> float:
+        """Predicted seconds for one batch (virtual-time service time)."""
+        raise NotImplementedError
+
+    def execute(self, model: str, sids: Sequence[int],
+                tokens: Optional[Sequence[np.ndarray]] = None
+                ) -> BatchExecution:
+        """Run one batch of samples ``sids`` (payloads in ``tokens`` when
+        the caller has them) and return per-sample outcomes."""
+        raise NotImplementedError
+
+    def validation_record(self, model: str) -> ValidationRecord:
+        raise NotImplementedError
+
+    def profile(self, model: str,
+                batch_sizes: Optional[Sequence[int]] = None,
+                **kw) -> ModelProfile:
+        """The ModelProfile artifact the gear planner consumes for
+        ``model`` — use ``profile_backend`` rather than calling directly."""
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# ReplayBackend: validation-record replay (simulator physics)
+# ---------------------------------------------------------------------------
+
+class ReplayBackend(ExecutionBackend):
+    """Replays recorded per-sample validation behaviour with profile-
+    interpolated batch runtimes — the paper's App. C simulator physics.
+
+    Sample ``sid`` replays validation index ``sid % n_val`` (validation
+    sets must align across the family, as in ``evaluate_cascade``). With
+    ``sleep=True`` every ``execute`` blocks for the profiled batch runtime,
+    so the *threaded wall-clock* server can serve this backend at QPS far
+    beyond what real model compute allows (scheduler/queue stress runs).
+    """
+
+    name = "replay"
+
+    def __init__(self, profiles: ProfileSet, sleep: bool = False):
+        if not profiles:
+            raise ValueError("ReplayBackend needs at least one profile")
+        self.profiles = profiles
+        self.sleep = sleep
+        self._val_n = len(next(iter(profiles.values())).validation.certs)
+        # scalar lists, not arrays: the simulator's completion path does
+        # per-sample scalar reads, where list indexing beats numpy boxing
+        self._certs = {m: p.validation.certs.tolist()
+                       for m, p in profiles.items()}
+        self._corr = {m: p.validation.correct.tolist()
+                      for m, p in profiles.items()}
+        self._preds = {m: (p.validation.preds.tolist()
+                           if p.validation.preds is not None else None)
+                       for m, p in profiles.items()}
+
+    @property
+    def validation_n(self) -> int:
+        return self._val_n
+
+    def models(self) -> List[str]:
+        return list(self.profiles)
+
+    def batch_runtime(self, model: str, batch_size: int) -> float:
+        return self.profiles[model].runtime(batch_size)
+
+    def execute(self, model: str, sids: Sequence[int],
+                tokens: Optional[Sequence[np.ndarray]] = None
+                ) -> BatchExecution:
+        certs, corr, preds = \
+            self._certs[model], self._corr[model], self._preds[model]
+        n = self._val_n
+        vi = [s % n for s in sids]
+        elapsed = None
+        if self.sleep:
+            elapsed = self.batch_runtime(model, len(vi))
+            time.sleep(elapsed)
+        return BatchExecution(
+            certs=[certs[i] for i in vi],
+            preds=[preds[i] for i in vi] if preds is not None else None,
+            correct=[corr[i] for i in vi],
+            elapsed=elapsed)
+
+    def validation_record(self, model: str) -> ValidationRecord:
+        return self.profiles[model].validation
+
+    def profile(self, model: str,
+                batch_sizes: Optional[Sequence[int]] = None,
+                **kw) -> ModelProfile:
+        """The stored profile IS the artifact (optionally re-sampled onto a
+        different batch-size grid via the same interpolation the runtime
+        model uses)."""
+        p = self.profiles[model]
+        if batch_sizes is None:
+            return p
+        bs = np.asarray(batch_sizes, np.float64)
+        return ModelProfile(
+            name=p.name, mem_bytes=p.mem_bytes, batch_sizes=bs,
+            batch_runtimes=np.asarray([p.runtime(b) for b in bs]),
+            devices_per_replica=p.devices_per_replica,
+            validation=p.validation)
+
+
+# ---------------------------------------------------------------------------
+# EngineBackend: jitted real models (server physics)
+# ---------------------------------------------------------------------------
+
+class EngineBackend(ExecutionBackend):
+    """Real jitted execution through ``InferenceEngine``-like objects
+    (anything with ``infer(tokens) -> scores``), certainty via the shared
+    estimator registry.
+
+    ``tokens``/``labels`` are optional sid-indexed pools: with a token pool
+    the backend can execute from sample ids alone (so the discrete-event
+    simulator can drive REAL models in virtual time); with labels it also
+    reports per-sample correctness. ``profiles`` (when provided) back
+    ``batch_runtime`` for virtual-time drivers.
+    """
+
+    name = "engine"
+
+    def __init__(self, engines: Mapping[str, object],
+                 estimator: Union[str, Callable] = "top2_gap",
+                 profiles: Optional[ProfileSet] = None,
+                 tokens: Optional[np.ndarray] = None,
+                 labels: Optional[np.ndarray] = None):
+        self.engines = dict(engines)
+        self.estimator = resolve_estimator(estimator)
+        self.profiles = profiles
+        self._tokens = None if tokens is None else np.asarray(tokens)
+        self._labels = None if labels is None else np.asarray(labels)
+
+    def models(self) -> List[str]:
+        return list(self.engines)
+
+    def batch_runtime(self, model: str, batch_size: int) -> float:
+        if self.profiles is None or model not in self.profiles:
+            raise RuntimeError(
+                f"EngineBackend has no profile for {model!r}; attach "
+                "profiles (e.g. via profile_backend) before virtual-time "
+                "use")
+        return self.profiles[model].runtime(batch_size)
+
+    def execute(self, model: str, sids: Sequence[int],
+                tokens: Optional[Sequence[np.ndarray]] = None
+                ) -> BatchExecution:
+        if tokens is None:
+            if self._tokens is None:
+                raise RuntimeError(
+                    "EngineBackend.execute needs per-sample tokens (or a "
+                    "token pool at construction)")
+            pool_n = len(self._tokens)
+            batch = self._tokens[[s % pool_n for s in sids]]
+        else:
+            batch = np.stack([np.asarray(t) for t in tokens])
+        t0 = time.perf_counter()
+        scores = self.engines[model].infer(batch)
+        elapsed = time.perf_counter() - t0
+        certs = np.asarray(self.estimator(scores), np.float64)
+        preds = scores.argmax(-1)
+        correct = None
+        if tokens is None and self._labels is not None:
+            # correctness is only knowable when the inputs came from the
+            # sid-indexed pool the labels belong to — caller-supplied
+            # tokens would pair real predictions with unrelated labels
+            lab_n = len(self._labels)
+            correct = (preds == self._labels[[s % lab_n for s in sids]]
+                       ).tolist()
+        return BatchExecution(certs=certs, preds=preds, correct=correct,
+                              elapsed=elapsed)
+
+    def validation_record(self, model: str) -> ValidationRecord:
+        if self.profiles is None or model not in self.profiles:
+            raise RuntimeError(f"no validation record attached for {model!r}")
+        return self.profiles[model].validation
+
+    def profile(self, model: str,
+                batch_sizes: Optional[Sequence[int]] = None,
+                seq_len: int = 32, repeats: int = 5,
+                mem_bytes: Optional[float] = None,
+                validation: Optional[ValidationRecord] = None,
+                **kw) -> ModelProfile:
+        """Measure wall-clock batch runtimes (median of ``repeats``) through
+        the engine's own bucketed path, so the planner sees the padding cost
+        (DESIGN.md §3.2). This is the one measurement implementation;
+        ``repro.serving.engine.profile_engine`` delegates here."""
+        if batch_sizes is None:
+            batch_sizes = (1, 2, 4, 8, 16, 32, 64)
+        batch_sizes = tuple(int(b) for b in batch_sizes)
+        engine = self.engines[model]
+        warmup = getattr(engine, "warmup", None)
+        if warmup is not None:
+            warmup(seq_len)
+        rts = []
+        for b in batch_sizes:
+            tok = np.zeros((b, seq_len), np.int32)
+            times = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                engine.infer(tok)
+                times.append(time.perf_counter() - t0)
+            rts.append(float(np.median(times)))
+        if mem_bytes is None:
+            params = getattr(engine, "params", None)
+            if params is not None:
+                import jax
+                mem_bytes = sum(float(np.prod(l.shape)) * 4
+                                for l in jax.tree.leaves(params))
+            else:
+                mem_bytes = 0.0
+        if validation is None and self.profiles and model in self.profiles:
+            validation = self.profiles[model].validation
+        return ModelProfile(
+            name=model, mem_bytes=float(mem_bytes),
+            batch_sizes=np.asarray(batch_sizes, np.float64),
+            batch_runtimes=np.asarray(rts),
+            validation=validation or ValidationRecord(
+                certs=np.zeros(1), correct=np.ones(1, bool)))
+
+
+# ---------------------------------------------------------------------------
+# CostModelBackend: analytic TPU-v5e roofline (big-architecture physics)
+# ---------------------------------------------------------------------------
+
+class CostModelBackend(ReplayBackend):
+    """The assigned big architectures cannot run on this container, so their
+    physics come from the analytic TPU-v5e roofline
+    (``repro.profiling.cost_model.analytic_runtime``) with synthetic or
+    measured validation behaviour replayed per sample — a ReplayBackend
+    whose profiles are derived, not measured.
+
+    ``archs`` maps model name -> ModelConfig (or an arch id resolvable via
+    ``repro.configs.get_config``); ``validation`` maps model name ->
+    ValidationRecord (certainty structure cannot be derived analytically).
+    """
+
+    name = "cost_model"
+
+    def __init__(self, archs: Mapping[str, object],
+                 validation: Optional[Mapping[str, ValidationRecord]] = None,
+                 context: int = 2048, kind: str = "decode",
+                 chips: Optional[Mapping[str, int]] = None,
+                 batch_sizes: Sequence[int] = (1, 2, 4, 8, 16, 32, 64, 128)):
+        from repro.configs import get_config
+        from repro.profiling.cost_model import profile_from_cost_model
+        profiles: ProfileSet = {}
+        for name, cfg in archs.items():
+            if isinstance(cfg, str):
+                cfg = get_config(cfg)
+            profiles[name] = profile_from_cost_model(
+                cfg, context=context, kind=kind,
+                chips=(chips or {}).get(name),
+                batch_sizes=batch_sizes,
+                validation=(validation or {}).get(name))
+            profiles[name].name = name
+        super().__init__(profiles)
+        self.context = context
+        self.kind = kind
+
+
+# ---------------------------------------------------------------------------
+# Unified profile production
+# ---------------------------------------------------------------------------
+
+def profile_backend(backend: ExecutionBackend,
+                    model: Optional[str] = None,
+                    batch_sizes: Optional[Sequence[int]] = None,
+                    **kw) -> Union[ModelProfile, ProfileSet]:
+    """THE entry point for ModelProfile production (paper App. C.1).
+
+    One model name returns its ``ModelProfile``; with ``model=None`` every
+    model the backend serves is profiled into a ``ProfileSet``. The planner
+    consumes identical artifacts whether the source is a wall-clock engine
+    measurement, the analytic roofline, or an existing profile — and the
+    profile is produced by the same backend object the executor will run,
+    so planner inputs cannot drift from served physics.
+    """
+    if model is not None:
+        return backend.profile(model, batch_sizes=batch_sizes, **kw)
+    return {m: backend.profile(m, batch_sizes=batch_sizes, **kw)
+            for m in backend.models()}

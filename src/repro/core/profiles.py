@@ -34,7 +34,20 @@ class ValidationRecord:
     def __post_init__(self):
         self.certs = np.asarray(self.certs, np.float64)
         self.correct = np.asarray(self.correct, bool)
-        assert self.certs.shape == self.correct.shape
+        if self.preds is not None:
+            self.preds = np.asarray(self.preds)
+        # explicit ValueError, not assert: validation must survive python -O
+        if self.certs.shape != self.correct.shape:
+            raise ValueError(
+                f"certs/correct shape mismatch: {self.certs.shape} vs "
+                f"{self.correct.shape}")
+        if self.certs.size == 0:
+            raise ValueError("a validation record needs >= 1 sample")
+        if self.preds is not None and \
+                self.preds.shape[:1] != self.certs.shape[:1]:
+            raise ValueError(
+                f"preds length {self.preds.shape} does not match "
+                f"{self.certs.shape} validation samples")
 
 
 @dataclass
@@ -51,6 +64,20 @@ class ModelProfile:
     def __post_init__(self):
         self.batch_sizes = np.asarray(self.batch_sizes, np.float64)
         self.batch_runtimes = np.asarray(self.batch_runtimes, np.float64)
+        # explicit ValueError, not assert: validation must survive python -O
+        if self.batch_sizes.shape != self.batch_runtimes.shape:
+            raise ValueError(
+                f"{self.name}: batch_sizes/batch_runtimes shape mismatch: "
+                f"{self.batch_sizes.shape} vs {self.batch_runtimes.shape}")
+        if self.batch_sizes.size == 0:
+            raise ValueError(f"{self.name}: needs >= 1 profiled batch size")
+        if np.any(self.batch_sizes <= 0):
+            raise ValueError(f"{self.name}: batch sizes must be positive")
+        if np.any(~np.isfinite(self.batch_runtimes)) or \
+                np.any(self.batch_runtimes < 0):
+            raise ValueError(
+                f"{self.name}: batch runtimes must be finite and "
+                f">= 0, got {self.batch_runtimes.tolist()}")
         order = np.argsort(self.batch_sizes)
         self.batch_sizes = self.batch_sizes[order]
         self.batch_runtimes = self.batch_runtimes[order]

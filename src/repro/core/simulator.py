@@ -4,17 +4,20 @@ Mirrors the online system exactly: requests arrive, the producer measures
 QPS each interval and switches gears (with the α-hysteresis of §5), samples
 queue at the first model's replicas, the consumer triggers a batch when a
 replica's queue reaches the gear's min-queue-length (or a head-of-line
-timeout fires), the device is blocked for the profiled batch runtime, and
-non-certain samples cascade to the next model at batch completion. Per-sample
-certainty/correctness replays the recorded validation behaviour
-(``ModelProfile.validation``), cycling through the validation set.
+timeout fires), the device is blocked for the batch runtime, and non-certain
+samples cascade to the next model at batch completion.
 
 Every serving *decision* — routing, gear selection, batch trigger, cascade
 continuation — is delegated to the shared ``repro.core.scheduling
-.SchedulerCore``; this module is only the discrete-event *driver* (state,
-time, the event heap). The threaded ``repro.serving.runtime.CascadeServer``
-drives the very same core, so simulator and real system cannot drift
-(DESIGN.md §2; parity is asserted by ``tests/test_scheduling_parity.py``).
+.SchedulerCore``; model *execution* — per-sample predictions/certainty/
+correctness and per-batch runtimes — is obtained exclusively through an
+``repro.core.execution.ExecutionBackend``. This module is only the
+discrete-event *driver* (state, time, the event heap). The default backend
+is ``ReplayBackend`` (validation-record replay, App. C physics); an
+``EngineBackend`` instead runs REAL jitted models under the virtual clock.
+The threaded ``repro.serving.runtime.CascadeServer`` drives the very same
+core and backend layer, so simulator and real system cannot drift
+(DESIGN.md §2/§9; parity is asserted by ``tests/test_scheduling_parity.py``).
 
 Also executes *ensemble* gears (all members vote; used by the Cocktail+
 baseline) through the same machinery.
@@ -33,6 +36,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.cascade import Cascade
+from repro.core.execution import ExecutionBackend, ReplayBackend
 from repro.core.gears import Gear, GearPlan, uniform_load_fractions
 from repro.core.lp import Replica
 from repro.core.profiles import ProfileSet
@@ -70,9 +74,15 @@ class SimResult:
     per_model_samples: Dict[str, int] = field(default_factory=dict)
     # plan hot-swaps applied during the run: (time, epoch, reason)
     plan_swaps: List[Tuple[float, int, str]] = field(default_factory=list)
+    # False when the backend could not report correctness for some batch
+    # (e.g. an EngineBackend without a label pool): latency metrics are
+    # valid, accuracy is UNKNOWN (nan), not zero
+    correctness_known: bool = True
 
     @property
     def accuracy(self) -> float:
+        if not self.correctness_known:
+            return math.nan
         return float(self.correct.mean()) if self.completed else 0.0
 
     def latency_quantile(self, q: float = 0.95) -> float:
@@ -168,13 +178,21 @@ DeviceEvent = Tuple[float, int, str, float]
 
 
 class ServingSimulator:
+    """Backend-agnostic discrete-event driver.
+
+    ``backend`` supplies all execution physics (default: ``ReplayBackend``
+    over ``profiles`` — the App. C validation replay). ``profiles`` remains
+    the planner-facing artifact set and the default backend source.
+    """
+
     def __init__(self, profiles: ProfileSet, replicas: Sequence[Replica],
-                 num_devices: int, cfg: SimConfig = SimConfig()):
+                 num_devices: int, cfg: SimConfig = SimConfig(),
+                 backend: Optional[ExecutionBackend] = None):
         self.profiles = profiles
         self.replicas = list(replicas)
         self.num_devices = num_devices
         self.cfg = cfg
-        self._val_n = len(next(iter(profiles.values())).validation.certs)
+        self.backend = backend or ReplayBackend(profiles)
 
     # ------------------------------------------------------------------ API
     def run_fixed(self, gear: Gear, qps: float, horizon: float = 2.0,
@@ -229,7 +247,7 @@ class ServingSimulator:
              decision_trace: Optional[DecisionTrace] = None,
              lifecycle=None) -> SimResult:
         cfg = self.cfg
-        profiles = self.profiles
+        backend = self.backend
         replicas = self.replicas
         n_arr = len(arrivals)
         core = SchedulerCore(replicas, cfg, selector=selector,
@@ -252,14 +270,9 @@ class ServingSimulator:
         # duplicate-suppression for hedged/re-issued work: a sample is only
         # processed at its current stage
         cur_stage = [0] * n_arr
-        val_n = self._val_n
         votes = {}   # ensemble mode: sid -> [n_remaining, n_correct, n_members]
-        # per-model validation replay as scalar lists + per-batch-size
-        # runtime memo (same values, no repeated np.interp on the hot path)
-        certs_of = {m: p.validation.certs.tolist()
-                    for m, p in profiles.items()}
-        corr_of = {m: p.validation.correct.tolist()
-                   for m, p in profiles.items()}
+        # per-batch-size runtime memo (same values as the backend returns;
+        # avoids repeated interpolation on the hot path)
         rt_memo: Dict[Tuple[str, int], float] = {}
         ens_memo: Dict[int, Tuple[Gear, bool]] = {}
 
@@ -279,6 +292,7 @@ class ServingSimulator:
         dev_epoch = np.zeros(self.num_devices, np.int64)
         gears = list(gears)
         cur_gear = 0
+        correctness_known = True
         switches: List[Tuple[float, int]] = []
         plan_swaps: List[Tuple[float, int, str]] = []
         per_model_batches: Dict[str, int] = {}
@@ -327,7 +341,8 @@ class ServingSimulator:
                 decision_trace.record_fire(ridx, sids)
             rt = rt_memo.get((r.model, bsz))
             if rt is None:
-                rt = profiles[r.model].runtime(bsz) + cfg.dispatch_overhead
+                rt = backend.batch_runtime(r.model, bsz) \
+                    + cfg.dispatch_overhead
                 rt_memo[(r.model, bsz)] = rt
             rt_actual = rt * dev_speed[r.device]
             dev_idle[r.device] = False
@@ -351,27 +366,34 @@ class ServingSimulator:
 
         def on_complete(ridx: int, sids, stages, t: float):
             r = replicas[ridx]
-            certs = certs_of[r.model]
-            corr = corr_of[r.model]
-            for sid, stage in zip(sids, stages):
+            # the ONLY execution call: whatever backend is plugged in
+            # (validation replay, real jitted models, analytic roofline)
+            # supplies per-sample certainty/correctness through one shape
+            ex = backend.execute(r.model, sids)
+            certs = ex.certs
+            corr = ex.correct
+            if corr is None:
+                nonlocal correctness_known
+                correctness_known = False
+                corr = [False] * len(sids)
+            for k, (sid, stage) in enumerate(zip(sids, stages)):
                 if cur_stage[sid] != stage:
                     continue  # hedged duplicate / stale work
                 g = gear_of[sid]
-                vi = sid % val_n
                 if gear_is_ensemble(g):
                     st = votes[sid]
                     st[0] -= 1
-                    st[1] += int(corr[vi])
+                    st[1] += int(corr[k])
                     if st[0] == 0:
                         finish_sample(sid, stage, t,
                                       majority_vote(st[1], st[2]))
                     continue
-                hop = core.next_hop(stage, certs[vi], g)
+                hop = core.next_hop(stage, certs[k], g)
                 if isinstance(hop, CascadeHop):
                     cur_stage[sid] = hop.next_stage
                     enqueue(sid, hop.next_stage, hop.next_model, t, g)
                 else:
-                    finish_sample(sid, stage, t, corr[vi])
+                    finish_sample(sid, stage, t, corr[k])
             if dev_alive[r.device]:
                 dev_idle[r.device] = True
                 for rj in reps_on_dev.get(r.device, []):
@@ -544,7 +566,8 @@ class ServingSimulator:
             gear_switches=switches,
             per_model_batches=per_model_batches,
             per_model_samples=per_model_samples,
-            plan_swaps=plan_swaps)
+            plan_swaps=plan_swaps,
+            correctness_known=correctness_known)
 
 
 def trace_to_arrivals(qps_per_sec: np.ndarray) -> np.ndarray:

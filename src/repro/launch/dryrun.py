@@ -163,6 +163,25 @@ def fmt_row(row: Dict) -> str:
             f"compile={row['compile_seconds']:.0f}s")
 
 
+def emit_serve_profiles(archs, context: int, out_path: str) -> None:
+    """Write the analytic-roofline serve ModelProfiles for ``archs`` via the
+    unified execution-backend entry point (``profile_backend`` over a
+    ``CostModelBackend``) — the same artifacts the gear planner consumes, so
+    dry-run cost extraction and serving planning cannot diverge."""
+    from repro.core.execution import CostModelBackend, profile_backend
+    backend = CostModelBackend({a: a for a in archs}, context=context,
+                               kind="decode")
+    profiles = profile_backend(backend)
+    rows = {name: p.to_dict() for name, p in profiles.items()}
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=1)
+    for name, p in profiles.items():
+        print(f"{name:26s} slice={p.devices_per_replica:3d} "
+              f"rt(1)={p.runtime(1) * 1e3:8.2f}ms "
+              f"rt(128)={p.runtime(128) * 1e3:8.2f}ms")
+    print(f"serve profiles written to {out_path}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
@@ -177,7 +196,17 @@ def main() -> None:
     ap.add_argument("--flash-decode", action="store_true",
                     help="sharded flash-decoding for decode cells "
                          "(EXPERIMENTS.md §Perf H2)")
+    ap.add_argument("--serve-profiles-out", default="",
+                    help="emit analytic serve ModelProfiles (CostModel"
+                         "Backend) for the selected archs and exit")
+    ap.add_argument("--serve-context", type=int, default=2048)
     args = ap.parse_args()
+
+    if args.serve_profiles_out:
+        archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+        emit_serve_profiles(archs, args.serve_context,
+                            args.serve_profiles_out)
+        return
 
     archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
     shapes = list(SHAPES) if (args.all or args.shape is None) \

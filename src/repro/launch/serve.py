@@ -1,12 +1,16 @@
 """Serving driver: plan a gear plan offline, then serve online.
 
-Two workloads:
-* ``--workload tiny``  — the REAL path: the trained tiny-classifier family,
-  wall-clock profiled engines, the threaded producer/consumer runtime.
+Two workloads, three execution backends (DESIGN.md §9):
+* ``--workload tiny``  — the REAL path: the trained tiny-classifier family
+  behind an ``EngineBackend`` (profiles measured through the same backend
+  via ``profile_backend``), the threaded producer/consumer runtime.
 * ``--workload qwen``  — the assigned-architecture family (qwen2-0.5b ->
-  qwen3-32b, per DESIGN.md §6) with analytic v5e profiles + synthetic
-  validation behaviour, served on the discrete-event simulator (this
-  container has no TPU to run the real big models).
+  qwen3-32b, per DESIGN.md §6) behind a ``CostModelBackend`` (analytic
+  TPU-v5e roofline + synthetic validation behaviour), served on the
+  discrete-event simulator (this container has no TPU for the big models).
+* ``--stress-replay``  — the threaded WALL-CLOCK runtime over a
+  ``ReplayBackend``: no model compute, so the scheduler/queue machinery can
+  be stressed at QPS far beyond what real inference allows.
 
 ``python -m repro.launch.serve --workload tiny --slo latency:0.2``
 """
@@ -17,8 +21,9 @@ import os
 
 import numpy as np
 
-from repro.core import (HardwareSpec, SLO, ServingSimulator,
-                        optimize_gear_plan)
+from repro.core import (CostModelBackend, EngineBackend, HardwareSpec,
+                        ReplayBackend, SLO, ServingSimulator,
+                        optimize_gear_plan, profile_backend)
 from repro.core.profiles import ProfileSet
 from repro.core.traces import azure_like_trace, diurnal_like_trace
 
@@ -30,41 +35,32 @@ def parse_slo(text: str) -> SLO:
     return SLO(kind="accuracy", min_accuracy=float(value))
 
 
+def tiny_backend(artifact: str) -> EngineBackend:
+    """EngineBackend over the trained tiny family (token/label pools
+    attached so any driver can execute from sample ids alone; profiles
+    measured via the unified entry point in ``make_engine_backend``)."""
+    from repro.serving.tinymodels import make_engine_backend, \
+        train_tiny_family
+    return make_engine_backend(*train_tiny_family(cache_path=artifact))
+
+
 def tiny_profiles(artifact: str) -> ProfileSet:
-    import jax
-    from repro.serving.engine import InferenceEngine, profile_engine
-    from repro.serving.tinymodels import (TINY_FAMILY, apply_tiny,
-                                          train_tiny_family,
-                                          validation_record_from_scores)
-    params_by, scores_by, tok_va, lab_va = train_tiny_family(
-        cache_path=artifact)
-    profiles: ProfileSet = {}
-    for cfg in TINY_FAMILY:
-        rec = validation_record_from_scores(scores_by[cfg.name], lab_va)
-        eng = InferenceEngine(cfg.name,
-                              lambda p, t, c=cfg: apply_tiny(c, p, t),
-                              params_by[cfg.name])
-        profiles[cfg.name] = profile_engine(
-            eng, seq_len=32, batch_sizes=(1, 4, 16, 64), repeats=3,
-            validation=rec)
-    return profiles
+    return tiny_backend(artifact).profiles
+
+
+def qwen_backend() -> CostModelBackend:
+    """CostModelBackend for the assigned big architectures: accuracy/
+    certainty structure synthesised, latency/memory analytic (v5e)."""
+    from repro.core.profiles import synthetic_family
+    names = ["qwen2-0.5b", "internvl2-1b", "qwen2-moe-a2.7b", "qwen3-32b"]
+    synth = synthetic_family(names, base_acc=0.55, acc_gain=0.05, seed=11)
+    return CostModelBackend(
+        {n: n for n in names}, context=2048, kind="decode",
+        validation={n: synth[n].validation for n in names})
 
 
 def qwen_profiles() -> ProfileSet:
-    from repro.configs import get_config
-    from repro.core.profiles import synthetic_family
-    from repro.profiling.cost_model import (min_slice_chips,
-                                            profile_from_cost_model)
-    # accuracy/certainty structure synthesised; latency/memory analytic
-    names = ["qwen2-0.5b", "internvl2-1b", "qwen2-moe-a2.7b", "qwen3-32b"]
-    synth = synthetic_family(names, base_acc=0.55, acc_gain=0.05, seed=11)
-    out: ProfileSet = {}
-    for n in names:
-        cfg = get_config(n)
-        prof = profile_from_cost_model(cfg, context=2048, kind="decode",
-                                       validation=synth[n].validation)
-        out[n] = prof
-    return out
+    return profile_backend(qwen_backend())
 
 
 def main() -> None:
@@ -81,16 +77,21 @@ def main() -> None:
     ap.add_argument("--trace-seconds", type=int, default=60)
     ap.add_argument("--real", action="store_true",
                     help="tiny workload: threaded runtime, wall clock")
+    ap.add_argument("--stress-replay", action="store_true",
+                    help="threaded wall-clock runtime over a ReplayBackend "
+                         "(no model compute: pure scheduler/queue stress)")
     ap.add_argument("--artifact",
                     default="benchmarks/artifacts/tiny_family.npz")
     ap.add_argument("--plan-out", default="")
     args = ap.parse_args()
 
     if args.workload == "tiny":
-        profiles = tiny_profiles(args.artifact)
+        backend = tiny_backend(args.artifact)
+        profiles = backend.profiles
         qps_max = args.qps_max or 2000.0
     else:
-        profiles = qwen_profiles()
+        backend = qwen_backend()
+        profiles = backend.profiles
         qps_max = args.qps_max or 60.0
 
     for name, p in profiles.items():
@@ -121,23 +122,31 @@ def main() -> None:
         else azure_like_trace
     trace = trace_fn(seconds=args.trace_seconds, peak_qps=qps_max)
 
-    if args.real and args.workload == "tiny":
-        import jax
-        from repro.serving.engine import InferenceEngine
+    if args.stress_replay:
+        # real threaded machinery, replayed physics: sleeps for the
+        # profiled batch runtime instead of running model compute, so the
+        # producer/consumer/queue path is exercised at arbitrary QPS
         from repro.serving.runtime import CascadeServer, Request
-        from repro.serving.tinymodels import (TINY_FAMILY, apply_tiny,
-                                              train_tiny_family,
-                                              synthetic_classification_data)
-        params_by, _, _, _ = train_tiny_family(cache_path=args.artifact)
-        engines = {c.name: InferenceEngine(
-            c.name, lambda p, t, cc=c: apply_tiny(cc, p, t),
-            params_by[c.name]) for c in TINY_FAMILY}
-        for e in engines.values():
+        replay = ReplayBackend(profiles, sleep=True)
+        n_req = int(trace.sum()) + 8
+        reqs = [Request(rid=i, tokens=np.zeros(1, np.int32))
+                for i in range(n_req)]
+        server = CascadeServer(plan, backend=replay)
+        done = server.run_trace(reqs, trace)
+        lats = np.array([r.latency for r in done])
+        print(f"\nREPLAY stress (wall clock): {len(done)}/{n_req} done "
+              f"p50={np.quantile(lats, .5) * 1e3:.1f}ms "
+              f"p95={np.quantile(lats, .95) * 1e3:.1f}ms "
+              f"switches={len(server.gear_switches)}")
+    elif args.real and args.workload == "tiny":
+        from repro.serving.runtime import CascadeServer, Request
+        from repro.serving.tinymodels import synthetic_classification_data
+        for e in backend.engines.values():
             e.warmup(32)
         n_req = int(trace.sum()) + 8
         toks, labels, _ = synthetic_classification_data(n_req, seed=7)
         reqs = [Request(rid=i, tokens=toks[i]) for i in range(n_req)]
-        server = CascadeServer(plan, engines)
+        server = CascadeServer(plan, backend=backend)
         done = server.run_trace(reqs, trace)
         lats = np.array([r.latency for r in done])
         acc = np.mean([int(r.pred == labels[r.rid]) for r in done])
@@ -146,9 +155,16 @@ def main() -> None:
               f"p95={np.quantile(lats, .95) * 1e3:.1f}ms acc={acc:.4f} "
               f"switches={len(server.gear_switches)}")
     else:
-        sim = ServingSimulator(profiles, plan.replicas, hw.num_devices)
+        # replay physics for the DES: the cost-model backend already IS a
+        # replay backend over its analytic profiles; engine-measured
+        # profiles are wrapped
+        sim_backend = backend if isinstance(backend, ReplayBackend) \
+            else ReplayBackend(profiles)
+        sim = ServingSimulator(profiles, plan.replicas, hw.num_devices,
+                               backend=sim_backend)
         res = sim.run_trace(plan, trace)
-        print(f"\nsimulated: {res.completed}/{res.offered} done "
+        print(f"\nsimulated ({sim.backend.name} backend): "
+              f"{res.completed}/{res.offered} done "
               f"p95={res.p95 * 1e3:.0f}ms acc={res.accuracy:.4f} "
               f"util={res.utilization:.2f} "
               f"switches={len(res.gear_switches)}")

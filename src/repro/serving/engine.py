@@ -4,17 +4,18 @@ XLA wants static shapes, so the engine pre-compiles one executable per
 power-of-two batch bucket and pads incoming batches up to the bucket
 (DESIGN.md §3.2 — the TPU adaptation of the paper's dynamic batching).
 ``profile_engine`` measures wall-clock batch runtimes — the ModelProfile the
-gear planner and simulator consume for real models.
+gear planner and simulator consume for real models; it is a thin wrapper
+over the unified ``repro.core.execution`` profile entry point.
 """
 from __future__ import annotations
 
-import time
-from typing import Callable, Dict, Optional, Sequence, Tuple
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.execution import EngineBackend, profile_backend
 from repro.core.profiles import ModelProfile, ValidationRecord
 
 
@@ -61,23 +62,11 @@ def profile_engine(engine: InferenceEngine, seq_len: int,
                    repeats: int = 5, mem_bytes: Optional[float] = None,
                    validation: Optional[ValidationRecord] = None
                    ) -> ModelProfile:
-    """Measure wall-clock batch runtimes (median of ``repeats``)."""
-    engine.warmup(seq_len)
-    rts = []
-    for b in batch_sizes:
-        tok = np.zeros((b, seq_len), np.int32)
-        times = []
-        for _ in range(repeats):
-            t0 = time.perf_counter()
-            engine.infer(tok)
-            times.append(time.perf_counter() - t0)
-        rts.append(float(np.median(times)))
-    if mem_bytes is None:
-        mem_bytes = sum(np.prod(l.shape) * 4
-                        for l in jax.tree.leaves(engine.params))
-    return ModelProfile(
-        name=engine.name, mem_bytes=float(mem_bytes),
-        batch_sizes=np.asarray(batch_sizes, np.float64),
-        batch_runtimes=np.asarray(rts),
-        validation=validation or ValidationRecord(
-            certs=np.zeros(1), correct=np.ones(1, bool)))
+    """Measure wall-clock batch runtimes (median of ``repeats``).
+
+    Thin wrapper over ``profile_backend(EngineBackend(...))`` — the single
+    measurement implementation — kept for call-site convenience."""
+    backend = EngineBackend({engine.name: engine})
+    return profile_backend(backend, engine.name, batch_sizes=batch_sizes,
+                           seq_len=seq_len, repeats=repeats,
+                           mem_bytes=mem_bytes, validation=validation)

@@ -11,11 +11,15 @@ Every serving *decision* — routing, gear selection, batch trigger, cascade
 continuation — is delegated to the shared ``repro.core.scheduling
 .SchedulerCore``, the same object the discrete-event simulator drives, so
 the gear planner's simulator cannot drift from the served system (DESIGN.md
-§2). This module owns only threads, queues and the wall clock. The decision
-path is factored into step methods (``submit`` / ``_poll_replica`` /
-``_run_batch`` / ``_gear_step``) that the threaded loops call with wall
-time and ``run_virtual`` calls with simulated time — the latter makes the
-runtime's decisions deterministic and directly comparable to the simulator
+§2). Model *execution* goes through an ``repro.core.execution
+.ExecutionBackend`` (default: ``EngineBackend`` over the given jitted
+engines; a ``ReplayBackend`` instead serves recorded validation behaviour —
+compute-free high-QPS stress runs on the real threaded machinery). This
+module owns only threads, queues and the wall clock. The decision path is
+factored into step methods (``submit`` / ``_poll_replica`` / ``_run_batch``
+/ ``_gear_step``) that the threaded loops call with wall time and
+``run_virtual`` calls with simulated time — the latter makes the runtime's
+decisions deterministic and directly comparable to the simulator
 (tests/test_scheduling_parity.py).
 
 In the paper each box is a Ray actor; here they are threads in one process
@@ -34,7 +38,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.certainty import CERTAINTY_ESTIMATORS
+from repro.core.execution import EngineBackend, ExecutionBackend
 from repro.core.gears import Gear, GearPlan
 from repro.core.scheduling import (CascadeHop, DecisionTrace, GearSelector,
                                    RoutePool, SchedulerConfig, SchedulerCore,
@@ -86,31 +90,38 @@ class _ReplicaQueue:
 
 
 class CascadeServer:
-    """Gear-plan-driven online server over real InferenceEngines.
+    """Gear-plan-driven online server, backend-agnostic.
 
-    ``selector`` overrides the default §5 plan policy (plan target composed
-    with α-hysteresis) — this is how the baseline policies of
-    ``repro.serving.baselines`` execute on the real runtime, via the same
-    ``GearSelector`` protocol the simulator uses.
+    ``backend`` supplies the execution physics; by default the given
+    ``engines`` (real jitted models) are wrapped in an ``EngineBackend``
+    with the chosen certainty ``estimator``. ``selector`` overrides the
+    default §5 plan policy (plan target composed with α-hysteresis) — this
+    is how the baseline policies of ``repro.serving.baselines`` execute on
+    the real runtime, via the same ``GearSelector`` protocol the simulator
+    uses.
     """
 
-    def __init__(self, plan: GearPlan, engines: Dict[str, InferenceEngine],
+    def __init__(self, plan: GearPlan,
+                 engines: Optional[Dict[str, InferenceEngine]] = None,
                  estimator="top2_gap", alpha: float = 8.0,
                  measure_interval: float = 0.1, max_wait: float = 0.05,
                  max_batch: int = 128,
                  selector: Optional[GearSelector] = None,
                  route_pool: Optional[RoutePool] = None,
                  decision_trace: Optional[DecisionTrace] = None,
-                 seed: int = 0, lifecycle=None):
+                 seed: int = 0, lifecycle=None,
+                 backend: Optional[ExecutionBackend] = None):
         # (active plan, current gear index, plan epoch) as ONE tuple: a
         # hot-swap (or a gear switch) replaces the reference in a single
         # assignment, so a concurrent submit/_poll_replica thread always
         # reads a consistent triple — never the new plan with a stale gear
         # index, nor an epoch tag contradicting the admitting gear
         self._active: Tuple[GearPlan, int, int] = (plan, 0, 0)
-        self.engines = engines
-        self.est = estimator if callable(estimator) \
-            else CERTAINTY_ESTIMATORS[estimator]
+        # all execution physics (inference, certainty estimation, runtime
+        # prediction) live behind the backend — estimator resolution
+        # included (repro.core.execution.resolve_estimator)
+        self.backend = backend if backend is not None \
+            else EngineBackend(engines or {}, estimator=estimator)
         self.cfg = SchedulerConfig(
             max_wait=max_wait, measure_interval=measure_interval,
             alpha=alpha, max_batch=max_batch, seed=seed)
@@ -221,15 +232,17 @@ class CascadeServer:
                    now: Optional[float] = None,
                    on_enqueue: Optional[Callable[[int, float], None]] = None
                    ) -> None:
-        """Infer one batch, then resolve or cascade each sample per the
-        core's continuation decision. ``on_enqueue(ridx, t)`` is notified of
-        each cascade push (run_virtual uses it to schedule polls; the
-        threaded consumers poll continuously and pass nothing)."""
+        """Execute one batch through the backend, then resolve or cascade
+        each sample per the core's continuation decision. ``on_enqueue(ridx,
+        t)`` is notified of each cascade push (run_virtual uses it to
+        schedule polls; the threaded consumers poll continuously and pass
+        nothing)."""
         reqs = [r for r, _ in batch]
-        tokens = np.stack([r.tokens for r in reqs])
-        scores = self.engines[model].infer(tokens)
-        certs = np.asarray(self.est(scores), np.float64)
-        preds = scores.argmax(-1)
+        # the ONLY execution call: jitted engines, validation replay, or
+        # any other backend — the driver never special-cases the source
+        ex = self.backend.execute(model, [r.rid for r in reqs],
+                                  tokens=[r.tokens for r in reqs])
+        certs, preds = ex.certs, ex.preds
         t = time.monotonic() if now is None else now
         for i, req in enumerate(reqs):
             # the ADMITTING gear, not the active plan's: in-flight work is
@@ -247,7 +260,7 @@ class CascadeServer:
                     on_enqueue(ridx, t)
             else:
                 req.t_done = t
-                req.pred = int(preds[i])
+                req.pred = int(preds[i]) if preds is not None else -1
                 req.cert = float(certs[i])
                 req.resolver = hop.stage
                 with self._done_lock:
@@ -320,7 +333,8 @@ class CascadeServer:
     # ------------------------------------------------- virtual-time driver
     def run_virtual(self, requests: Sequence[Request],
                     qps_per_sec: np.ndarray,
-                    batch_runtime: Callable[[str, int], float],
+                    batch_runtime: Optional[Callable[[str, int], float]]
+                    = None,
                     drain: float = 2.0) -> List[Request]:
         """Deterministic open-loop replay in VIRTUAL time: no threads, no
         wall clock, no sleeps.
@@ -328,15 +342,17 @@ class CascadeServer:
         Exercises the identical decision path as the threaded server —
         ``submit`` → ``_poll_replica`` → ``_run_batch`` → ``_gear_step`` —
         but drives it from a discrete event loop whose service times come
-        from ``batch_runtime(model, batch_size)`` (e.g. a ModelProfile's
-        ``runtime``) instead of the wall clock. Event ordering mirrors the
-        simulator's loop (arrivals win ties over queue events; measurement
-        ticks fire only when strictly earliest), so a ``DecisionTrace``
-        captured here is directly comparable to one from
+        from ``batch_runtime(model, batch_size)`` (default: the backend's
+        own runtime prediction) instead of the wall clock. Event ordering
+        mirrors the simulator's loop (arrivals win ties over queue events;
+        measurement ticks fire only when strictly earliest), so a
+        ``DecisionTrace`` captured here is directly comparable to one from
         ``ServingSimulator.run_trace`` — that equality is the planner's
         fidelity contract (tests/test_scheduling_parity.py).
         """
         from repro.core.simulator import trace_to_arrivals
+        if batch_runtime is None:
+            batch_runtime = self.backend.batch_runtime
         arrivals = trace_to_arrivals(qps_per_sec).tolist()
         n_arr = len(arrivals)
         assert len(requests) >= n_arr

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.certainty import top2_gap
+from repro.core.execution import resolve_estimator
 from repro.core.profiles import ModelProfile, ValidationRecord
 
 
@@ -212,9 +212,39 @@ def load_tiny_family(path: str,
     return params_by, scores_by, tok_va, lab_va
 
 
-def validation_record_from_scores(scores: np.ndarray, labels: np.ndarray
+def make_engine_backend(params_by: Dict, scores_by: Dict,
+                        tok_va: np.ndarray, lab_va: np.ndarray,
+                        family: Tuple[TinyClassifierConfig, ...]
+                        = TINY_FAMILY,
+                        batch_sizes: Tuple[int, ...] = (1, 4, 16, 64),
+                        seq_len: int = 32, repeats: int = 3):
+    """EngineBackend over a trained tiny family with measured profiles
+    attached via the unified ``profile_backend`` entry point — the ONE
+    assembly of engines + token/label pools + profiles, shared by
+    ``launch/serve.py`` and the benchmarks (the argument order matches
+    ``train_tiny_family``/``load_tiny_family`` returns, so
+    ``make_engine_backend(*train_tiny_family(...))`` works)."""
+    from repro.core.execution import EngineBackend, profile_backend
+    from repro.serving.engine import InferenceEngine
+    engines = {cfg.name: InferenceEngine(
+        cfg.name, lambda p, t, c=cfg: apply_tiny(c, p, t),
+        params_by[cfg.name]) for cfg in family}
+    backend = EngineBackend(engines, tokens=tok_va, labels=lab_va)
+    backend.profiles = {
+        cfg.name: profile_backend(
+            backend, cfg.name, batch_sizes=batch_sizes, seq_len=seq_len,
+            repeats=repeats,
+            validation=validation_record_from_scores(
+                scores_by[cfg.name], lab_va))
+        for cfg in family}
+    return backend
+
+
+def validation_record_from_scores(scores: np.ndarray, labels: np.ndarray,
+                                  estimator: str = "top2_gap"
                                   ) -> ValidationRecord:
-    certs = np.asarray(top2_gap(jnp.asarray(scores)))
+    est = resolve_estimator(estimator)
+    certs = np.asarray(est(jnp.asarray(scores)))
     correct = scores.argmax(-1) == labels
     return ValidationRecord(certs=certs, correct=correct,
                             preds=scores.argmax(-1))
