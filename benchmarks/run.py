@@ -20,6 +20,7 @@ BENCHES = [
     "bench_degradation",         # Figs. 8/9
     "bench_planner_quality",     # Fig. 10
     "bench_planner_cost",        # Fig. 11
+    "bench_planner",             # fast-path planner: cold/warm plan timing
     "bench_ablation",            # Fig. 12
     "bench_simulator_fidelity",  # Fig. 13 (REAL tiny models)
     "bench_fidelity",            # Fig. 13 via the ExecutionBackend layer
@@ -38,8 +39,14 @@ def main() -> None:
     t0 = time.time()
     failed = []
     for name in BENCHES:
-        if args.only and args.only not in name:
-            continue
+        if args.only:
+            # an exact bench name selects just that bench; anything else
+            # is a substring filter (bench_planner vs bench_planner_cost)
+            if args.only in BENCHES:
+                if name != args.only:
+                    continue
+            elif args.only not in name:
+                continue
         print(f"\n=== {name} ===", flush=True)
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])

@@ -15,6 +15,8 @@ from repro.core.execution import (BatchExecution, CostModelBackend,
                                   EngineBackend, ExecutionBackend,
                                   ReplayBackend, profile_backend,
                                   resolve_estimator)
+from repro.core.fastsim import (FastEval, FastEvaluator, SimMemo,
+                                SimOutcome, trigger_ladder)
 from repro.core.gears import Gear, GearPlan, PlanProvenance, SLO
 from repro.core.lp import Replica, min_utilization, min_utilization_lp
 from repro.core.plan_state import (HardwareSpec, InfeasiblePlanError,
@@ -46,4 +48,6 @@ __all__ = [
     # execution backends (core/execution.py)
     "BatchExecution", "ExecutionBackend", "ReplayBackend", "EngineBackend",
     "CostModelBackend", "profile_backend", "resolve_estimator",
+    # fast planner evaluation (core/fastsim.py)
+    "FastEval", "FastEvaluator", "SimMemo", "SimOutcome", "trigger_ladder",
 ]

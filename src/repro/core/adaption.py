@@ -32,6 +32,7 @@ ablation dishonest.
 from __future__ import annotations
 
 import threading
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
@@ -272,6 +273,10 @@ class BackgroundReplanner:
         self.plan_latency = plan_latency
         self.threaded = threaded
         self.failures: List[Tuple[float, str]] = []
+        # wall seconds the most recent plan_fn invocation took (virtual
+        # drivers publish on plan_latency, but the real drift-to-recovery
+        # window is bounded by this — bench_replanning reports it)
+        self.last_plan_wall: Optional[float] = None
         self._pending: Optional[dict] = None
         self._lock = threading.Lock()
 
@@ -302,10 +307,12 @@ class BackgroundReplanner:
         # catch EVERYTHING: a re-plan failure of any kind (infeasible SLO,
         # LP numerics, a buggy plan_fn) must degrade to "keep serving the
         # active plan", never kill the producer tick that polls us
+        t0 = time.time()
         try:
             pend["plan"] = self.plan_fn(pend["trigger"], pend["active"])
         except Exception as e:
             pend["error"] = f"{type(e).__name__}: {e}"
+        self.last_plan_wall = time.time() - t0
 
     def poll(self, t: float) -> Optional[PlanVersion]:
         """Return the newly published plan once, when due; else None."""
@@ -341,7 +348,8 @@ def provenance_for_plan(plan: GearPlan, frozen: bool = False
 def planner_replan_fn(profiles, hardware: HardwareSpec, slo: SLO,
                       n_ranges: int = 8, sim_cfg=None, seed: int = 0,
                       qps_margin: float = 1.25, pin_placement: bool = True,
-                      warm_state=None, max_calls: int = 200) -> PlanFn:
+                      warm_state=None, max_calls: int = 200,
+                      fast_path: bool = True) -> PlanFn:
     """The production ``plan_fn``: re-run Algorithm 1 warm-started from the
     previous ``PlannerState``, with the measured QPS window as the prior
     (App. C.2) and — for load beyond the planned range — an extended
@@ -376,7 +384,7 @@ def planner_replan_fn(profiles, hardware: HardwareSpec, slo: SLO,
             max_calls=max_calls,
             pinned_replicas=list(active.plan.replicas)
             if pin_placement else None,
-            warm_state=chain["warm"])
+            warm_state=chain["warm"], fast_path=fast_path)
         chain["warm"] = report.state    # next re-plan warm-starts from US
         return report.plan
 

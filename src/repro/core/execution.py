@@ -129,6 +129,10 @@ class ReplayBackend(ExecutionBackend):
 
     name = "replay"
 
+    # list-comp gather beats a numpy fancy-index + tolist() round-trip for
+    # small batches; past this size the vectorized path wins
+    _BATCH_GATHER_MIN = 32
+
     def __init__(self, profiles: ProfileSet, sleep: bool = False):
         if not profiles:
             raise ValueError("ReplayBackend needs at least one profile")
@@ -144,6 +148,16 @@ class ReplayBackend(ExecutionBackend):
         self._preds = {m: (p.validation.preds.tolist()
                            if p.validation.preds is not None else None)
                        for m, p in profiles.items()}
+        # numpy views of the same records for batched (large-batch) gathers
+        self._certs_np = {m: p.validation.certs for m, p in profiles.items()}
+        self._corr_np = {m: p.validation.correct
+                         for m, p in profiles.items()}
+        self._preds_np = {m: p.validation.preds
+                          for m, p in profiles.items()}
+        # per-(model, batch) runtime memo: the interpolation is pure, and
+        # the planner + DES hot paths ask for the same few batch sizes
+        # millions of times
+        self._rt_memo: Dict[Tuple[str, int], float] = {}
 
     @property
     def validation_n(self) -> int:
@@ -153,19 +167,34 @@ class ReplayBackend(ExecutionBackend):
         return list(self.profiles)
 
     def batch_runtime(self, model: str, batch_size: int) -> float:
-        return self.profiles[model].runtime(batch_size)
+        rt = self._rt_memo.get((model, batch_size))
+        if rt is None:
+            rt = self.profiles[model].runtime(batch_size)
+            self._rt_memo[(model, batch_size)] = rt
+        return rt
 
     def execute(self, model: str, sids: Sequence[int],
                 tokens: Optional[Sequence[np.ndarray]] = None
                 ) -> BatchExecution:
-        certs, corr, preds = \
-            self._certs[model], self._corr[model], self._preds[model]
         n = self._val_n
-        vi = [s % n for s in sids]
         elapsed = None
         if self.sleep:
-            elapsed = self.batch_runtime(model, len(vi))
+            elapsed = self.batch_runtime(model, len(sids))
             time.sleep(elapsed)
+        if len(sids) >= self._BATCH_GATHER_MIN:
+            # batched cert/correctness lookups: one fancy-index gather per
+            # batch (same values as the scalar path, elementwise)
+            vi = np.asarray(sids, np.int64) % n
+            preds_np = self._preds_np[model]
+            return BatchExecution(
+                certs=self._certs_np[model][vi].tolist(),
+                preds=preds_np[vi].tolist() if preds_np is not None
+                else None,
+                correct=self._corr_np[model][vi].tolist(),
+                elapsed=elapsed)
+        certs, corr, preds = \
+            self._certs[model], self._corr[model], self._preds[model]
+        vi = [s % n for s in sids]
         return BatchExecution(
             certs=[certs[i] for i in vi],
             preds=[preds[i] for i in vi] if preds is not None else None,

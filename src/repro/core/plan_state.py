@@ -12,6 +12,7 @@ from typing import Dict, List, Optional, Set, Tuple
 import numpy as np
 
 from repro.core.cascade import Cascade, CascadeEval
+from repro.core.fastsim import SimMemo
 from repro.core.gears import SLO
 from repro.core.lp import Replica
 from repro.core.profiles import ProfileSet
@@ -63,6 +64,21 @@ class PlannerState:
     # re-optimise cascades/gears/batching OVER this placement. SP3 skips
     # prune/add and only re-solves the per-range load-balancing LPs.
     pinned_replicas: Optional[List[Replica]] = None
+
+    # Fast evaluation layer (core/fastsim.py, DESIGN.md §10): when enabled
+    # the submodule search runs on the vectorized steady-state evaluator
+    # and the converged plan is certified range-by-range by the exact DES.
+    # ``fast_path=False`` restores the pre-fast-path search verbatim (the
+    # honest baseline arm of benchmarks/bench_planner.py).
+    fast_path: bool = True
+    # exact-DES outcome cache (profile-digest guarded; carried across
+    # warm-started re-plans) and LP/pruning result memos. Keys include the
+    # FULL SimConfig / LP inputs so calibration changes never serve stale
+    # results (tests/test_fastsim.py pins this).
+    sim_memo: SimMemo = field(default_factory=SimMemo)
+    lp_memo: Dict[Tuple, Tuple] = field(default_factory=dict)
+    place_memo: Dict[Tuple, Optional[List[Replica]]] = field(
+        default_factory=dict)
 
     # SP1: candidate cascades (Pareto set) and their validation evals
     cascades: List[Cascade] = field(default_factory=list)

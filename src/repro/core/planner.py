@@ -18,12 +18,14 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.cascade import evaluate_cascade
+from repro.core.fastsim import SimMemo, trim_memo
 from repro.core.gears import Gear, GearPlan, PlanProvenance, SLO
 from repro.core.plan_state import (HardwareSpec, InfeasiblePlanError, OK,
                                    PlanError, PlannerState)
 from repro.core.profiles import ProfileSet, profile_digest
 from repro.core.simulator import SimConfig
 from repro.core.submodules import SUBMODULES
+from repro.core.submodules.batching import certify_ranges
 from repro.core.traces import zipf_prior
 
 
@@ -34,17 +36,34 @@ class PlannerReport:
     submodule_calls: int
     errors_resolved: int
     wall_seconds: float
-    call_log: List[Tuple[str, str]] = field(default_factory=list)
+    # (submodule name, result code, wall seconds) per call, in call order
+    call_log: List[Tuple[str, str, float]] = field(default_factory=list)
     # final planner state, so an online re-plan can warm-start from it
     state: Optional[PlannerState] = None
+    # wall seconds of the final exact-DES certification pass(es) and how
+    # many certification rounds the fast path needed (0 on the legacy path)
+    certify_seconds: float = 0.0
+    certify_rounds: int = 0
+
+    @property
+    def submodule_seconds(self) -> Dict[str, float]:
+        """Per-submodule wall-time breakdown, aggregated from the call log
+        (plus the certification pass) — what `launch/dryrun.py --plan-check`
+        and `launch/serve.py` print so planner perf work stays measurable."""
+        out: Dict[str, float] = {}
+        for name, _code, secs in self.call_log:
+            out[name] = out.get(name, 0.0) + secs
+        if self.certify_seconds:
+            out["certify:DES"] = self.certify_seconds
+        return out
 
 
 def make_state(profiles: ProfileSet, hardware: HardwareSpec, slo: SLO,
                qps_max: float, n_ranges: int = 8,
                qps_prior: Optional[np.ndarray] = None,
                sim_cfg: SimConfig = SimConfig(), seed: int = 0,
-               pinned_replicas=None, warm_state: Optional[PlannerState] = None
-               ) -> PlannerState:
+               pinned_replicas=None, warm_state: Optional[PlannerState] = None,
+               fast_path: bool = True) -> PlannerState:
     prior = qps_prior if qps_prior is not None else zipf_prior(n_ranges)
     if pinned_replicas is not None:
         # immutable serving placement: only models already placed can
@@ -59,7 +78,12 @@ def make_state(profiles: ProfileSet, hardware: HardwareSpec, slo: SLO,
                          qps_prior=np.asarray(prior, np.float64),
                          sim_cfg=sim_cfg, rng_seed=seed,
                          pinned_replicas=list(pinned_replicas)
-                         if pinned_replicas is not None else None)
+                         if pinned_replicas is not None else None,
+                         fast_path=fast_path)
+    if fast_path:
+        # stamp the memo with its profile provenance up front, so a later
+        # warm start can tell whether this run's DES outcomes apply to it
+        state.sim_memo.set_profiles(profiles)
     if warm_state is not None:
         # warm start (online re-plan): reuse SP1's Pareto candidate set —
         # validation evals are workload-independent and throughput
@@ -72,6 +96,21 @@ def make_state(profiles: ProfileSet, hardware: HardwareSpec, slo: SLO,
         state.cascades = [warm_state.cascades[i] for i in keep]
         state.cascade_evals = [warm_state.cascade_evals[i] for i in keep]
         state.cascade_tput = [warm_state.cascade_tput[i] for i in keep]
+        if fast_path:
+            # fast path: adopt the previous run's exact-DES outcomes (the
+            # memo carry is per-model-digest guarded — changed profiles or
+            # calibration never serve stale results). LP memo keys carry
+            # their full input (replica runtimes + demand), so they are
+            # profile-independent; placement memos depend on model memory
+            # footprints and transfer only under identical profiles.
+            state.sim_memo.carry_from(warm_state.sim_memo, profiles)
+            state.lp_memo.update(warm_state.lp_memo)
+            if warm_state.sim_memo.model_digests == \
+                    state.sim_memo.model_digests:
+                state.place_memo.update(warm_state.place_memo)
+            # chained warm states must not leak cache without bound
+            trim_memo(state.lp_memo, SimMemo.MAX_ENTRIES)
+            trim_memo(state.place_memo, SimMemo.MAX_ENTRIES // 8)
     return state
 
 
@@ -80,19 +119,23 @@ def optimize_gear_plan(profiles: ProfileSet, hardware: HardwareSpec,
                        qps_prior: Optional[np.ndarray] = None,
                        sim_cfg: SimConfig = SimConfig(), seed: int = 0,
                        max_calls: int = 200, pinned_replicas=None,
-                       warm_state: Optional[PlannerState] = None
-                       ) -> PlannerReport:
+                       warm_state: Optional[PlannerState] = None,
+                       fast_path: bool = True) -> PlannerReport:
     """Algorithm 1. Raises InfeasiblePlanError when no plan can satisfy the
     SLO on the given hardware.
 
     ``pinned_replicas`` freezes the model placement (online re-planning:
     replicas never move at runtime, DESIGN.md §Plan lifecycle) and
-    ``warm_state`` seeds SP1 with an earlier run's candidate cascades.
+    ``warm_state`` seeds SP1 with an earlier run's candidate cascades (plus,
+    on the fast path, its exact-DES memo). ``fast_path`` switches the inner
+    search onto the vectorized steady-state evaluator with final exact-DES
+    certification (DESIGN.md §10); ``False`` restores the pre-fast-path
+    search verbatim.
     """
     t0 = time.time()
     state = make_state(profiles, hardware, slo, qps_max, n_ranges, qps_prior,
                        sim_cfg, seed, pinned_replicas=pinned_replicas,
-                       warm_state=warm_state)
+                       warm_state=warm_state, fast_path=fast_path)
     modules = SUBMODULES
     names = ["SP1:search_cascades", "SP2:assign_cascades",
              "SP3:place_models", "SP4:tune_batch_sizes"]
@@ -101,9 +144,11 @@ def optimize_gear_plan(profiles: ProfileSet, hardware: HardwareSpec,
     cur = 0
     calls = 0
     errors_resolved = 0
-    call_log: List[Tuple[str, str]] = []
+    call_log: List[Tuple[str, str, float]] = []
     last_signature = None
     ok_streak = 0         # consecutive OK submodule calls
+    certify_rounds = 0
+    certify_seconds = 0.0
 
     while True:
         if cur == -1:
@@ -114,9 +159,10 @@ def optimize_gear_plan(profiles: ProfileSet, hardware: HardwareSpec,
                 f"planner did not converge within {max_calls} submodule "
                 f"calls (last error: {error.code})")
         module = modules[cur]
+        t_call = time.time()
         error, state = module(error, state)
         calls += 1
-        call_log.append((names[cur], error.code))
+        call_log.append((names[cur], error.code, time.time() - t_call))
         if error.is_ok:
             ok_streak += 1
             cur = (cur + 1) % 4
@@ -124,7 +170,23 @@ def optimize_gear_plan(profiles: ProfileSet, hardware: HardwareSpec,
             if ok_streak >= 4 and cur == 0 and state.min_qlens:
                 sig = state.signature()
                 if sig == last_signature:
-                    break
+                    if not state.fast_path:
+                        break
+                    # fast path: the loop ran on steady-state estimates —
+                    # certify the converged plan with the exact DES. A
+                    # failed round leaves its DES facts in the memo and
+                    # resumes the loop at SP4, which now reproduces the
+                    # legacy verdicts from those facts (DESIGN.md §10).
+                    t_cert = time.time()
+                    certified = certify_ranges(state)
+                    certify_seconds += time.time() - t_cert
+                    if certified:
+                        break
+                    certify_rounds += 1
+                    last_signature = None
+                    ok_streak = 0
+                    cur = 3
+                    continue
                 last_signature = sig
         else:
             ok_streak = 0
@@ -136,7 +198,8 @@ def optimize_gear_plan(profiles: ProfileSet, hardware: HardwareSpec,
                          submodule_calls=calls,
                          errors_resolved=errors_resolved,
                          wall_seconds=time.time() - t0, call_log=call_log,
-                         state=state)
+                         state=state, certify_seconds=certify_seconds,
+                         certify_rounds=certify_rounds)
 
 
 def check_qps_distribution(plan_prior: np.ndarray, trace: np.ndarray,

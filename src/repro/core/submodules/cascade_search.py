@@ -19,6 +19,7 @@ import numpy as np
 from repro.core.cascade import (Cascade, CascadeEval,
                                 enumerate_model_orderings, evaluate_cascade)
 from repro.core.certainty import threshold_grid
+from repro.core.fastsim import cascade_throughputs
 from repro.core.pareto import pareto_front
 from repro.core.plan_state import (OK, InfeasiblePlanError, PlanError,
                                    PlannerState)
@@ -87,9 +88,33 @@ def search_cascades(error: PlanError, state: PlannerState
     state._sp1_rounds = round_no + 1  # type: ignore[attr-defined]
 
     candidates = _sample_cascades(state, rng)
-    evals = [evaluate_cascade(c, state.profiles) for c in candidates]
-    tputs = [estimate_throughput(state, e, c)
-             for c, e in zip(candidates, evals)]
+    if state.fast_path:
+        # evaluation is deterministic per cascade: candidates already in
+        # the Pareto set (later sampling rounds and warm-started re-plans
+        # re-draw mostly known ones) reuse their recorded evals, and the
+        # throughput estimate runs as ONE vectorized pass over all new
+        # candidates (bit-identical floats to the per-cascade loop below —
+        # SP2's improvement swaps and the downgrade jumps consume exactly
+        # these estimates)
+        known = {c: (e, t) for c, e, t in
+                 zip(state.cascades, state.cascade_evals,
+                     state.cascade_tput)}
+        fresh = [c for c in candidates if c not in known]
+        fresh_evals = [evaluate_cascade(c, state.profiles) for c in fresh]
+        fresh_tputs = cascade_throughputs(state.profiles,
+                                          state.hardware.num_devices,
+                                          fresh, fresh_evals)
+        new = {c: (e, t) for c, e, t in zip(fresh, fresh_evals,
+                                            fresh_tputs)}
+        evals, tputs = [], []
+        for c in candidates:
+            e, t = known.get(c) or new[c]
+            evals.append(e)
+            tputs.append(t)
+    else:
+        evals = [evaluate_cascade(c, state.profiles) for c in candidates]
+        tputs = [estimate_throughput(state, e, c)
+                 for c, e in zip(candidates, evals)]
 
     items = list(zip(candidates, evals, tputs))
     front = pareto_front(items, cost=lambda it: -it[2],

@@ -35,9 +35,36 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.fastsim import bottleneck_model, model_capacities
 from repro.core.gears import fractions_from_lp
 from repro.core.lp import Replica, min_utilization_lp
 from repro.core.plan_state import OK, PlanError, PlannerState
+
+
+def _lp(state: PlannerState, replicas: List[Replica],
+        qps_per_model: Dict[str, float]
+        ) -> Tuple[Optional[float], Optional[np.ndarray]]:
+    """``min_utilization_lp`` with a planner-state memo (fast path only).
+
+    The EM loop re-solves identical load-balancing LPs on every
+    SP2<->SP3 bounce and every post-convergence cycle; the key carries the
+    FULL LP input (replica set incl. runtimes, demand vector, device
+    count), so a memo hit is exactly the deterministic solver output. The
+    legacy arm solves every LP afresh, as the pre-fast-path planner did.
+    """
+    n_dev = state.hardware.num_devices
+    if not state.fast_path:
+        return min_utilization_lp(replicas, qps_per_model, n_dev)
+    key = (tuple((r.model, r.device, r.runtime_per_sample)
+                 for r in replicas),
+           tuple(sorted(qps_per_model.items())), n_dev)
+    hit = state.lp_memo.get(key)
+    if hit is not None:
+        u, q = hit
+        return u, (None if q is None else np.asarray(q))
+    u, q = min_utilization_lp(replicas, qps_per_model, n_dev)
+    state.lp_memo[key] = (u, None if q is None else tuple(q))
+    return u, q
 
 
 def _qps_per_model(state: PlannerState, r: int) -> Dict[str, float]:
@@ -82,16 +109,33 @@ def _counts(replicas: List[Replica]) -> Dict[str, int]:
     return c
 
 
+def _placement_key(state: PlannerState, kind: str, used: List[str],
+                   wc_qps: Dict[str, float]) -> Tuple:
+    return (kind, tuple(used), tuple(sorted(wc_qps.items())),
+            tuple(sorted(state.min_replicas.items())),
+            state.hardware.num_devices, state.hardware.mem_per_device)
+
+
 def _prune_placement(state: PlannerState, replicas: List[Replica],
                      wc_qps: Dict[str, float]) -> Optional[List[Replica]]:
-    """Greedy Eq.-4 pruning; None on dead-end."""
+    """Greedy Eq.-4 pruning; None on dead-end. Fast path: the whole prune
+    result is memoized per (worst-case demand, min-replica constraints) —
+    the EM loop re-prunes from the identical full-replication start on
+    every SP3 call whose demand did not change."""
     hw = state.hardware
+    key = None
+    if state.fast_path:
+        key = _placement_key(state, "prune",
+                             [r.model for r in replicas], wc_qps)
+        if key in state.place_memo:
+            hit = state.place_memo[key]
+            return None if hit is None else list(hit)
     replicas = list(replicas)
     while True:
         mem = _mem_per_device(state, replicas)
         over = np.maximum(mem - hw.mem_per_device, 0.0)
         if not over.any():
-            return replicas
+            break
         cnt = _counts(replicas)
         best_util, best_idx = -math.inf, -1
         for i, rep in enumerate(replicas):
@@ -102,21 +146,42 @@ def _prune_placement(state: PlannerState, replicas: List[Replica],
             freed = min(over[rep.device],
                         state.profiles[rep.model].mem_bytes)
             cand = replicas[:i] + replicas[i + 1:]
-            u_max, _ = min_utilization_lp(cand, wc_qps, hw.num_devices)
+            u_max, _ = _lp(state, cand, wc_qps)
             if u_max is None:
                 continue  # util = -inf: LP infeasible without it
             util = freed / max(u_max, 1e-6)
             if util > best_util:
                 best_util, best_idx = util, i
         if best_idx < 0:
-            return None
+            replicas = None
+            break
         replicas.pop(best_idx)
+    if key is not None:
+        state.place_memo[key] = None if replicas is None else list(replicas)
+    return replicas
 
 
 def _additive_repair(state: PlannerState, used: List[str],
                      wc_qps: Dict[str, float]) -> Optional[List[Replica]]:
     """FFD seed (one replica per model, honouring min_replicas) + greedy
-    additions that reduce worst-case utilisation."""
+    additions that reduce worst-case utilisation. Memoized like
+    ``_prune_placement`` on the fast path (same determinism argument)."""
+    hw = state.hardware
+    key = None
+    if state.fast_path:
+        key = _placement_key(state, "repair", list(used), wc_qps)
+        if key in state.place_memo:
+            hit = state.place_memo[key]
+            return None if hit is None else list(hit)
+    result = _additive_repair_inner(state, used, wc_qps)
+    if key is not None:
+        state.place_memo[key] = None if result is None else list(result)
+    return result
+
+
+def _additive_repair_inner(state: PlannerState, used: List[str],
+                           wc_qps: Dict[str, float]
+                           ) -> Optional[List[Replica]]:
     hw = state.hardware
     free = np.full(hw.num_devices, hw.mem_per_device)
     replicas: List[Replica] = []
@@ -130,7 +195,7 @@ def _additive_repair(state: PlannerState, used: List[str],
         free[d] -= state.profiles[m].mem_bytes
         replicas.append(_replica_obj(state, m, d))
 
-    u_cur, _ = min_utilization_lp(replicas, wc_qps, hw.num_devices)
+    u_cur, _ = _lp(state, replicas, wc_qps)
     if u_cur is None:
         u_cur = math.inf
     while True:
@@ -143,7 +208,7 @@ def _additive_repair(state: PlannerState, used: List[str],
                 if any(r.model == m and r.device == d for r in replicas):
                     continue
                 cand = replicas + [_replica_obj(state, m, d)]
-                u, _ = min_utilization_lp(cand, wc_qps, hw.num_devices)
+                u, _ = _lp(state, cand, wc_qps)
                 if u is not None and u < u_cur - 1e-4:
                     if best is None or u < best[0]:
                         best = (u, m, d)
@@ -221,8 +286,7 @@ def _balance_ranges(state: PlannerState, replicas: List[Replica]
     """Per-range load balancing over a fixed replica list."""
     load_fracs, utils = [], []
     for r in range(state.n_ranges):
-        u, q = min_utilization_lp(replicas, _qps_per_model(state, r),
-                                  state.hardware.num_devices)
+        u, q = _lp(state, replicas, _qps_per_model(state, r))
         if u is None:
             return PlanError(
                 "throughput", qps_range=r,
@@ -241,13 +305,8 @@ def _balance_ranges(state: PlannerState, replicas: List[Replica]
 
 def _bottleneck_model(state: PlannerState, r: int,
                       replicas: List[Replica]) -> str:
-    """Model whose replica set has the least headroom for this range."""
+    """Model whose replica set has the least headroom for this range
+    (capacity aggregation shared with the fast evaluation layer)."""
     need = _qps_per_model(state, r)
-    worst, worst_m = -math.inf, None
-    for m, q in need.items():
-        reps = [rep for rep in replicas if rep.model == m]
-        cap = sum(1.0 / rep.runtime_per_sample for rep in reps) or 1e-9
-        pressure = q / cap
-        if pressure > worst:
-            worst, worst_m = pressure, m
-    return worst_m or next(iter(need))
+    worst = bottleneck_model(need, model_capacities(replicas))
+    return worst or next(iter(need))

@@ -47,7 +47,14 @@ def _init_assignment(state: PlannerState) -> None:
 
 
 def _satisfy_accuracy_slo(state: PlannerState) -> bool:
-    """Greedy upgrades until weighted accuracy >= SLO. True on success."""
+    """Greedy upgrades until weighted accuracy >= SLO. True on success.
+
+    Fast path: each greedy step scores every (range, candidate) pair in one
+    vectorized pass (same expression ``prior * dacc / dcost`` elementwise,
+    row-major argmax = the legacy scan's first-strict-max tie-break, so the
+    chosen upgrades are identical)."""
+    if state.fast_path:
+        return _satisfy_accuracy_slo_vec(state)
     target = state.slo.min_accuracy
     accs = [e.accuracy for e in state.cascade_evals]
     costs = [e.avg_cost for e in state.cascade_evals]
@@ -64,6 +71,29 @@ def _satisfy_accuracy_slo(state: PlannerState) -> bool:
                 if gain > best_gain:
                     best_gain, best_r, best_c = gain, r, c
         if best_r < 0:
+            return False
+        state.assignment[best_r] = best_c
+    return True
+
+
+def _satisfy_accuracy_slo_vec(state: PlannerState) -> bool:
+    target = state.slo.min_accuracy
+    accs = np.asarray([e.accuracy for e in state.cascade_evals])
+    costs = np.asarray([e.avg_cost for e in state.cascade_evals])
+    n_r, n_c = state.n_ranges, len(accs)
+    blocked = np.zeros((n_r, n_c), bool)
+    for r, bl in state.blacklist.items():
+        for c in bl:
+            blocked[r, c] = True
+    while state.weighted_accuracy() < target - 1e-12:
+        cur = np.asarray(state.assignment)
+        dacc = accs[None, :] - accs[cur][:, None]
+        dcost = np.maximum(costs[None, :] - costs[cur][:, None], 1e-12)
+        gain = (state.qps_prior[:, None] * dacc) / dcost
+        gain[(dacc <= 0) | blocked] = -np.inf
+        flat = int(np.argmax(gain))
+        best_r, best_c = divmod(flat, n_c)
+        if not gain[best_r, best_c] > 0.0:
             return False
         state.assignment[best_r] = best_c
     return True

@@ -163,6 +163,48 @@ def fmt_row(row: Dict) -> str:
             f"compile={row['compile_seconds']:.0f}s")
 
 
+def plan_check(archs, context: int, qps_max: float = 60.0,
+               slo_spec: str = "latency:8.0") -> None:
+    """Run the gear planner over the analytic serve profiles and print the
+    per-submodule wall-time breakdown (``PlannerReport.submodule_seconds``)
+    — the measurability hook for planner performance work (DESIGN.md §10):
+    any regression in planner wall time shows up here per submodule, on
+    artifacts the dry-run already produces."""
+    from repro.core import HardwareSpec, SLO, optimize_gear_plan
+    from repro.core.execution import CostModelBackend, profile_backend
+    from repro.core.profiles import synthetic_family
+    names = list(archs)
+    synth = synthetic_family(names, base_acc=0.55, acc_gain=0.04, seed=11)
+    backend = CostModelBackend({a: a for a in names}, context=context,
+                               kind="decode",
+                               validation={n: synth[n].validation
+                                           for n in names})
+    profiles = profile_backend(backend)
+    hw = HardwareSpec(num_devices=4, mem_per_device=96e9)
+    fits = {m: p for m, p in profiles.items()
+            if p.mem_bytes <= hw.mem_per_device}
+    dropped = sorted(set(profiles) - set(fits))
+    if dropped:
+        print(f"plan check: dropping {dropped} (replica exceeds device "
+              f"memory {hw.mem_per_device / 1e9:.0f} GB)")
+    profiles = fits
+    kind, value = slo_spec.split(":")
+    slo = SLO(kind="latency", latency_p95=float(value)) \
+        if kind == "latency" else SLO(kind="accuracy",
+                                      min_accuracy=float(value))
+    report = optimize_gear_plan(profiles, hw, slo, qps_max=qps_max,
+                                n_ranges=4)
+    print(f"\nplan check: {report.submodule_calls} submodule calls, "
+          f"{report.errors_resolved} errors resolved, "
+          f"{report.wall_seconds:.2f}s wall, "
+          f"{report.certify_rounds} certification restart(s)")
+    for sub, secs in sorted(report.submodule_seconds.items()):
+        print(f"  {sub:22s} {secs:7.3f}s")
+    for r, g in enumerate(report.plan.gears):
+        print(f"  range {r}: {' -> '.join(g.cascade.models)} "
+              f"p95={g.expected_p95 * 1e3:.0f}ms")
+
+
 def emit_serve_profiles(archs, context: int, out_path: str) -> None:
     """Write the analytic-roofline serve ModelProfiles for ``archs`` via the
     unified execution-backend entry point (``profile_backend`` over a
@@ -200,12 +242,19 @@ def main() -> None:
                     help="emit analytic serve ModelProfiles (CostModel"
                          "Backend) for the selected archs and exit")
     ap.add_argument("--serve-context", type=int, default=2048)
+    ap.add_argument("--plan-check", action="store_true",
+                    help="run the gear planner over the analytic serve "
+                         "profiles and print the per-submodule wall-time "
+                         "breakdown")
     args = ap.parse_args()
 
-    if args.serve_profiles_out:
+    if args.serve_profiles_out or args.plan_check:
         archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
-        emit_serve_profiles(archs, args.serve_context,
-                            args.serve_profiles_out)
+        if args.serve_profiles_out:
+            emit_serve_profiles(archs, args.serve_context,
+                                args.serve_profiles_out)
+        if args.plan_check:
+            plan_check(archs, args.serve_context)
         return
 
     archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]

@@ -108,6 +108,8 @@ def main() -> None:
     print(f"\ngear plan: {report.submodule_calls} submodule calls, "
           f"{report.errors_resolved} errors resolved, "
           f"{report.wall_seconds:.1f}s")
+    for sub, secs in sorted(report.submodule_seconds.items()):
+        print(f"  {sub:22s} {secs:7.2f}s")
     for r, g in enumerate(plan.gears):
         print(f"  range {r} (<= {plan.range_width * (r + 1):.0f} qps): "
               f"{' -> '.join(g.cascade.models)} "

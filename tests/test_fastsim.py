@@ -1,0 +1,304 @@
+"""Fast planner evaluation layer (core/fastsim.py, DESIGN.md §10):
+vectorized helpers are bit-identical to the scalar paths they replace, the
+exact-DES memo cache is keyed on the FULL SimConfig (calibration changes
+can never serve stale results) and digest-guarded across warm starts, and
+the fast-path planner produces plans identical to the pre-change search on
+the planner test scenarios."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (Gear, HardwareSpec, SLO, SimConfig,
+                        optimize_gear_plan)
+from repro.core.cascade import Cascade, evaluate_cascade
+from repro.core.fastsim import (FastEvaluator, SimMemo, SimOutcome,
+                                cascade_throughputs, model_capacities,
+                                sim_memo_key, trigger_ladder)
+from repro.core.lp import Replica
+from repro.core.profiles import synthetic_family
+from repro.core.simulator import trace_to_arrivals
+
+
+# ---------------------------------------------------------------------------
+# trace_to_arrivals vectorization (satellite): equivalence with the
+# per-second loop it replaced
+# ---------------------------------------------------------------------------
+
+def _arrivals_loop(qps_per_sec):
+    out = []
+    for s, q in enumerate(np.asarray(qps_per_sec)):
+        k = int(round(q))
+        if k > 0:
+            out.append(s + (np.arange(k) + 0.5) / k)
+    return np.concatenate(out) if out else np.zeros(0)
+
+
+@pytest.mark.parametrize("trace", [
+    np.zeros(5),
+    np.array([1.0]),
+    np.array([0.0, 3.7, 0.2, 12.5, 0.49, 400.0]),
+    np.full(30, 7.0),
+    np.array([2.5, 3.5]),                     # banker's-rounding edge
+])
+def test_trace_to_arrivals_matches_loop(trace):
+    assert np.array_equal(trace_to_arrivals(trace), _arrivals_loop(trace))
+
+
+def test_trace_to_arrivals_random_traces():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        trace = rng.uniform(0, 50, size=rng.integers(1, 40)) * \
+            rng.integers(0, 2, size=1)
+        assert np.array_equal(trace_to_arrivals(trace),
+                              _arrivals_loop(trace))
+
+
+# ---------------------------------------------------------------------------
+# Memo cache keying (satellite guard): the FULL SimConfig is in the key
+# ---------------------------------------------------------------------------
+
+def _mk_gear():
+    return Gear(cascade=Cascade(("a", "b"), (0.5,)),
+                min_queue_lens={"a": 1, "b": 1},
+                load_fractions={"a": {0: 1.0}, "b": {1: 1.0}})
+
+
+def _mk_replicas():
+    return [Replica("a", 0, 1e-3), Replica("b", 1, 5e-3)]
+
+
+def test_memo_key_covers_every_simconfig_field():
+    """Any calibration change — dispatch overhead, max-wait, hysteresis,
+    seed, batch cap, measurement interval — must produce a different memo
+    key, so a re-plan after re-calibration can never reuse stale DES
+    outcomes."""
+    gear, reps = _mk_gear(), _mk_replicas()
+    base_cfg = SimConfig()
+    base = sim_memo_key(gear, 100.0, 2.0, 25, base_cfg, reps, 2)
+    for f in dataclasses.fields(SimConfig):
+        bumped = dataclasses.replace(
+            base_cfg, **{f.name: getattr(base_cfg, f.name) + 1})
+        key = sim_memo_key(gear, 100.0, 2.0, 25, bumped, reps, 2)
+        assert key != base, f"SimConfig.{f.name} not part of the memo key"
+
+
+def test_memo_key_sensitive_to_gear_and_workload():
+    gear, reps = _mk_gear(), _mk_replicas()
+    cfg = SimConfig()
+    base = sim_memo_key(gear, 100.0, 2.0, 25, cfg, reps, 2)
+    other = Gear(cascade=gear.cascade, min_queue_lens={"a": 2, "b": 1},
+                 load_fractions=gear.load_fractions)
+    assert sim_memo_key(other, 100.0, 2.0, 25, cfg, reps, 2) != base
+    assert sim_memo_key(gear, 101.0, 2.0, 25, cfg, reps, 2) != base
+    assert sim_memo_key(gear, 100.0, 2.0, 26, cfg, reps, 2) != base
+    moved = [Replica("a", 1, 1e-3), Replica("b", 0, 5e-3)]
+    assert sim_memo_key(gear, 100.0, 2.0, 25, cfg, moved, 2) != base
+
+
+def test_memo_carry_is_profile_digest_guarded():
+    fam = synthetic_family(["a", "b"], seed=1)
+    old = SimMemo()
+    old.set_profiles(fam)
+    gear, reps = _mk_gear(), _mk_replicas()
+    key = sim_memo_key(gear, 100.0, 2.0, 25, SimConfig(), reps, 2)
+    old.put(key, SimOutcome(stable=True, p95=0.1))
+
+    # same profiles: the entry transfers
+    new = SimMemo()
+    new.carry_from(old, fam)
+    assert new.get(key) is not None
+
+    # a model the entry touches was re-profiled: the entry must NOT serve
+    drifted = synthetic_family(["a", "b"], seed=2)
+    new2 = SimMemo()
+    new2.carry_from(old, drifted)
+    assert new2.get(key) is None
+
+    # pinned re-plan sees a SUBSET of the profiles: entries over surviving
+    # models still transfer, entries over dropped models do not
+    subset = {"a": fam["a"], "b": fam["b"]}
+    only_a_gear = Gear(cascade=Cascade(("a",), ()),
+                       min_queue_lens={"a": 1},
+                       load_fractions={"a": {0: 1.0}})
+    key_a = sim_memo_key(only_a_gear, 50.0, 2.0, 12, SimConfig(),
+                         [Replica("a", 0, 1e-3)], 1)
+    old.put(key_a, SimOutcome(stable=True, p95=0.05))
+    new3 = SimMemo()
+    new3.carry_from(old, {"a": subset["a"]})
+    assert new3.get(key_a) is not None
+    assert new3.get(key) is None      # touches 'b', absent from the subset
+
+
+# ---------------------------------------------------------------------------
+# Vectorized helpers: bit-identical to the scalar paths
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def family():
+    return synthetic_family(["s", "m", "l"], base_runtime=1e-3,
+                            runtime_ratio=3.0, seed=7)
+
+
+def test_batch_runtimes_matches_profile_runtime(family):
+    ev = FastEvaluator(family)
+    batches = np.array([0.5, 1, 2, 3, 5, 17, 64, 100, 512, 2000.0])
+    for m, prof in family.items():
+        vec = ev.batch_runtimes(m, batches)
+        ref = np.array([prof.runtime(b) for b in batches])
+        assert np.array_equal(vec, ref)
+
+
+def test_cascade_throughputs_bit_identical(family):
+    from repro.core.planner import make_state
+    from repro.core.submodules.cascade_search import estimate_throughput
+    hw = HardwareSpec(num_devices=3, mem_per_device=64e9)
+    state = make_state(family, hw, SLO(kind="latency", latency_p95=1.0),
+                       qps_max=100.0, n_ranges=4)
+    cascades = [Cascade(("s",), ()), Cascade(("s", "l"), (0.4,)),
+                Cascade(("s", "m", "l"), (0.3, 0.6)), Cascade(("l",), ())]
+    evals = [evaluate_cascade(c, family) for c in cascades]
+    vec = cascade_throughputs(family, hw.num_devices, cascades, evals)
+    ref = [estimate_throughput(state, e, c)
+           for c, e in zip(cascades, evals)]
+    assert vec == ref      # exact float equality, not approx
+
+
+def test_model_capacities_matches_scan():
+    reps = [Replica("a", 0, 1e-3), Replica("b", 0, 2e-3),
+            Replica("a", 1, 1e-3), Replica("b", 1, 2e-3)]
+    caps = model_capacities(reps)
+    for m in ("a", "b"):
+        ref = sum(1.0 / r.runtime_per_sample for r in reps if r.model == m)
+        assert caps[m] == ref
+
+
+def test_trigger_ladder_matches_growth_rule():
+    ladder = trigger_ladder(128)
+    assert ladder[0] == 1 and ladder[-1] == 128
+    mq, ref = 1, [1]
+    while mq < 128:
+        mq = min(128, max(mq + 1, int(mq * 1.5)))
+        ref.append(mq)
+    assert ladder == ref
+
+
+def test_evaluate_ladder_sanity(family):
+    ev = FastEvaluator(family)
+    casc = Cascade(("s", "l"), (0.4,))
+    ce = evaluate_cascade(casc, family)
+    reps = [Replica("s", 0, 1e-3), Replica("l", 1, 9e-3)]
+    lf = {"s": {0: 1.0}, "l": {1: 1.0}}
+    ladder = trigger_ladder()
+    # light load: every trigger stable, finite p95
+    fe = ev.evaluate_ladder(casc, ce, lf, reps, 2, qps=5.0, cfg=SimConfig(),
+                            triggers=ladder, offered=100.0)
+    assert fe.stable.all() and np.isfinite(fe.p95).all()
+    assert fe.accuracy == ce.accuracy
+    # far beyond aggregate capacity: nothing is stable
+    fe2 = ev.evaluate_ladder(casc, ce, lf, reps, 2, qps=1e6,
+                             cfg=SimConfig(), triggers=ladder,
+                             offered=2e6)
+    assert not fe2.stable.any()
+    # heavy per-batch overhead at trigger 1 under moderate load (batches
+    # stay trigger-bound): raising the trigger amortises the overhead —
+    # the §4.5 sweep's raison d'etre
+    cfg_ovh = SimConfig(dispatch_overhead=5e-3)
+    fe3 = ev.evaluate_ladder(casc, ce, lf, reps, 2, qps=150.0, cfg=cfg_ovh,
+                             triggers=ladder, offered=300.0)
+    assert fe3.util[0] > fe3.util[6]
+
+
+# ---------------------------------------------------------------------------
+# Plan parity: fast path == pre-change planner on the test scenarios
+# ---------------------------------------------------------------------------
+
+def plan_signature(report):
+    return (
+        [tuple(g.cascade.models) for g in report.plan.gears],
+        [tuple(g.cascade.thresholds) for g in report.plan.gears],
+        [tuple(sorted(g.min_queue_lens.items()))
+         for g in report.plan.gears],
+        {m: sorted(d.items()) for g in report.plan.gears
+         for m, d in g.load_fractions.items()},
+        [(r.model, r.device) for r in report.plan.replicas],
+        [g.expected_p95 for g in report.plan.gears],
+        [g.expected_accuracy for g in report.plan.gears],
+    )
+
+
+def test_plan_parity_latency_slo(bert_like_profiles, small_plan):
+    """The standing latency-SLO planner scenario (same as the small_plan
+    fixture): the fast path's final GearPlan — assignments, triggers,
+    placement, even the DES-certified p95s — is identical to the
+    pre-change planner's."""
+    fast_report, hw = small_plan
+    legacy = optimize_gear_plan(
+        bert_like_profiles, hw, SLO(kind="latency", latency_p95=0.4),
+        qps_max=7600, n_ranges=8, fast_path=False)
+    assert plan_signature(legacy) == plan_signature(fast_report)
+
+
+def test_plan_parity_accuracy_slo(bert_like_profiles):
+    hw = HardwareSpec(num_devices=4, mem_per_device=16e9)
+    slo = SLO(kind="accuracy", min_accuracy=0.93)
+    legacy = optimize_gear_plan(bert_like_profiles, hw, slo, qps_max=5000,
+                                n_ranges=8, fast_path=False)
+    fast = optimize_gear_plan(bert_like_profiles, hw, slo, qps_max=5000,
+                              n_ranges=8, fast_path=True)
+    assert plan_signature(legacy) == plan_signature(fast)
+
+
+def test_plan_parity_overhead_regime(bert_like_profiles):
+    """Deep trigger ladders (calibrated dispatch overhead makes small
+    batches genuinely unstable): the regime the fast sweep accelerates
+    most still converges to the pre-change plan."""
+    hw = HardwareSpec(num_devices=4, mem_per_device=16e9)
+    slo = SLO(kind="latency", latency_p95=0.5)
+    cfg = SimConfig(dispatch_overhead=2e-3)
+    legacy = optimize_gear_plan(bert_like_profiles, hw, slo, qps_max=5000,
+                                n_ranges=6, sim_cfg=cfg, fast_path=False)
+    fast = optimize_gear_plan(bert_like_profiles, hw, slo, qps_max=5000,
+                              n_ranges=6, sim_cfg=cfg, fast_path=True)
+    assert plan_signature(legacy) == plan_signature(fast)
+    assert any(max(g.min_queue_lens.values()) > 1
+               for g in legacy.plan.gears), \
+        "scenario no longer exercises trigger growth"
+
+
+def test_warm_replan_reuses_memo(bert_like_profiles):
+    """A steady-state re-plan (drifted prior, pinned placement, chained
+    warm state) must run on memoized DES outcomes: zero new simulations,
+    identical plan to the legacy warm re-plan."""
+    hw = HardwareSpec(num_devices=4, mem_per_device=16e9)
+    slo = SLO(kind="latency", latency_p95=0.4)
+    cold = optimize_gear_plan(bert_like_profiles, hw, slo, qps_max=5000,
+                              n_ranges=6, fast_path=True)
+    prior = np.linspace(1.0, 2.0, 6)
+    prior /= prior.sum()
+    w1 = optimize_gear_plan(bert_like_profiles, hw, slo, qps_max=5000,
+                            n_ranges=6, qps_prior=prior,
+                            pinned_replicas=list(cold.plan.replicas),
+                            warm_state=cold.state, fast_path=True)
+    prior2 = np.linspace(1.0, 3.0, 6)
+    prior2 /= prior2.sum()
+    w2 = optimize_gear_plan(bert_like_profiles, hw, slo, qps_max=5000,
+                            n_ranges=6, qps_prior=prior2,
+                            pinned_replicas=list(cold.plan.replicas),
+                            warm_state=w1.state, fast_path=True)
+    assert w2.state.sim_memo.misses == 0, \
+        "steady-state re-plan ran fresh simulations despite the memo"
+    legacy = optimize_gear_plan(bert_like_profiles, hw, slo, qps_max=5000,
+                                n_ranges=6, qps_prior=prior2,
+                                pinned_replicas=list(cold.plan.replicas),
+                                warm_state=w1.state, fast_path=False)
+    assert plan_signature(legacy) == plan_signature(w2)
+
+
+def test_report_submodule_seconds(small_plan):
+    report, _ = small_plan
+    breakdown = report.submodule_seconds
+    assert set(breakdown) >= {"SP1:search_cascades", "SP2:assign_cascades",
+                              "SP3:place_models", "SP4:tune_batch_sizes"}
+    assert all(s >= 0 for s in breakdown.values())
+    assert sum(breakdown.values()) <= report.wall_seconds + 1e-6

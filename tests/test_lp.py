@@ -95,3 +95,65 @@ def test_direct_lp_matches_bisection(seed):
         assert u_bis is None and u_lp is None
     else:
         assert u_lp == pytest.approx(u_bis, abs=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# Simplex edge cases (previously only exercised indirectly through SP3)
+# ---------------------------------------------------------------------------
+
+def test_linprog_unbounded():
+    # min -x with only x <= inf-style slack: objective decreases forever
+    res = linprog(np.array([-1.0]), np.array([[-1.0]]), np.array([0.0]))
+    assert res.status == "unbounded"
+    assert res.x is None
+
+
+def test_linprog_unbounded_direction_in_subspace():
+    # x0 bounded, but x1 unbounded below the objective
+    res = linprog(np.array([0.0, -1.0]),
+                  np.array([[1.0, 0.0]]), np.array([5.0]))
+    assert res.status == "unbounded"
+
+
+def test_linprog_degenerate_redundant_constraints():
+    # the same constraint three times (degenerate basis; Bland's rule must
+    # not cycle) plus a binding one
+    res = linprog(np.array([-1.0, -1.0]),
+                  np.array([[1.0, 1.0], [1.0, 1.0], [1.0, 1.0],
+                            [1.0, 0.0]]),
+                  np.array([2.0, 2.0, 2.0, 1.0]))
+    assert res.status == "optimal"
+    assert res.objective == pytest.approx(-2.0)
+    assert np.all(res.x >= -1e-9)
+
+
+def test_linprog_degenerate_zero_rhs():
+    # b = 0 rows force a degenerate vertex at the origin
+    res = linprog(np.array([1.0, 1.0]),
+                  np.array([[1.0, -1.0], [-1.0, 1.0]]),
+                  np.array([0.0, 0.0]))
+    assert res.status == "optimal"
+    assert res.objective == pytest.approx(0.0)
+
+
+def test_linprog_infeasible_three_way():
+    # x + y <= 1, x >= 2 (via negation), y >= 2: jointly impossible
+    res = linprog(np.array([1.0, 1.0]),
+                  np.array([[1.0, 1.0], [-1.0, 0.0], [0.0, -1.0]]),
+                  np.array([1.0, -2.0, -2.0]))
+    assert res.status == "infeasible"
+    assert res.x is None
+
+
+def test_linprog_tight_equality_like_pair():
+    # x <= 3 and x >= 3 pin x exactly; objective must honour it
+    res = linprog(np.array([1.0]),
+                  np.array([[1.0], [-1.0]]), np.array([3.0, -3.0]))
+    assert res.status == "optimal"
+    assert res.x[0] == pytest.approx(3.0)
+
+
+def test_min_utilization_lp_zero_demand():
+    u, q = min_utilization_lp(_mk_replicas(), {"a": 0.0, "b": 0.0}, 2)
+    assert u == pytest.approx(0.0, abs=1e-6)
+    assert np.all(q <= 1e-6)
