@@ -1,0 +1,194 @@
+"""Multi-tenant serving: shared fleet vs static per-tenant partitioning
+(beyond-paper: core/tenancy.py + core/admission.py).
+
+Two tenants with distinct latency SLOs share one CascadeServe fleet
+(per-tenant gear ladders over ONE joint placement, admission control on)
+against the obvious control: a static weight-proportional device partition
+with an independent single-tenant plan per slice — both arms run through
+the identical executor + admission machinery, so the measured difference
+is SHARING itself.
+
+Reported:
+* **flash crowd** — tenant A offered 2.5x its planned ``qps_max`` while
+  tenant B idles at half load: per-tenant p95 / accuracy / SHED RATE. The
+  shared fleet lends B's idle headroom to A's crowd; the partition cannot,
+  so its shed rate is the cost of fragmentation.
+* **cost at equal SLO attainment** — the smallest fleet (devices) on which
+  each arm plans feasibly AND attains both tenants' SLOs with zero shed at
+  iso-accuracy on an in-range trace. Integer partitions waste fractional
+  headroom and force low-accuracy cascades onto the starved slice; the
+  shared plan pools it.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Results
+from repro.core import (AdmissionConfig, AdmissionController, HardwareSpec,
+                        SLO, ServingSimulator, SimConfig, plan_multi_tenant)
+from repro.core.plan_state import InfeasiblePlanError
+from repro.core.profiles import synthetic_family
+from repro.core.tenancy import TenantSpec
+from repro.serving.baselines import StaticPartitionPolicy
+
+
+def family():
+    """Three models slow enough that device counts bind (per-replica
+    capacity ~1-2k qps), so partitioning fragmentation is visible."""
+    return synthetic_family(["small", "mid", "large"], base_runtime=2e-3,
+                            runtime_ratio=2.4, base_acc=0.72,
+                            acc_gain=0.06, mem_base=0.4e9, seed=5)
+
+
+def tenants():
+    # symmetric demand + equal weights: the static partition is not
+    # handicapped by the split (2+2 of 4 is exactly proportional) — any
+    # cost gap is pure pooling, not a partitioning strawman
+    return [
+        TenantSpec("interactive", SLO(kind="latency", latency_p95=0.35),
+                   qps_max=600.0, weight=1.0, n_ranges=4),
+        TenantSpec("batch", SLO(kind="latency", latency_p95=1.0),
+                   qps_max=600.0, weight=1.0, n_ranges=4),
+    ]
+
+
+def flash_traces(pre: int, crowd: int, post: int, specs):
+    """Beyond-``qps_max`` flash crowd on the interactive tenant while the
+    batch tenant idles at half load."""
+    qa = specs[0].qps_max
+    qb = specs[1].qps_max
+    a = np.concatenate([np.full(pre, 0.6 * qa), np.full(crowd, 2.5 * qa),
+                        np.full(post, 0.6 * qa)])
+    b = np.full(pre + crowd + post, 0.5 * qb)
+    return {"interactive": a, "batch": b}
+
+
+def inrange_traces(seconds: int, specs):
+    """Both tenants near (but inside) their planned peaks."""
+    return {s.name: np.full(seconds, 0.9 * s.qps_max) for s in specs}
+
+
+# one admission config for BOTH arms (the comparison isolates sharing):
+# utilization derated — the capacity model prices replicas at the LP's
+# optimistic efficient-batch rate; past ~0.8 of that, real queueing
+# delays blow latency SLOs before throughput saturates
+ADMISSION = AdmissionConfig(utilization_cap=0.75)
+
+
+def run_shared(profiles, hw, specs, traces, sim_cfg):
+    report = plan_multi_tenant(profiles, hw, specs, sim_cfg=sim_cfg)
+    mt = report.plan
+    sim = ServingSimulator(profiles, mt.replicas, hw.num_devices, sim_cfg)
+    adm = AdmissionController(mt, ADMISSION)
+    return sim.run_multi_tenant(mt, traces, admission=adm), mt
+
+
+def run_static(profiles, hw, specs, traces, sim_cfg):
+    built = StaticPartitionPolicy().build_plans(profiles, hw, specs,
+                                                sim_cfg=sim_cfg)
+    out = {}
+    for spec in specs:
+        mt1, hw_t, _rep = built[spec.name]
+        sim = ServingSimulator(profiles, mt1.replicas, hw_t.num_devices,
+                               sim_cfg)
+        res = sim.run_multi_tenant(
+            mt1, {spec.name: traces[spec.name]},
+            admission=AdmissionController(mt1, ADMISSION))
+        out[spec.name] = res[spec.name]
+    return out
+
+
+# iso-accuracy floor for the cost scan: within half a point of what both
+# arms deliver on a generous (4+ device) fleet (~0.964). Without it the
+# comparison is vacuous — a 1-device-per-tenant partition can always
+# "attain" a latency SLO by downgrading to a cheap low-accuracy cascade.
+ACC_FLOOR = 0.96
+
+
+def attains(results, specs, max_shed: float = 0.0,
+            acc_floor: float = 0.0) -> bool:
+    return all(results[s.name].slo_attained(s.slo) and
+               results[s.name].shed_rate <= max_shed + 1e-12 and
+               results[s.name].accuracy >= acc_floor
+               for s in specs)
+
+
+def min_devices(profiles, specs, traces, sim_cfg, runner, lo: int,
+                hi: int) -> int:
+    """Smallest fleet size in [lo, hi] where the arm plans feasibly and
+    attains both SLOs shed-free at iso-accuracy on the in-range trace
+    (inf if none)."""
+    best = None
+    for n in range(hi, lo - 1, -1):
+        hw = HardwareSpec(num_devices=n, mem_per_device=16e9)
+        try:
+            results = runner(profiles, hw, specs, traces, sim_cfg)
+            if isinstance(results, tuple):
+                results = results[0]
+        except (InfeasiblePlanError, ValueError):
+            break
+        if not attains(results, specs, acc_floor=ACC_FLOOR):
+            break
+        best = n
+    return best if best is not None else float("inf")
+
+
+def main(quick: bool = False):
+    pre, crowd, post = (3, 6, 3) if quick else (5, 12, 5)
+    inrange_s = 6 if quick else 12
+    hi_devices = 5 if quick else 6
+    profiles = family()
+    specs = tenants()
+    sim_cfg = SimConfig()
+    res = Results("bench_multitenant", scenario={
+        "tenants": [s.name for s in specs],
+        "qps_max": {s.name: s.qps_max for s in specs},
+        "weights": {s.name: s.weight for s in specs},
+        "slo_p95_ms": {s.name: s.slo.latency_p95 * 1e3 for s in specs},
+        "crowd_factor": 2.5, "quick": bool(quick)})
+
+    # ---- flash crowd on a fixed fleet --------------------------------------
+    hw = HardwareSpec(num_devices=4, mem_per_device=16e9)
+    traces = flash_traces(pre, crowd, post, specs)
+    shared, mt = run_shared(profiles, hw, specs, traces, sim_cfg)
+    static = run_static(profiles, hw, specs, traces, sim_cfg)
+
+    for label, results in (("shared", shared), ("static", static)):
+        for s in specs:
+            r = results[s.name]
+            res.add(f"flash_{label}_{s.name}_shed_rate",
+                    round(r.shed_rate, 4), offered=r.offered,
+                    shed=r.shed, completed=r.result.completed)
+            res.add(f"flash_{label}_{s.name}_p95_ms",
+                    round(r.p95 * 1e3, 1),
+                    slo_ms=round(s.slo.latency_p95 * 1e3, 1),
+                    attained=bool(r.slo_attained(s.slo)),
+                    accuracy=round(r.accuracy, 4))
+
+    crowd_name = specs[0].name
+    res.add("flash_shed_shared_vs_static",
+            round(shared[crowd_name].shed_rate, 4),
+            static=round(static[crowd_name].shed_rate, 4),
+            shared_borrows_idle_capacity=bool(
+                shared[crowd_name].shed_rate <
+                static[crowd_name].shed_rate))
+
+    # ---- cost at equal SLO attainment --------------------------------------
+    itr = inrange_traces(inrange_s, specs)
+    n_shared = min_devices(profiles, specs, itr, sim_cfg, run_shared,
+                           lo=2, hi=hi_devices)
+    n_static = min_devices(profiles, specs, itr, sim_cfg, run_static,
+                           lo=2, hi=hi_devices)
+    res.add("min_devices_shared", n_shared, acc_floor=ACC_FLOOR)
+    res.add("min_devices_static", n_static, acc_floor=ACC_FLOOR)
+    res.add("shared_beats_static_on_cost",
+            bool(n_shared < n_static),
+            equal_slo_attainment=True, iso_accuracy=ACC_FLOOR,
+            devices_saved=(n_static - n_shared)
+            if np.isfinite(n_shared) and np.isfinite(n_static) else None)
+
+    return res.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,7 @@ BENCHES = [
     "bench_roofline",            # §Roofline summary from the dry-run
     "bench_fault_tolerance",     # beyond-paper FT/elasticity
     "bench_replanning",          # beyond-paper online re-planning drift
+    "bench_multitenant",         # beyond-paper multi-tenant shared fleet
 ]
 
 

@@ -4,6 +4,9 @@ The paper's primary contribution — offline planner (SP1-SP4 submodules,
 EM-style error-driven co-optimisation), discrete-event simulator, LP load
 balancer, certainty estimation, cascade semantics, gear plans.
 """
+from repro.core.admission import (AdmissionConfig, AdmissionController,
+                                  AdmissionDecision, fleet_capacities,
+                                  weighted_fair_shares)
 from repro.core.adaption import (BackgroundReplanner, MonitorConfig,
                                  PlanLifecycle, PlanMonitor, PlanVersion,
                                  ReplanTrigger, SwapEvent, planner_replan_fn,
@@ -30,6 +33,10 @@ from repro.core.scheduling import (CascadeHop, DecisionTrace, GearSelector,
                                    with_hysteresis)
 from repro.core.simulator import ServingSimulator, SimConfig, SimResult, \
     make_gear
+from repro.core.tenancy import (MultiTenantPlan, MultiTenantReport,
+                                TenantResult, TenantSpec,
+                                make_tenant_lifecycles, plan_multi_tenant,
+                                run_multi_tenant_sim)
 
 __all__ = [
     "Cascade", "CascadeEval", "evaluate_cascade", "CERTAINTY_ESTIMATORS",
@@ -50,4 +57,9 @@ __all__ = [
     "CostModelBackend", "profile_backend", "resolve_estimator",
     # fast planner evaluation (core/fastsim.py)
     "FastEval", "FastEvaluator", "SimMemo", "SimOutcome", "trigger_ladder",
+    # multi-tenant serving (core/tenancy.py + core/admission.py)
+    "TenantSpec", "MultiTenantPlan", "MultiTenantReport", "TenantResult",
+    "plan_multi_tenant", "make_tenant_lifecycles", "run_multi_tenant_sim",
+    "AdmissionConfig", "AdmissionController", "AdmissionDecision",
+    "fleet_capacities", "weighted_fair_shares",
 ]

@@ -349,7 +349,8 @@ def planner_replan_fn(profiles, hardware: HardwareSpec, slo: SLO,
                       n_ranges: int = 8, sim_cfg=None, seed: int = 0,
                       qps_margin: float = 1.25, pin_placement: bool = True,
                       warm_state=None, max_calls: int = 200,
-                      fast_path: bool = True) -> PlanFn:
+                      fast_path: bool = True,
+                      background_qps=None) -> PlanFn:
     """The production ``plan_fn``: re-run Algorithm 1 warm-started from the
     previous ``PlannerState``, with the measured QPS window as the prior
     (App. C.2) and — for load beyond the planned range — an extended
@@ -384,7 +385,8 @@ def planner_replan_fn(profiles, hardware: HardwareSpec, slo: SLO,
             max_calls=max_calls,
             pinned_replicas=list(active.plan.replicas)
             if pin_placement else None,
-            warm_state=chain["warm"], fast_path=fast_path)
+            warm_state=chain["warm"], fast_path=fast_path,
+            background_qps=background_qps)
         chain["warm"] = report.state    # next re-plan warm-starts from US
         return report.plan
 

@@ -26,11 +26,25 @@ class SLO:
     min_accuracy: Optional[float] = None  # fraction (kind == "accuracy")
 
     def __post_init__(self):
-        assert self.kind in ("latency", "accuracy")
+        # explicit ValueError, not assert: validation must survive python -O
+        if self.kind not in ("latency", "accuracy"):
+            raise ValueError(
+                f"SLO kind must be 'latency' or 'accuracy', got "
+                f"{self.kind!r}")
         if self.kind == "latency":
-            assert self.latency_p95 is not None
+            if self.latency_p95 is None:
+                raise ValueError("a latency SLO needs latency_p95 (seconds)")
+            if self.latency_p95 <= 0:
+                raise ValueError(
+                    f"latency_p95 must be positive, got {self.latency_p95}")
         else:
-            assert self.min_accuracy is not None
+            if self.min_accuracy is None:
+                raise ValueError(
+                    "an accuracy SLO needs min_accuracy (fraction)")
+            if not 0.0 < self.min_accuracy <= 1.0:
+                raise ValueError(
+                    f"min_accuracy must be in (0, 1], got "
+                    f"{self.min_accuracy}")
 
 
 @dataclass
@@ -43,6 +57,18 @@ class Gear:
     load_fractions: Dict[str, Dict[int, float]]
     expected_accuracy: float = 0.0
     expected_p95: float = 0.0
+
+    def __post_init__(self):
+        for m, trig in self.min_queue_lens.items():
+            if trig < 1:
+                raise ValueError(
+                    f"min queue length for {m} must be >= 1, got {trig}")
+        for m, fracs in self.load_fractions.items():
+            for ridx, f in fracs.items():
+                if f < 0.0:
+                    raise ValueError(
+                        f"load fraction for {m} on replica {ridx} must be "
+                        f">= 0, got {f}")
 
     def to_dict(self) -> Dict:
         return {
@@ -116,6 +142,12 @@ class GearPlan:
     num_devices: int
     slo: SLO
     provenance: Optional[PlanProvenance] = None
+
+    def __post_init__(self):
+        if self.qps_max <= 0:
+            raise ValueError(f"qps_max must be positive, got {self.qps_max}")
+        if not self.gears:
+            raise ValueError("a gear plan needs at least one gear")
 
     @property
     def n_ranges(self) -> int:

@@ -64,6 +64,13 @@ class PlannerState:
     # re-optimise cascades/gears/batching OVER this placement. SP3 skips
     # prune/add and only re-solves the per-range load-balancing LPs.
     pinned_replicas: Optional[List[Replica]] = None
+    # Multi-tenant planning (core/tenancy.py): expected steady-state
+    # per-model QPS from the OTHER tenants sharing the placement. Added to
+    # every range's demand vector in SP3, so the load-balancing LPs spread
+    # this tenant's load knowing the contention it will meet. The per-range
+    # DES feasibility check remains tenant-solo (the joint placement is
+    # provisioned for the sum of worst cases — DESIGN.md §11).
+    background_qps: Optional[Dict[str, float]] = None
 
     # Fast evaluation layer (core/fastsim.py, DESIGN.md §10): when enabled
     # the submodule search runs on the vectorized steady-state evaluator

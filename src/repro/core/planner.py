@@ -63,7 +63,9 @@ def make_state(profiles: ProfileSet, hardware: HardwareSpec, slo: SLO,
                qps_prior: Optional[np.ndarray] = None,
                sim_cfg: SimConfig = SimConfig(), seed: int = 0,
                pinned_replicas=None, warm_state: Optional[PlannerState] = None,
-               fast_path: bool = True) -> PlannerState:
+               fast_path: bool = True,
+               background_qps: Optional[Dict[str, float]] = None
+               ) -> PlannerState:
     prior = qps_prior if qps_prior is not None else zipf_prior(n_ranges)
     if pinned_replicas is not None:
         # immutable serving placement: only models already placed can
@@ -79,7 +81,9 @@ def make_state(profiles: ProfileSet, hardware: HardwareSpec, slo: SLO,
                          sim_cfg=sim_cfg, rng_seed=seed,
                          pinned_replicas=list(pinned_replicas)
                          if pinned_replicas is not None else None,
-                         fast_path=fast_path)
+                         fast_path=fast_path,
+                         background_qps=dict(background_qps)
+                         if background_qps else None)
     if fast_path:
         # stamp the memo with its profile provenance up front, so a later
         # warm start can tell whether this run's DES outcomes apply to it
@@ -120,7 +124,9 @@ def optimize_gear_plan(profiles: ProfileSet, hardware: HardwareSpec,
                        sim_cfg: SimConfig = SimConfig(), seed: int = 0,
                        max_calls: int = 200, pinned_replicas=None,
                        warm_state: Optional[PlannerState] = None,
-                       fast_path: bool = True) -> PlannerReport:
+                       fast_path: bool = True,
+                       background_qps: Optional[Dict[str, float]] = None
+                       ) -> PlannerReport:
     """Algorithm 1. Raises InfeasiblePlanError when no plan can satisfy the
     SLO on the given hardware.
 
@@ -130,12 +136,15 @@ def optimize_gear_plan(profiles: ProfileSet, hardware: HardwareSpec,
     on the fast path, its exact-DES memo). ``fast_path`` switches the inner
     search onto the vectorized steady-state evaluator with final exact-DES
     certification (DESIGN.md §10); ``False`` restores the pre-fast-path
-    search verbatim.
+    search verbatim. ``background_qps`` is the multi-tenant contention term
+    (core/tenancy.py): other tenants' expected per-model load on a shared
+    pinned placement, added to every range's LP demand.
     """
     t0 = time.time()
     state = make_state(profiles, hardware, slo, qps_max, n_ranges, qps_prior,
                        sim_cfg, seed, pinned_replicas=pinned_replicas,
-                       warm_state=warm_state, fast_path=fast_path)
+                       warm_state=warm_state, fast_path=fast_path,
+                       background_qps=background_qps)
     modules = SUBMODULES
     names = ["SP1:search_cascades", "SP2:assign_cascades",
              "SP3:place_models", "SP4:tune_batch_sizes"]

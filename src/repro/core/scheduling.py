@@ -109,18 +109,35 @@ class RoutePool:
     Both executors draw from the same construction so a parity test can give
     them literally the same stream (pool size changes the wrap-around, hence
     the sequence — use ``for_arrivals`` to match the simulator's sizing).
+
+    ``key`` derives an independent KEYED substream (stable hash of the key
+    folded into the seed) instead of the positional default stream. The
+    multi-tenant path keys one pool per tenant, so inserting or removing a
+    tenant can never shift another tenant's draw sequence — with a single
+    positional stream, every routing decision of every tenant would consume
+    from one shared cursor and any new tenant would perturb all of them.
+    ``key=None`` is bit-identical to the pre-keying construction.
     """
     __slots__ = ("_pool", "_ptr", "_n")
 
-    def __init__(self, seed: int, size: int = 4096):
-        self._pool = np.random.default_rng(seed).random(
-            max(size, 1)).tolist()
+    def __init__(self, seed: int, size: int = 4096,
+                 key: Optional[str] = None):
+        if key is None:
+            rng = np.random.default_rng(seed)
+        else:
+            # zlib.crc32 is stable across processes and platforms (unlike
+            # hash()), so keyed streams are reproducible everywhere
+            import zlib
+            rng = np.random.default_rng(
+                [int(seed), zlib.crc32(str(key).encode("utf-8"))])
+        self._pool = rng.random(max(size, 1)).tolist()
         self._n = len(self._pool)
         self._ptr = 0
 
     @classmethod
-    def for_arrivals(cls, seed: int, n_arrivals: int) -> "RoutePool":
-        return cls(seed, n_arrivals * 4 + 16)
+    def for_arrivals(cls, seed: int, n_arrivals: int,
+                     key: Optional[str] = None) -> "RoutePool":
+        return cls(seed, n_arrivals * 4 + 16, key=key)
 
     def next(self) -> float:
         ptr = self._ptr
@@ -259,10 +276,18 @@ class SchedulerCore:
                     gear: Gear) -> bool:
         """Fire when the queue reaches the gear's min-queue-length (§4.5) or
         the head-of-line sample has waited ``max_wait``."""
+        return self.fire_at(queue_len, head_wait,
+                            gear.min_queue_lens.get(model, 1))
+
+    def fire_at(self, queue_len: int, head_wait: float,
+                trigger: int) -> bool:
+        """``should_fire`` against an explicit trigger value. Multi-tenant
+        drivers resolve the trigger across the tenants sharing a replica
+        queue (``repro.core.tenancy.effective_trigger``) and call this —
+        the fire rule itself stays in one place."""
         if queue_len <= 0:
             return False
-        return queue_len >= gear.min_queue_lens.get(model, 1) or \
-            head_wait >= self._fire_wait
+        return queue_len >= trigger or head_wait >= self._fire_wait
 
     def batch_size(self, queue_len: int) -> int:
         return min(queue_len, self.cfg.max_batch)

@@ -228,6 +228,19 @@ class ServingSimulator:
                          hedge=hedge, decision_trace=decision_trace,
                          lifecycle=lifecycle)
 
+    def run_multi_tenant(self, mt_plan, traces, drain: float = 2.0,
+                         admission=None, lifecycles=None,
+                         decision_traces=None, fleet_trace=None):
+        """Superposed multi-tenant traffic over the shared placement
+        (core/tenancy.py): per-tenant gear ladders, tenant-tagged queues,
+        admission control, per-tenant lifecycles. Returns
+        ``{tenant: TenantResult}``."""
+        from repro.core.tenancy import run_multi_tenant_sim
+        return run_multi_tenant_sim(
+            self, mt_plan, traces, drain=drain, admission=admission,
+            lifecycles=lifecycles, decision_traces=decision_traces,
+            fleet_trace=fleet_trace)
+
     def run_policy(self, gears: List[Gear], selector: GearSelector,
                    qps_per_sec: np.ndarray, drain: float = 2.0,
                    decision_trace: Optional[DecisionTrace] = None

@@ -44,8 +44,17 @@ from repro.core.submodules.hardware_mapping import _bottleneck_model
 # ---------------------------------------------------------------------------
 
 def _range_sim_params(state: PlannerState, r: int) -> Tuple[float, float, int]:
-    """(qps, horizon, warm backlog) for one range's feasibility sim."""
-    qps = state.range_hi(r)
+    """(qps, horizon, warm backlog) for one range's feasibility sim.
+
+    Multi-tenant planning (core/tenancy.py): the DES simulates only this
+    tenant's cascade, but the shared placement also serves the other
+    tenants. Their expected load (``state.background_qps``) is folded in
+    as WORK-EQUIVALENT demand inflation — the tenant's QPS is scaled so
+    the solo sim consumes the device-time of tenant + background — making
+    SP4's stability/latency verdicts superposition-aware. Single-tenant
+    states (``background_qps`` unset) are untouched, bit-identically.
+    """
+    qps = state.range_hi(r) * _background_inflation(state, r)
     horizon = state.sim_horizon
     if qps * horizon < 64:  # low ranges: simulate enough samples
         horizon = min(30.0, 64.0 / max(qps, 1.0))
@@ -53,6 +62,29 @@ def _range_sim_params(state: PlannerState, r: int) -> Tuple[float, float, int]:
     # upshifts mid-spike; a feasible gear must digest it within the SLO
     backlog = int(0.25 * qps)
     return qps, horizon, backlog
+
+
+def _background_inflation(state: PlannerState, r: int) -> float:
+    """1 + (background work / own work) at range r, in per-sample seconds
+    at the efficient batch size (the same optimistic rate the LPs price
+    capacity with, so the two contention views stay consistent)."""
+    bg = state.background_qps
+    if not bg:
+        return 1.0
+
+    def work(m: str) -> float:
+        prof = state.profiles[m]
+        b = prof.batch_sizes[-1]
+        return prof.runtime(b) / b
+
+    casc = state.cascade_of_range(r)
+    ev = state.eval_of_range(r)
+    own = sum(f * state.range_hi(r) * work(m)
+              for m, f in zip(casc.models, ev.fractions))
+    if own <= 0:
+        return 1.0
+    other = sum(q * work(m) for m, q in bg.items() if m in state.profiles)
+    return 1.0 + other / own
 
 
 def _range_gear(state: PlannerState, r: int,

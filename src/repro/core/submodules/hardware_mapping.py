@@ -71,7 +71,13 @@ def _qps_per_model(state: PlannerState, r: int) -> Dict[str, float]:
     ev = state.eval_of_range(r)
     casc = state.cascade_of_range(r)
     qps = state.range_hi(r)
-    return {m: f * qps for m, f in zip(casc.models, ev.fractions)}
+    out = {m: f * qps for m, f in zip(casc.models, ev.fractions)}
+    if state.background_qps:
+        # multi-tenant contention: other tenants' expected steady-state
+        # load on the shared placement enters every range's LP demand
+        for m, q in state.background_qps.items():
+            out[m] = out.get(m, 0.0) + q
+    return out
 
 
 def _worst_case_qps(state: PlannerState) -> Dict[str, float]:
@@ -217,6 +223,62 @@ def _additive_repair_inner(state: PlannerState, used: List[str],
         u_cur, m, d = best
         free[d] -= state.profiles[m].mem_bytes
         replicas.append(_replica_obj(state, m, d))
+
+
+def solve_joint_placement(profiles, hardware, wc_qps: Dict[str, float],
+                          used: Optional[List[str]] = None,
+                          min_replicas: Optional[Dict[str, int]] = None,
+                          fast_path: bool = True) -> List[Replica]:
+    """One shared placement for an aggregate demand (multi-tenant planning,
+    core/tenancy.py): run the Eq.-4 prune (with additive repair as usual)
+    against the SUM of the tenants' worst-case per-model QPS, outside the
+    per-tenant EM loops. The result is then PINNED for every tenant's own
+    SP2/SP4 run, exactly like an online re-plan pins the serving placement.
+
+    Raises ``InfeasiblePlanError`` when not even one replica per model fits.
+    """
+    from repro.core.gears import SLO
+    from repro.core.plan_state import InfeasiblePlanError
+
+    used = used if used is not None else sorted(wc_qps)
+    missing = [m for m in used if m not in profiles]
+    if missing:
+        raise InfeasiblePlanError(
+            f"joint placement: no profile for {missing[0]}")
+    state = PlannerState(
+        profiles=profiles, hardware=hardware,
+        slo=SLO(kind="latency", latency_p95=1.0),
+        qps_max=max(sum(wc_qps.values()), 1.0), n_ranges=1,
+        qps_prior=np.ones(1), fast_path=fast_path)
+    if min_replicas:
+        state.min_replicas = dict(min_replicas)
+    replicas = _prune_placement(
+        state,
+        [_replica_obj(state, m, d)
+         for m in used for d in range(hardware.num_devices)],
+        wc_qps)
+    if replicas is None:
+        replicas = _additive_repair(state, used, wc_qps)
+    if replicas is None:
+        raise InfeasiblePlanError(
+            f"joint placement: cannot pack one replica per model "
+            f"({used}) on {hardware.num_devices} devices")
+    return replicas
+
+
+def mean_qps_per_model(state: PlannerState) -> Dict[str, float]:
+    """Prior-weighted steady-state per-model QPS of one tenant's plan —
+    what the OTHER tenants see as background contention (DESIGN.md §11).
+    Excludes any background already folded into the state's own demand."""
+    bg = state.background_qps or {}
+    out: Dict[str, float] = {}
+    for r in range(state.n_ranges):
+        w = float(state.qps_prior[r])
+        for m, q in _qps_per_model(state, r).items():
+            own = q - bg.get(m, 0.0)
+            if own > 0:
+                out[m] = out.get(m, 0.0) + w * own
+    return out
 
 
 def place_models(error: PlanError, state: PlannerState

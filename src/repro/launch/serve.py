@@ -35,6 +35,74 @@ def parse_slo(text: str) -> SLO:
     return SLO(kind="accuracy", min_accuracy=float(value))
 
 
+def parse_tenants(text: str):
+    """``name:slokind:value:qps_max[:weight]``, comma-separated — e.g.
+    ``interactive:latency:0.3:600:2,batch:latency:1.0:600:1``."""
+    from repro.core import TenantSpec
+    out = []
+    for part in text.split(","):
+        fields = part.split(":")
+        if len(fields) not in (4, 5):
+            raise ValueError(f"bad tenant spec {part!r} (want "
+                             f"name:slokind:value:qps_max[:weight])")
+        name, kind, value, qps_max = fields[:4]
+        weight = float(fields[4]) if len(fields) == 5 else 1.0
+        out.append(TenantSpec(name, parse_slo(f"{kind}:{value}"),
+                              qps_max=float(qps_max), weight=weight,
+                              n_ranges=4))
+    return out
+
+
+def serve_multitenant(args, profiles, hw, trace_fn) -> None:
+    """Multi-tenant mode (DESIGN.md §11): joint plan, per-tenant ladders,
+    superposed traces with admission control — on the DES by default, on
+    the threaded ``MultiTenantServer`` under ``--stress-replay``."""
+    from repro.core import (AdmissionConfig, AdmissionController,
+                            plan_multi_tenant)
+    tenants = parse_tenants(args.tenants)
+    report = plan_multi_tenant(profiles, hw, tenants)
+    mt = report.plan
+    print(f"\nmulti-tenant plan over {hw.num_devices} shared devices "
+          f"({report.wall_seconds:.1f}s):")
+    for spec in tenants:
+        plan = mt.plans[spec.name]
+        print(f"  {spec.name}: qps_max={spec.qps_max:.0f} w={spec.weight} "
+              f"top gear {' -> '.join(plan.gears[-1].cascade.models)}")
+    traces = {spec.name: trace_fn(seconds=args.trace_seconds,
+                                  peak_qps=spec.qps_max)
+              for spec in tenants}
+    admission = AdmissionController(
+        mt, AdmissionConfig(utilization_cap=0.75))
+    if args.stress_replay:
+        from repro.serving.runtime import MultiTenantServer, Request
+        replay = ReplayBackend(profiles, sleep=True)
+        reqs = {n: [Request(rid=i, tokens=np.zeros(1, np.int32), tenant=n)
+                    for i in range(int(traces[n].sum()) + 8)]
+                for n in mt.names}
+        server = MultiTenantServer(mt, backend=replay, admission=admission)
+        done = server.run_trace(reqs, traces)
+        print("\nREPLAY stress (wall clock, shared fleet):")
+        for n in mt.names:
+            lats = np.array([r.latency for r in done[n]]) \
+                if done[n] else np.zeros(0)
+            p95 = np.quantile(lats, .95) * 1e3 if len(lats) else float("nan")
+            print(f"  {n}: {len(done[n])} done shed={server.shed_counts[n]} "
+                  f"p95={p95:.1f}ms "
+                  f"switches={len(server.gear_switches[n])}")
+        return
+    sim_backend = ReplayBackend(profiles)
+    sim = ServingSimulator(profiles, mt.replicas, hw.num_devices,
+                           backend=sim_backend)
+    results = sim.run_multi_tenant(mt, traces, admission=admission)
+    print("\nsimulated (shared fleet):")
+    for spec in tenants:
+        r = results[spec.name]
+        print(f"  {spec.name}: {r.result.completed}/{r.offered} done "
+              f"shed={r.shed} ({100 * r.shed_rate:.1f}%) "
+              f"p95={r.p95 * 1e3:.0f}ms acc={r.accuracy:.4f} "
+              f"switches={len(r.result.gear_switches)}")
+
+
 def tiny_backend(artifact: str) -> EngineBackend:
     """EngineBackend over the trained tiny family (token/label pools
     attached so any driver can execute from sample ids alone; profiles
@@ -83,6 +151,9 @@ def main() -> None:
     ap.add_argument("--artifact",
                     default="benchmarks/artifacts/tiny_family.npz")
     ap.add_argument("--plan-out", default="")
+    ap.add_argument("--tenants", default="",
+                    help="multi-tenant mode (DESIGN.md §11): comma-"
+                         "separated name:slokind:value:qps_max[:weight]")
     args = ap.parse_args()
 
     if args.workload == "tiny":
@@ -102,6 +173,13 @@ def main() -> None:
     slo = parse_slo(args.slo)
     hw = HardwareSpec(num_devices=args.devices,
                       mem_per_device=args.mem_per_device)
+
+    if args.tenants:
+        trace_fn = diurnal_like_trace if args.trace == "diurnal" \
+            else azure_like_trace
+        serve_multitenant(args, profiles, hw, trace_fn)
+        return
+
     report = optimize_gear_plan(profiles, hw, slo, qps_max=qps_max,
                                 n_ranges=args.n_ranges)
     plan = report.plan

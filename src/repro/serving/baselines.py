@@ -250,3 +250,68 @@ class CocktailPlusPolicy(BaselinePolicy):
             t_prev, k_prev = t, k
         total += (result.horizon - t_prev) * (k_prev + 1)
         return total / result.horizon
+
+
+# ---------------------------------------------------------------------------
+# Static per-tenant partitioning (multi-tenant control, core/tenancy.py)
+# ---------------------------------------------------------------------------
+
+def partition_devices(tenants, num_devices: int) -> Dict[str, int]:
+    """Weight-proportional static device split (largest remainder, every
+    tenant at least one device — it is a PARTITIONING baseline: dedicated
+    hardware per tenant, no sharing). Deterministic: remainder ties break
+    by tenant order."""
+    tenants = list(tenants)
+    n = len(tenants)
+    if num_devices < n:
+        raise ValueError(
+            f"cannot partition {num_devices} devices across {n} tenants "
+            f"(one device minimum each)")
+    wsum = sum(max(t.weight, 0.0) for t in tenants)
+    if wsum <= 0:
+        shares = [num_devices / n] * n
+    else:
+        shares = [num_devices * max(t.weight, 0.0) / wsum for t in tenants]
+    base = [max(1, int(s)) for s in shares]
+    while sum(base) > num_devices:       # min-1 guarantee overshot
+        i = max(range(n), key=lambda j: base[j])
+        base[i] -= 1
+    rem = num_devices - sum(base)
+    frac = sorted(range(n), key=lambda j: (-(shares[j] - int(shares[j])), j))
+    for k in range(rem):
+        base[frac[k % n]] += 1
+    return {t.name: b for t, b in zip(tenants, base)}
+
+
+@dataclass
+class StaticPartitionPolicy:
+    """The obvious multi-tenant control: carve the fleet into per-tenant
+    static partitions (weight-proportional) and run an independent
+    single-tenant CascadeServe plan inside each. No capacity is ever
+    borrowed across tenants — one tenant's flash crowd is confined to its
+    own slice, and its idle headroom is wasted. ``build_plans`` returns,
+    per tenant, the partition plan wrapped as a single-tenant
+    ``MultiTenantPlan`` (so the benchmark runs both arms through the same
+    executor + admission machinery — the comparison isolates sharing) plus
+    its partition's ``HardwareSpec``."""
+
+    def build_plans(self, profiles: ProfileSet, hw: HardwareSpec, tenants,
+                    sim_cfg=None, seed: int = 0, fast_path: bool = True,
+                    max_calls: int = 200) -> Dict[str, Tuple]:
+        from repro.core.planner import optimize_gear_plan
+        from repro.core.simulator import SimConfig
+        from repro.core.tenancy import single_tenant_plan
+        parts = partition_devices(tenants, hw.num_devices)
+        out: Dict[str, Tuple] = {}
+        for t in tenants:
+            hw_t = HardwareSpec(num_devices=parts[t.name],
+                                mem_per_device=hw.mem_per_device,
+                                chips_per_device=hw.chips_per_device)
+            report = optimize_gear_plan(
+                profiles, hw_t, t.slo, t.qps_max, n_ranges=t.n_ranges,
+                qps_prior=np.asarray(t.qps_prior, np.float64)
+                if t.qps_prior is not None else None,
+                sim_cfg=sim_cfg if sim_cfg is not None else SimConfig(),
+                seed=seed, max_calls=max_calls, fast_path=fast_path)
+            out[t.name] = (single_tenant_plan(t, report), hw_t, report)
+        return out

@@ -1,0 +1,217 @@
+"""Admission control (core/admission.py): downgrade, deadline shedding,
+weighted-fair sharing — incl. the edge cases: zero-weight tenant, QPS
+exactly on a range boundary, infeasible-cheapest-gear shedding, and
+all-tenants-overloaded capacity conservation."""
+import numpy as np
+import pytest
+
+from repro.core import SLO
+from repro.core.admission import (AdmissionConfig, AdmissionController,
+                                  cheapest_gear_index, fleet_capacities,
+                                  gear_capacity, weighted_fair_shares)
+from repro.core.cascade import Cascade
+from repro.core.gears import GearPlan
+from repro.core.lp import Replica
+from repro.core.simulator import make_gear
+from repro.core.tenancy import MultiTenantPlan, TenantSpec
+
+
+def _mt_two_tenants(rt=1e-3, slo_a=None, slo_b=None, w_a=1.0, w_b=1.0,
+                    qps_a=400.0, qps_b=400.0):
+    """Two single-model tenants over 2 shared replicas of 'm' (fleet
+    capacity = 2/rt samples/s, exactly computable)."""
+    reps = [Replica("m", 0, rt), Replica("m", 1, rt)]
+    slo_a = slo_a or SLO(kind="latency", latency_p95=0.5)
+    slo_b = slo_b or SLO(kind="latency", latency_p95=0.5)
+    specs = [TenantSpec("a", slo_a, qps_a, weight=w_a, n_ranges=1),
+             TenantSpec("b", slo_b, qps_b, weight=w_b, n_ranges=1)]
+
+    def plan(slo):
+        return GearPlan(qps_max=qps_a, gears=[
+            make_gear(Cascade(("m",), ()), reps)], replicas=reps,
+            num_devices=2, slo=slo)
+
+    return MultiTenantPlan(
+        tenants=specs, plans={"a": plan(slo_a), "b": plan(slo_b)},
+        gear_demand={"a": [{"m": 1.0}], "b": [{"m": 1.0}]})
+
+
+def test_capacity_model():
+    reps = [Replica("m", 0, 1e-3), Replica("m", 1, 2e-3),
+            Replica("n", 0, 1e-2)]
+    caps = fleet_capacities(reps)
+    assert caps["m"] == pytest.approx(1500.0)
+    assert caps["n"] == pytest.approx(100.0)
+    # a cascade sending 10% of traffic to the slow model bottlenecks there
+    assert gear_capacity({"m": 1.0, "n": 0.1}, caps) == pytest.approx(1000.0)
+    assert gear_capacity({"m": 1.0}, caps) == pytest.approx(1500.0)
+
+
+def test_cheapest_gear_prefers_higher_throughput():
+    reps = [Replica("cheap", 0, 1e-3), Replica("heavy", 1, 1e-2)]
+    g_heavy = make_gear(Cascade(("heavy",), ()), reps)
+    g_cheap = make_gear(Cascade(("cheap",), ()), reps)
+    plan = GearPlan(qps_max=100.0, gears=[g_heavy, g_cheap],
+                    replicas=reps, num_devices=2,
+                    slo=SLO(kind="latency", latency_p95=1.0))
+    assert cheapest_gear_index(plan, [{"heavy": 1.0}, {"cheap": 1.0}]) == 1
+
+
+# ---------------------------------------------------------------------------
+# weighted-fair water-fill
+# ---------------------------------------------------------------------------
+
+def test_fair_shares_no_contention_everyone_keeps_need():
+    alloc = weighted_fair_shares({"a": 0.3, "b": 0.4},
+                                 {"a": 1.0, "b": 1.0})
+    assert alloc == {"a": 0.3, "b": 0.4}
+
+
+def test_fair_shares_all_overloaded_sum_to_capacity():
+    needs = {"a": 2.0, "b": 1.5, "c": 3.0}
+    weights = {"a": 2.0, "b": 1.0, "c": 1.0}
+    alloc = weighted_fair_shares(needs, weights, capacity=1.0)
+    assert sum(alloc.values()) == pytest.approx(1.0)
+    # proportional when everyone stays unsatisfied
+    assert alloc["a"] == pytest.approx(0.5)
+    assert alloc["b"] == pytest.approx(0.25)
+    assert alloc["c"] == pytest.approx(0.25)
+
+
+def test_fair_shares_surplus_water_fills():
+    # a needs little: its unused share flows to the others by weight
+    alloc = weighted_fair_shares({"a": 0.1, "b": 5.0, "c": 5.0},
+                                 {"a": 1.0, "b": 1.0, "c": 3.0})
+    assert alloc["a"] == pytest.approx(0.1)
+    assert alloc["b"] == pytest.approx(0.9 * 0.25)
+    assert alloc["c"] == pytest.approx(0.9 * 0.75)
+    assert sum(alloc.values()) == pytest.approx(1.0)
+
+
+def test_fair_shares_zero_weight_is_best_effort():
+    # zero-weight tenant gets nothing while weighted tenants are hungry...
+    alloc = weighted_fair_shares({"a": 2.0, "z": 2.0},
+                                 {"a": 1.0, "z": 0.0})
+    assert alloc["a"] == pytest.approx(1.0)
+    assert alloc["z"] == pytest.approx(0.0)
+    # ...and only the leftover when they are not
+    alloc2 = weighted_fair_shares({"a": 0.25, "z": 2.0},
+                                  {"a": 1.0, "z": 0.0})
+    assert alloc2["a"] == pytest.approx(0.25)
+    assert alloc2["z"] == pytest.approx(0.75)
+
+
+# ---------------------------------------------------------------------------
+# controller edge cases (satellite checklist)
+# ---------------------------------------------------------------------------
+
+def test_boundary_qps_is_not_engaged():
+    mt = _mt_two_tenants()
+    ac = AdmissionController(mt)
+    # sitting EXACTLY on qps_max is still inside the planned range
+    d = ac.on_tick(0.1, {"a": 400.0, "b": 0.0}, {"a": 0, "b": 0})
+    assert not d["a"].engaged
+    assert not d["a"].force_cheapest
+    assert d["a"].admit_fraction == 1.0
+    # one epsilon beyond engages the downgrade
+    d = ac.on_tick(0.2, {"a": 400.0 + 1e-6, "b": 0.0}, {"a": 0, "b": 0})
+    assert d["a"].engaged and d["a"].force_cheapest
+
+
+def test_disengage_needs_sustained_in_range_ticks():
+    mt = _mt_two_tenants()
+    ac = AdmissionController(mt, AdmissionConfig(disengage_ticks=3))
+    ac.on_tick(0.1, {"a": 900.0, "b": 0.0}, {"a": 0, "b": 0})
+    assert ac.decision("a").engaged
+    for k in range(2):      # two in-range ticks: still held
+        d = ac.on_tick(0.2 + k * 0.1, {"a": 100.0, "b": 0.0},
+                       {"a": 0, "b": 0})
+        assert d["a"].engaged
+    d = ac.on_tick(0.5, {"a": 100.0, "b": 0.0}, {"a": 0, "b": 0})
+    assert not d["a"].engaged
+
+
+def test_zero_weight_tenant_is_shed_first_under_overload():
+    # fleet capacity 2000; both tenants offer 2000 -> weighted tenant keeps
+    # the fleet, zero-weight tenant is fully shed
+    mt = _mt_two_tenants(rt=1e-3, w_a=1.0, w_b=0.0, qps_a=400.0,
+                         qps_b=400.0)
+    ac = AdmissionController(mt)
+    d = ac.on_tick(0.1, {"a": 2000.0, "b": 2000.0}, {"a": 0, "b": 0})
+    assert d["a"].admit_fraction == pytest.approx(1.0)
+    assert d["b"].admit_fraction == pytest.approx(0.0, abs=1e-9)
+    admitted_b = sum(ac.admit("b") for _ in range(100))
+    assert admitted_b == 0
+    assert ac.shed_counts["b"] == 100
+
+
+def test_all_tenants_overloaded_split_sums_to_capacity():
+    # capacity 2000 samples/s; both overloaded far beyond it: admitted
+    # rates must sum to the fleet capacity (weighted 3:1), never above
+    mt = _mt_two_tenants(rt=1e-3, w_a=3.0, w_b=1.0)
+    ac = AdmissionController(mt)
+    d = ac.on_tick(0.1, {"a": 4000.0, "b": 4000.0}, {"a": 0, "b": 0})
+    admitted = {n: d[n].admit_fraction * 4000.0 for n in ("a", "b")}
+    assert sum(admitted.values()) == pytest.approx(2000.0, rel=1e-6)
+    assert admitted["a"] == pytest.approx(1500.0, rel=1e-6)
+    assert admitted["b"] == pytest.approx(500.0, rel=1e-6)
+    assert d["a"].engaged and d["b"].engaged
+
+
+def test_shed_all_when_cheapest_gear_cannot_meet_latency_slo():
+    # service time 50ms > SLO 10ms: no request can EVER meet the deadline
+    mt = _mt_two_tenants(rt=5e-2,
+                         slo_a=SLO(kind="latency", latency_p95=0.01))
+    ac = AdmissionController(mt)
+    d = ac.on_tick(0.1, {"a": 10.0, "b": 10.0}, {"a": 0, "b": 0})
+    assert d["a"].shed_all
+    assert d["a"].admit_fraction == 0.0
+    assert not ac.admit("a")
+    # tenant b's looser SLO (500ms) is servable
+    assert not d["b"].shed_all
+    assert ac.admit("b")
+    # with deadline shedding disabled, the infeasible tenant is admitted
+    ac2 = AdmissionController(mt, AdmissionConfig(deadline_shed=False))
+    d2 = ac2.on_tick(0.1, {"a": 10.0, "b": 10.0}, {"a": 0, "b": 0})
+    assert not d2["a"].shed_all and ac2.admit("a")
+
+
+def test_credit_accumulator_spreads_sheds_deterministically():
+    mt = _mt_two_tenants()
+    ac = AdmissionController(mt)
+    ac.on_tick(0.1, {"a": 4000.0, "b": 4000.0}, {"a": 0, "b": 0})
+    frac = ac.decision("a").admit_fraction
+    outcomes = [ac.admit("a") for _ in range(1000)]
+    assert sum(outcomes) == pytest.approx(1000 * frac, abs=1)
+    # deterministic: a fresh controller replays the identical sequence
+    ac2 = AdmissionController(mt)
+    ac2.on_tick(0.1, {"a": 4000.0, "b": 4000.0}, {"a": 0, "b": 0})
+    assert [ac2.admit("a") for _ in range(1000)] == outcomes
+
+
+def test_in_range_tenant_protected_during_neighbor_flash_crowd():
+    # a spikes to 10x; b stays in range: b keeps full admission, a is
+    # clamped to the residual capacity
+    mt = _mt_two_tenants(rt=1e-3, qps_a=400.0, qps_b=400.0)
+    ac = AdmissionController(mt)
+    d = ac.on_tick(0.1, {"a": 4000.0, "b": 300.0}, {"a": 0, "b": 0})
+    assert d["b"].admit_fraction == pytest.approx(1.0)
+    assert not d["b"].force_cheapest
+    a_admitted = d["a"].admit_fraction * 4000.0
+    assert a_admitted == pytest.approx(2000.0 - 300.0, rel=1e-6)
+
+
+def test_in_range_tenant_never_shed_even_at_low_weight():
+    """An in-plan tenant's capacity is RESERVED, not fair-shared: a
+    low-weight tenant inside its contract keeps full admission even when
+    a high-weight neighbor's crowd would out-bid it in the water-fill
+    (regression: fair-sharing over all tenants shed ~17% of b here)."""
+    mt = _mt_two_tenants(rt=1e-3, w_a=3.0, w_b=1.0, qps_a=400.0,
+                         qps_b=700.0)
+    ac = AdmissionController(mt)
+    d = ac.on_tick(0.1, {"a": 10000.0, "b": 600.0}, {"a": 0, "b": 0})
+    assert not d["b"].engaged
+    assert d["b"].admit_fraction == pytest.approx(1.0)
+    # the engaged tenant receives exactly the residual capacity
+    assert d["a"].admit_fraction * 10000.0 == \
+        pytest.approx(2000.0 - 600.0, rel=1e-6)

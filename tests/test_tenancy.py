@@ -1,0 +1,377 @@
+"""Multi-tenant serving (core/tenancy.py): per-tenant gear plans over one
+shared placement, tenant determinism, executor parity, per-tenant
+re-planning, and the serialization round trips for the tenant types."""
+import numpy as np
+import pytest
+
+from repro.core import (DecisionTrace, HardwareSpec, RoutePool, SLO,
+                        ServingSimulator, SimConfig)
+from repro.core.gears import Gear, GearPlan
+from repro.core.lp import Replica
+from repro.core.cascade import Cascade
+from repro.core.simulator import make_gear
+from repro.core.tenancy import (MultiTenantPlan, TenantSpec,
+                                effective_trigger, make_tenant_lifecycles,
+                                merge_tenant_arrivals, plan_multi_tenant,
+                                single_tenant_plan)
+
+
+@pytest.fixture(scope="module")
+def small_family():
+    from repro.core.profiles import synthetic_family
+    return synthetic_family(["tiny", "small", "base"], base_runtime=2e-4,
+                            runtime_ratio=2.4, base_acc=0.70,
+                            acc_gain=0.06, mem_base=0.4e9, seed=3)
+
+
+@pytest.fixture(scope="module")
+def two_tenants():
+    return [
+        TenantSpec("interactive", SLO(kind="latency", latency_p95=0.5),
+                   qps_max=400.0, weight=2.0, n_ranges=2),
+        TenantSpec("analytics", SLO(kind="latency", latency_p95=1.0),
+                   qps_max=200.0, weight=1.0, n_ranges=2),
+    ]
+
+
+@pytest.fixture(scope="module")
+def mt_report(small_family, two_tenants):
+    hw = HardwareSpec(num_devices=2, mem_per_device=16e9)
+    return plan_multi_tenant(small_family, hw, two_tenants), hw
+
+
+# ---------------------------------------------------------------------------
+# Validation + serialization (satellite: ValueErrors + tenant round trips)
+# ---------------------------------------------------------------------------
+
+def test_slo_validation_raises_valueerror():
+    with pytest.raises(ValueError, match="kind"):
+        SLO(kind="throughput")
+    with pytest.raises(ValueError, match="latency_p95"):
+        SLO(kind="latency")
+    with pytest.raises(ValueError, match="positive"):
+        SLO(kind="latency", latency_p95=-0.1)
+    with pytest.raises(ValueError, match="min_accuracy"):
+        SLO(kind="accuracy")
+    with pytest.raises(ValueError, match="min_accuracy"):
+        SLO(kind="accuracy", min_accuracy=1.5)
+
+
+def test_gear_and_plan_validation_raises_valueerror():
+    reps = [Replica("a", 0, 1e-3)]
+    with pytest.raises(ValueError, match="min queue"):
+        Gear(cascade=Cascade(("a",), ()), min_queue_lens={"a": 0},
+             load_fractions={})
+    with pytest.raises(ValueError, match="load fraction"):
+        Gear(cascade=Cascade(("a",), ()), min_queue_lens={"a": 1},
+             load_fractions={"a": {0: -0.5}})
+    g = make_gear(Cascade(("a",), ()), reps)
+    with pytest.raises(ValueError, match="qps_max"):
+        GearPlan(qps_max=0.0, gears=[g], replicas=reps, num_devices=1,
+                 slo=SLO(kind="latency", latency_p95=1.0))
+    with pytest.raises(ValueError, match="at least one gear"):
+        GearPlan(qps_max=10.0, gears=[], replicas=reps, num_devices=1,
+                 slo=SLO(kind="latency", latency_p95=1.0))
+
+
+def test_tenant_spec_validation_and_roundtrip():
+    with pytest.raises(ValueError, match="name"):
+        TenantSpec("", SLO(kind="latency", latency_p95=1.0), 100.0)
+    with pytest.raises(ValueError, match="qps_max"):
+        TenantSpec("t", SLO(kind="latency", latency_p95=1.0), 0.0)
+    with pytest.raises(ValueError, match="weight"):
+        TenantSpec("t", SLO(kind="latency", latency_p95=1.0), 10.0,
+                   weight=-1.0)
+    with pytest.raises(ValueError, match="qps_prior"):
+        TenantSpec("t", SLO(kind="latency", latency_p95=1.0), 10.0,
+                   n_ranges=4, qps_prior=(0.5, 0.5))
+    spec = TenantSpec("t", SLO(kind="accuracy", min_accuracy=0.8), 123.0,
+                      weight=0.0, n_ranges=2, qps_prior=(0.75, 0.25))
+    back = TenantSpec.from_dict(spec.to_dict())
+    assert back == spec
+    assert back.slo.kind == "accuracy" and back.slo.min_accuracy == 0.8
+
+
+def test_multitenant_plan_roundtrip_covers_tenant_fields(mt_report):
+    (report, hw) = mt_report
+    mt = report.plan
+    back = MultiTenantPlan.from_json(mt.to_json())
+    assert back.names == mt.names
+    assert back.tenants == mt.tenants        # specs incl. SLO round-trip
+    assert back.gear_demand == mt.gear_demand
+    for n in mt.names:
+        # full nested GearPlan round trip (gears, SLO, replicas,
+        # provenance) — the plan dicts must be reconstructed exactly
+        assert back.plans[n].to_dict() == mt.plans[n].to_dict()
+    # shared placement survives the round trip
+    assert [(r.model, r.device) for r in back.replicas] == \
+        [(r.model, r.device) for r in mt.replicas]
+
+
+def test_multitenant_plan_rejects_split_placement(small_family):
+    reps_a = [Replica("tiny", 0, 1e-3)]
+    reps_b = [Replica("tiny", 1, 1e-3)]
+    slo = SLO(kind="latency", latency_p95=1.0)
+    mk = lambda reps: GearPlan(
+        qps_max=10.0, gears=[make_gear(Cascade(("tiny",), ()), reps)],
+        replicas=reps, num_devices=2, slo=slo)
+    specs = [TenantSpec("a", slo, 10.0), TenantSpec("b", slo, 10.0)]
+    with pytest.raises(ValueError, match="share the placement"):
+        MultiTenantPlan(tenants=specs,
+                        plans={"a": mk(reps_a), "b": mk(reps_b)})
+    with pytest.raises(ValueError, match="duplicate"):
+        MultiTenantPlan(tenants=[specs[0], specs[0]],
+                        plans={"a": mk(reps_a)})
+
+
+# ---------------------------------------------------------------------------
+# Planner extension: joint placement + pinned per-tenant ladders
+# ---------------------------------------------------------------------------
+
+def test_joint_plan_shares_one_placement(mt_report):
+    (report, hw) = mt_report
+    mt = report.plan
+    ref = [(r.model, r.device) for r in mt.replicas]
+    for n in mt.names:
+        assert [(r.model, r.device) for r in mt.plans[n].replicas] == ref
+        # per-tenant provenance: each ladder watches its own assumptions
+        assert mt.plans[n].provenance is not None
+        assert mt.plans[n].provenance.qps_max == mt.spec(n).qps_max
+    # demand coefficients: first model of each gear carries full traffic
+    for n in mt.names:
+        for gi, demand in enumerate(mt.gear_demand[n]):
+            first = mt.plans[n].gears[gi].cascade.models[0]
+            assert demand[first] == pytest.approx(1.0)
+    # the pinned pass recorded a warm state per tenant (re-plan seed)
+    assert set(report.reports) == set(mt.names)
+    assert all(report.reports[n].state is not None for n in mt.names)
+
+
+# ---------------------------------------------------------------------------
+# Determinism: keyed RNG streams + tenant insertion
+# ---------------------------------------------------------------------------
+
+def test_route_pool_keyed_streams_are_independent():
+    # keyed pools derive from (seed, key), not from construction order or
+    # other pools' consumption
+    a1 = RoutePool(7, size=64, key="alpha")
+    b = RoutePool(7, size=64, key="beta")
+    seq_interleaved = []
+    for _ in range(32):
+        seq_interleaved.append(a1.next())
+        b.next()          # consuming beta must not shift alpha
+    a2 = RoutePool(7, size=64, key="alpha")
+    seq_solo = [a2.next() for _ in range(32)]
+    assert seq_interleaved == seq_solo
+    # distinct keys give distinct streams; key=None is the legacy stream
+    assert RoutePool(7, size=64, key="alpha")._pool != \
+        RoutePool(7, size=64, key="beta")._pool
+    legacy = np.random.default_rng(7).random(64).tolist()
+    assert RoutePool(7, size=64)._pool == legacy
+
+
+def test_inserting_idle_tenant_leaves_decisions_unchanged(mt_report,
+                                                          small_family):
+    """THE tenancy determinism contract: adding a tenant (here with no
+    traffic, so shared-queue physics are unchanged) must leave every other
+    tenant's decision trace bit-identical — per-tenant cores, keyed route
+    streams, and per-tenant measurement make the loop insertion-stable."""
+    (report, hw) = mt_report
+    mt = report.plan
+    solo = single_tenant_plan(mt.spec("interactive"),
+                              report.reports["interactive"])
+    trace = np.concatenate([np.full(3, 100.0), np.full(3, 380.0),
+                            np.full(3, 100.0)])
+    sim = ServingSimulator(small_family, mt.replicas, hw.num_devices,
+                           SimConfig(max_batch=128))
+
+    tr1 = {"interactive": DecisionTrace()}
+    r1 = sim.run_multi_tenant(solo, {"interactive": trace},
+                              decision_traces=tr1)
+    tr2 = {"interactive": DecisionTrace(), "analytics": DecisionTrace()}
+    r2 = sim.run_multi_tenant(
+        mt, {"interactive": trace, "analytics": np.zeros(9)},
+        decision_traces=tr2)
+
+    a, b = tr1["interactive"], tr2["interactive"]
+    assert a.routes == b.routes
+    assert a.gear_switches == b.gear_switches
+    assert a.hops == b.hops
+    assert r1["interactive"].result.completed == \
+        r2["interactive"].result.completed
+    np.testing.assert_array_equal(r1["interactive"].result.latencies,
+                                  r2["interactive"].result.latencies)
+    # the idle tenant exists but saw nothing
+    assert r2["analytics"].offered == 0
+
+
+def test_effective_trigger_ignores_absent_tenants(small_family):
+    reps = [Replica("tiny", 0, 1e-3)]
+    eager = make_gear(Cascade(("tiny",), ()), reps, {"tiny": 2})
+    lazy = make_gear(Cascade(("tiny",), ()), reps, {"tiny": 16})
+    # only tenants with queued samples count; min wins among those
+    assert effective_trigger("tiny", [0, 3], [eager, lazy]) == 16
+    assert effective_trigger("tiny", [1, 3], [eager, lazy]) == 2
+    assert effective_trigger("tiny", [0, 0], [eager, lazy]) == 1
+
+
+def test_merge_tenant_arrivals_stable_ties():
+    times, tidx, lidx = merge_tenant_arrivals(
+        {"a": np.array([2.0]), "b": np.array([2.0])}, ["a", "b"])
+    # equal per-second rates arrive at identical offsets: tenant order
+    # breaks the tie deterministically
+    assert times.tolist() == [0.25, 0.25, 0.75, 0.75]
+    assert tidx.tolist() == [0, 1, 0, 1]
+    assert lidx.tolist() == [0, 0, 1, 1]
+
+
+# ---------------------------------------------------------------------------
+# Executor parity: simulator vs MultiTenantServer (virtual time)
+# ---------------------------------------------------------------------------
+
+class _ReplayEngine:
+    def __init__(self, certs):
+        self.certs = np.asarray(certs, np.float64)
+
+    def infer(self, tokens):
+        vi = np.asarray(tokens)[:, 0] % len(self.certs)
+        out = np.zeros((len(vi), 2))
+        out[:, 0] = self.certs[vi]
+        return out
+
+
+def _cert_estimator(scores):
+    return scores[:, 0]
+
+
+def test_multitenant_executors_make_identical_decisions(mt_report,
+                                                        small_family):
+    """The fidelity contract extended to tenancy: the DES and the real
+    runtime (virtual time), fed the same superposed tenant traces and the
+    same admission controller, must record element-wise identical
+    per-tenant decision traces AND fleet-level batch firings."""
+    from repro.core import AdmissionController
+    from repro.serving.runtime import MultiTenantServer, Request
+
+    (report, hw) = mt_report
+    mt = report.plan
+    profiles = small_family
+    traces = {"interactive": np.concatenate([np.full(3, 100.0),
+                                             np.full(3, 900.0),
+                                             np.full(3, 100.0)]),
+              "analytics": np.full(9, 150.0)}
+
+    tr_sim = {n: DecisionTrace() for n in mt.names}
+    fleet_sim = DecisionTrace()
+    sim = ServingSimulator(profiles, mt.replicas, hw.num_devices,
+                           SimConfig(max_batch=128))
+    out = sim.run_multi_tenant(mt, traces,
+                               admission=AdmissionController(mt),
+                               decision_traces=tr_sim,
+                               fleet_trace=fleet_sim)
+
+    times, tidx, lidx = merge_tenant_arrivals(traces, mt.names)
+    reqs = {n: [None] * int((tidx == i).sum())
+            for i, n in enumerate(mt.names)}
+    for g in range(len(times)):
+        n = mt.names[int(tidx[g])]
+        reqs[n][int(lidx[g])] = Request(
+            rid=g, tokens=np.array([int(lidx[g])], np.int64))
+    pools = {n: RoutePool.for_arrivals(0, len(reqs[n]), key=n)
+             for n in mt.names}
+    tr_srv = {n: DecisionTrace() for n in mt.names}
+    fleet_srv = DecisionTrace()
+    engines = {m: _ReplayEngine(profiles[m].validation.certs)
+               for m in profiles}
+    srv = MultiTenantServer(mt, engines, estimator=_cert_estimator,
+                            max_batch=128,
+                            admission=AdmissionController(mt),
+                            decision_traces=tr_srv, fleet_trace=fleet_srv,
+                            route_pools=pools)
+    done = srv.run_virtual(reqs, traces,
+                           batch_runtime=lambda m, b: profiles[m].runtime(b))
+
+    # the scenario exercises every decision type in both tenants
+    assert len(tr_sim["interactive"].gear_switches) >= 2
+    assert len(fleet_sim.fires) > 10
+    assert any(h[2] != "resolve" for h in tr_sim["interactive"].hops)
+
+    for n in mt.names:
+        assert tr_sim[n].routes == tr_srv[n].routes
+        assert tr_sim[n].gear_switches == tr_srv[n].gear_switches
+        assert tr_sim[n].hops == tr_srv[n].hops
+    assert fleet_sim.fires == fleet_srv.fires
+    for n in mt.names:
+        assert out[n].result.completed == len(done[n])
+        assert out[n].shed == srv.shed_counts[n]
+
+
+# ---------------------------------------------------------------------------
+# Per-tenant re-planning: only the drifted tenant's ladder moves
+# ---------------------------------------------------------------------------
+
+def test_only_drifted_tenant_replans(mt_report, small_family):
+    from repro.core import MonitorConfig
+
+    (report, hw) = mt_report
+    mt = report.plan
+    lcs = make_tenant_lifecycles(
+        report, small_family, hw,
+        monitor_cfg=MonitorConfig(qps_sustain_ticks=3, cooldown=60.0),
+        plan_latency=0.5)
+    sim = ServingSimulator(small_family, mt.replicas, hw.num_devices,
+                           SimConfig())
+    # interactive rides to 2x its qps_max; analytics stays in range
+    traces = {"interactive": np.concatenate([np.full(2, 300.0),
+                                             np.full(6, 800.0),
+                                             np.full(4, 300.0)]),
+              "analytics": np.full(12, 100.0)}
+    out = sim.run_multi_tenant(mt, traces, lifecycles=lcs)
+
+    drifted, steady = lcs["interactive"], lcs["analytics"]
+    assert len(drifted.swaps) >= 1
+    assert drifted.swaps[0].reason == "qps-exceeds-range"
+    assert drifted.active.plan.qps_max > mt.spec("interactive").qps_max
+    # the placement stayed pinned through the tenant re-plan
+    assert [(r.model, r.device) for r in drifted.active.plan.replicas] == \
+        [(r.model, r.device) for r in mt.replicas]
+    # the steady tenant's plan is untouched (no swap, same object)
+    assert not steady.swaps
+    assert steady.active.plan is mt.plans["analytics"]
+    assert out["interactive"].result.plan_swaps
+    assert not out["analytics"].result.plan_swaps
+
+
+# ---------------------------------------------------------------------------
+# Static partitioning control
+# ---------------------------------------------------------------------------
+
+def test_partition_devices_weight_proportional():
+    from repro.serving.baselines import partition_devices
+    slo = SLO(kind="latency", latency_p95=1.0)
+    ts = [TenantSpec("a", slo, 10.0, weight=3.0),
+          TenantSpec("b", slo, 10.0, weight=1.0)]
+    assert partition_devices(ts, 4) == {"a": 3, "b": 1}
+    # minimum one device each, even at weight 0
+    ts0 = [TenantSpec("a", slo, 10.0, weight=1.0),
+           TenantSpec("b", slo, 10.0, weight=0.0)]
+    assert partition_devices(ts0, 2) == {"a": 1, "b": 1}
+    with pytest.raises(ValueError, match="partition"):
+        partition_devices(ts, 1)
+
+
+def test_static_partition_builds_independent_plans(small_family,
+                                                   two_tenants):
+    from repro.serving.baselines import StaticPartitionPolicy
+    hw = HardwareSpec(num_devices=2, mem_per_device=16e9)
+    built = StaticPartitionPolicy().build_plans(small_family, hw,
+                                                two_tenants)
+    assert set(built) == {"interactive", "analytics"}
+    total = 0
+    for n, (mt1, hw_t, rep) in built.items():
+        assert mt1.names == [n]
+        assert mt1.num_devices == hw_t.num_devices
+        total += hw_t.num_devices
+        # each partition plan is servable on its own slice
+        assert all(r.device < hw_t.num_devices for r in mt1.replicas)
+    assert total == hw.num_devices
