@@ -48,12 +48,13 @@ def plan_sig(report):
 
 
 def timed_plan(profiles, hw, slo, qps_max, n_ranges, cfg, fast,
-               warm=None, prior=None, pinned=None):
+               warm=None, prior=None, pinned=None, num_seeds=1):
     t0 = time.perf_counter()
     rep = optimize_gear_plan(profiles, hw, slo, qps_max=qps_max,
                              n_ranges=n_ranges, sim_cfg=cfg,
                              qps_prior=prior, pinned_replicas=pinned,
-                             warm_state=warm, fast_path=fast)
+                             warm_state=warm, fast_path=fast,
+                             num_seeds=num_seeds)
     return time.perf_counter() - t0, rep
 
 
@@ -71,6 +72,20 @@ def run_workload(res: Results, name: str, profiles, hw, slo, qps_max,
             certify_s=round(rf.certify_seconds, 3))
     res.add(f"{name}_cold_speedup", round(t_lc / max(t_fc, 1e-9), 2),
             plans_identical=bool(plan_sig(rl) == plan_sig(rf)))
+
+    # certify=mc: distributional certification (DESIGN.md §12) — the same
+    # cold plan, but every range's p95 verdict is additionally scored over
+    # 32 arrival seeds in one lane-batched vecsim call per range. The plan
+    # itself must be identical to the point-estimate certifier's; the row
+    # tracks what the (mean, CI) provenance upgrade costs on top.
+    t_mc, rm = timed_plan(profiles, hw, slo, qps_max, n_ranges, cfg, True,
+                          num_seeds=32)
+    wide = max((ci for _, ci in rm.plan.provenance.mc_p95), default=0.0)
+    res.add(f"{name}_cold_mc_s", round(t_mc, 3),
+            certify="mc", num_seeds=32,
+            plans_identical=bool(plan_sig(rm) == plan_sig(rf)),
+            mc_overhead_s=round(t_mc - t_fc, 3),
+            max_range_ci_ms=round(wide * 1e3, 3))
 
     # drifted measured priors (load shifting toward the high ranges), the
     # re-plan flow of core/adaption.planner_replan_fn: pinned placement,

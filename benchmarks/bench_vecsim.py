@@ -1,0 +1,145 @@
+"""Lane-batched DES benchmark (core/vecsim.py, DESIGN.md §12).
+
+Two questions, one scenario:
+
+* per-sample cost — wall-clock per simulated sample for the scalar
+  ``ServingSimulator`` vs a single-lane ``VecSim`` run (the vectorized fast
+  paths must not make the 1-lane case slower than the engine it replaces);
+* certification speedup — a 32-seed Monte-Carlo certification pass as ONE
+  32-lane ``run_fixed_lanes`` call vs 32 sequential scalar runs (the ISSUE 6
+  target: >= 5x on the tiny workload). Both arms share one ReplayBackend
+  and are timed best-of-2 (first-call warmup holds the runtime-interp memo
+  and the vecsim route/resolve tables; the box's timing noise is ~15%).
+
+The scenario is a saturated large-trigger regime — sustained overload with
+deep batches is exactly where Monte-Carlo certification is bought (wide
+per-seed p95 spread) and where the lane engine's bulk arrival/completion
+paths carry the run. Lane 0 is asserted bit-identical to the scalar run
+(latencies + p95), so the speedup is never purchased with drift.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import Results
+from repro.core.cascade import Cascade
+from repro.core.execution import ReplayBackend
+from repro.core.lp import Replica
+from repro.core.profiles import synthetic_family
+from repro.core.simulator import ServingSimulator, SimConfig, make_gear
+from repro.core.vecsim import VecSim, mc_summary
+
+N_SEEDS = 32
+
+
+def _world():
+    profiles = synthetic_family(
+        ["tiny", "mini", "base"], base_runtime=2e-4, runtime_ratio=2.4,
+        base_acc=0.70, acc_gain=0.06, mem_base=0.4e9, seed=3)
+    reps = [Replica(m, d, profiles[m].runtime_per_sample(1.0))
+            for d in range(2) for m in profiles]
+    return profiles, reps
+
+
+def _best_of(n, fn):
+    best, out = float("inf"), None
+    for _ in range(n):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def _run_pair(res: Results, tag: str, profiles, reps, cfg, gear, qps,
+              horizon, backlog):
+    backend = ReplayBackend(profiles)
+    seeds = list(range(N_SEEDS))
+    n_samples = int(qps * horizon) + backlog
+
+    def scalar_arm():
+        out = []
+        for s in seeds:
+            sim = ServingSimulator(profiles, reps, 2,
+                                   dataclasses.replace(cfg, seed=s),
+                                   backend=backend)
+            out.append(sim.run_fixed(gear, qps=qps, horizon=horizon,
+                                     warm_start_backlog=backlog))
+        return out
+
+    vec = VecSim(profiles, reps, 2, cfg, backend=backend)
+
+    def vec_arm():
+        return vec.run_fixed_lanes(gear, qps=qps, horizon=horizon,
+                                   warm_start_backlog=backlog, seeds=seeds)
+
+    t_scalar, res_s = _best_of(2, scalar_arm)
+    t_vec, res_v = _best_of(2, vec_arm)
+
+    # lane i must be bit-identical to the scalar run with seed i — the
+    # speedup claim is void if the engines diverge
+    bitmatch = all(
+        np.array_equal(a.latencies, b.latencies) and a.p95 == b.p95
+        for a, b in zip(res_s, res_v))
+    mean, ci = mc_summary([r.p95 for r in res_v])
+
+    total = N_SEEDS * n_samples
+    res.add(f"{tag}_scalar_us_per_sample",
+            round(t_scalar / total * 1e6, 3))
+    res.add(f"{tag}_vec_us_per_sample", round(t_vec / total * 1e6, 3))
+    res.add(f"{tag}_cert32_scalar_s", round(t_scalar, 3))
+    res.add(f"{tag}_cert32_vec_s", round(t_vec, 3))
+    res.add(f"{tag}_cert32_speedup", round(t_scalar / max(t_vec, 1e-9), 2),
+            bitmatch=bool(bitmatch), mc_p95_mean=round(mean, 5),
+            mc_p95_ci=round(ci, 5))
+    return bitmatch
+
+
+def _single_lane(res: Results, profiles, reps, cfg, gear, qps, horizon,
+                 backlog):
+    """1-lane overhead check: VecSim must not lose to the scalar engine on
+    the exact planner-shaped point run it replaces in MC mode's lane 0."""
+    backend = ReplayBackend(profiles)
+    sim = ServingSimulator(profiles, reps, 2, cfg, backend=backend)
+    vec = VecSim(profiles, reps, 2, cfg, backend=backend)
+    n = int(qps * horizon) + backlog
+    t_s, r_s = _best_of(2, lambda: sim.run_fixed(
+        gear, qps=qps, horizon=horizon, warm_start_backlog=backlog))
+    t_v, r_v = _best_of(2, lambda: vec.run_fixed(
+        gear, qps=qps, horizon=horizon, warm_start_backlog=backlog))
+    res.add("lane1_scalar_us_per_sample", round(t_s / n * 1e6, 3))
+    res.add("lane1_vec_us_per_sample", round(t_v / n * 1e6, 3),
+            bitmatch=bool(np.array_equal(r_s.latencies, r_v.latencies)))
+
+
+def main(quick: bool = False):
+    profiles, reps = _world()
+    res = Results("bench_vecsim", scenario={
+        "workload": "tiny-fingerprint-family", "devices": 2,
+        "replicas": len(reps), "n_seeds": N_SEEDS, "quick": bool(quick)})
+
+    if quick:
+        cfg = SimConfig(max_batch=256)
+        gear = make_gear(Cascade(("tiny", "base"), (0.35,)), reps,
+                         {"tiny": 128, "base": 96})
+        qps, horizon, backlog = 9000.0, 2.0, 2000
+    else:
+        cfg = SimConfig(max_batch=512)
+        gear = make_gear(Cascade(("tiny", "base"), (0.35,)), reps,
+                         {"tiny": 256, "base": 192})
+        qps, horizon, backlog = 9000.0, 2.0, 3000
+
+    ok = _run_pair(res, "cert", profiles, reps, cfg, gear, qps, horizon,
+                   backlog)
+    _single_lane(res, profiles, reps, cfg, gear, qps / 3, horizon,
+                 backlog // 3)
+    res.finish()
+    if not ok:
+        raise RuntimeError("vecsim lanes diverged from the scalar DES")
+    return res.rows
+
+
+if __name__ == "__main__":
+    main()

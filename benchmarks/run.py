@@ -21,6 +21,7 @@ BENCHES = [
     "bench_planner_quality",     # Fig. 10
     "bench_planner_cost",        # Fig. 11
     "bench_planner",             # fast-path planner: cold/warm plan timing
+    "bench_vecsim",              # lane-batched DES vs scalar + MC certify
     "bench_ablation",            # Fig. 12
     "bench_simulator_fidelity",  # Fig. 13 (REAL tiny models)
     "bench_fidelity",            # Fig. 13 via the ExecutionBackend layer

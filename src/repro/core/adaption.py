@@ -57,7 +57,7 @@ __all__ = ["MonitorConfig", "PlanMonitor", "ReplanTrigger", "PlanVersion",
 class ReplanTrigger:
     """One detected departure from the active plan's validity regime."""
     reason: str            # qps-exceeds-range | qps-distribution-drift |
-    #                        certainty-drift | device-loss
+    #                        certainty-drift | device-loss | latency-drift
     t: float
     measured_qps: float
     qps_window: Tuple[float, ...] = ()   # recent per-tick measurements
@@ -80,6 +80,14 @@ class MonitorConfig:
     # observed certainty mean vs the profile's validation mean, per model
     cert_drift_threshold: float = 0.10
     cert_min_samples: int = 2000
+    # observed p95 latency vs the plan's Monte-Carlo certification band
+    # (DESIGN.md §12): trigger when the live p95 exceeds the prior-weighted
+    # certified mean by more than ``p95_drift_factor`` prior-weighted CI
+    # half-widths. 0.0 (default) disables the check; it also stays off for
+    # plans certified on the single-seed point estimate (empty
+    # ``provenance.mc_p95``), which carry no CI to key off.
+    p95_drift_factor: float = 0.0
+    p95_min_samples: int = 500
     # devices missing for this many consecutive ticks = permanent loss
     device_loss_ticks: int = 20
     # no re-trigger storm: quiet period after a trigger fires
@@ -113,6 +121,18 @@ class PlanMonitor:
         self._prior = np.asarray(provenance.qps_prior, np.float64)
         self._cert_ref: Dict[str, float] = dict(provenance.cert_means)
         self._qps_window: deque = deque(maxlen=self.cfg.window_ticks)
+        # live completion latencies for the CI-keyed p95 drift check; the
+        # certified band belongs to THIS plan, so the window resets with it
+        self._lat_window: deque = deque(maxlen=4096)
+        self._lat_reported = False
+        self._p95_threshold: Optional[float] = None
+        if self.cfg.p95_drift_factor > 0 and provenance.mc_p95:
+            w = self._prior[:len(provenance.mc_p95)]
+            means = np.array([m for m, _ in provenance.mc_p95])
+            cis = np.array([c for _, c in provenance.mc_p95])
+            self._p95_threshold = float(
+                (w * means).sum()
+                + self.cfg.p95_drift_factor * (w * cis).sum())
         self._over_ticks = 0
         self._loss_ticks = 0
         self._tick_no = 0
@@ -145,6 +165,13 @@ class PlanMonitor:
 
     def observe_devices(self, n_alive: int) -> None:
         self._n_alive = int(n_alive)
+
+    def observe_latency(self, latency: float) -> None:
+        """Completion-latency feed for the CI-keyed p95 drift check
+        (drivers call this per finished sample; optional — the check just
+        stays silent without it)."""
+        with self._cert_lock:
+            self._lat_window.append(float(latency))
 
     # ------------------------------------------------------------ verdict
     def on_tick(self, t: float, measured_qps: float
@@ -212,6 +239,25 @@ class PlanMonitor:
                     tuple(self._qps_window),
                     detail=f"{m}: observed mean certainty {obs:.3f} vs "
                            f"profiled {ref:.3f} over {n} samples")
+        if self._p95_threshold is not None:
+            with self._cert_lock:
+                n_lat = len(self._lat_window)
+                lats = tuple(self._lat_window) \
+                    if n_lat >= cfg.p95_min_samples else ()
+            if lats:
+                obs_p95 = float(np.percentile(np.asarray(lats), 95))
+                if obs_p95 <= self._p95_threshold:
+                    self._lat_reported = False          # recovered: re-arm
+                elif not self._lat_reported:
+                    self._lat_reported = True           # report once
+                    return ReplanTrigger(
+                        "latency-drift", t, measured_qps,
+                        tuple(self._qps_window),
+                        detail=f"observed p95 {obs_p95 * 1e3:.0f}ms > "
+                               f"certified band "
+                               f"{self._p95_threshold * 1e3:.0f}ms "
+                               f"(mean + {cfg.p95_drift_factor:.1f} x CI, "
+                               f"{n_lat} samples)")
         if len(self._qps_window) >= cfg.tv_min_ticks and \
                 self._tick_no % cfg.tv_check_every == 0:
             window = tuple(self._qps_window)

@@ -181,6 +181,40 @@ def trim_memo(d: Dict, cap: int) -> None:
             del d[old]
 
 
+class CountingMemo(dict):
+    """A plain dict that counts lookup hits/misses, for the lp/placement
+    memos on ``PlannerState``. Both access idioms the submodules use are
+    counted: ``memo.get(key)`` (lp_memo) and ``key in memo`` followed by
+    ``memo[key]`` (place_memo) — ``__getitem__`` itself is deliberately
+    NOT counted so the contains-then-index pattern registers one lookup,
+    not two. Reported via ``PlannerReport.memo_stats`` and printed by
+    ``launch/dryrun.py --plan-check``."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key, default=None):
+        out = super().get(key, _MISS)
+        if out is _MISS:
+            self.misses += 1
+            return default
+        self.hits += 1
+        return out
+
+    def __contains__(self, key) -> bool:
+        ok = super().__contains__(key)
+        if ok:
+            self.hits += 1
+        else:
+            self.misses += 1
+        return ok
+
+
+_MISS = object()
+
+
 # ---------------------------------------------------------------------------
 # Vectorized steady-state evaluation
 # ---------------------------------------------------------------------------

@@ -111,6 +111,11 @@ class PlanProvenance:
     profile_digest: str = ""               # hash of the ModelProfiles used
     # per-model mean validation certainty (drift reference for the monitor)
     cert_means: Tuple[Tuple[str, float], ...] = ()
+    # Monte-Carlo certification (core/vecsim.py): per-range (mean, CI
+    # half-width) of the DES p95 across ``mc_seeds`` arrival realizations.
+    # Empty when the plan was certified on the single-seed point estimate.
+    mc_p95: Tuple[Tuple[float, float], ...] = ()
+    mc_seeds: int = 1
     frozen: bool = False                   # baselines: never hot-swap
 
     def to_dict(self) -> Dict:
@@ -120,6 +125,8 @@ class PlanProvenance:
                 "mem_per_device": self.mem_per_device,
                 "profile_digest": self.profile_digest,
                 "cert_means": [[m, c] for m, c in self.cert_means],
+                "mc_p95": [[m, c] for m, c in self.mc_p95],
+                "mc_seeds": self.mc_seeds,
                 "frozen": self.frozen}
 
     @classmethod
@@ -131,6 +138,9 @@ class PlanProvenance:
                    profile_digest=d.get("profile_digest", ""),
                    cert_means=tuple((m, float(c))
                                     for m, c in d.get("cert_means", [])),
+                   mc_p95=tuple((float(m), float(c))
+                                for m, c in d.get("mc_p95", [])),
+                   mc_seeds=int(d.get("mc_seeds", 1)),
                    frozen=bool(d.get("frozen", False)))
 
 

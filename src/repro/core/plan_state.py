@@ -12,7 +12,7 @@ from typing import Dict, List, Optional, Set, Tuple
 import numpy as np
 
 from repro.core.cascade import Cascade, CascadeEval
-from repro.core.fastsim import SimMemo
+from repro.core.fastsim import CountingMemo, SimMemo
 from repro.core.gears import SLO
 from repro.core.lp import Replica
 from repro.core.profiles import ProfileSet
@@ -83,9 +83,9 @@ class PlannerState:
     # FULL SimConfig / LP inputs so calibration changes never serve stale
     # results (tests/test_fastsim.py pins this).
     sim_memo: SimMemo = field(default_factory=SimMemo)
-    lp_memo: Dict[Tuple, Tuple] = field(default_factory=dict)
+    lp_memo: Dict[Tuple, Tuple] = field(default_factory=CountingMemo)
     place_memo: Dict[Tuple, Optional[List[Replica]]] = field(
-        default_factory=dict)
+        default_factory=CountingMemo)
 
     # SP1: candidate cascades (Pareto set) and their validation evals
     cascades: List[Cascade] = field(default_factory=list)
@@ -107,6 +107,15 @@ class PlannerState:
     min_qlens: List[Dict[str, int]] = field(default_factory=list)
     range_p95: List[float] = field(default_factory=list)
     range_stable: List[bool] = field(default_factory=list)
+
+    # Monte-Carlo certification (core/vecsim.py, DESIGN.md §12): when
+    # ``mc_seeds > 1`` a certified plan gets a per-range (mean, CI
+    # half-width) p95 across that many arrival seeds, run as one
+    # lane-batched vecsim call per range. ``mc_seeds == 1`` keeps the
+    # legacy single-seed point-estimate certifier byte-for-byte.
+    mc_seeds: int = 1
+    mc_p95: List[Tuple[float, float]] = field(default_factory=list)
+    mc_memo: Dict[Tuple, Tuple[float, float]] = field(default_factory=dict)
 
     # ---- helpers -----------------------------------------------------------
     def range_hi(self, r: int) -> float:

@@ -57,6 +57,22 @@ class PlannerReport:
             out["certify:DES"] = self.certify_seconds
         return out
 
+    @property
+    def memo_stats(self) -> Dict[str, Tuple[int, int]]:
+        """(hits, misses) per planner cache — sim_memo (DES outcomes),
+        lp_memo (load-balancing LPs), place_memo (placements). Printed by
+        `launch/dryrun.py --plan-check` so cold-vs-warm planner cost
+        regressions are diagnosable without a profiler."""
+        out: Dict[str, Tuple[int, int]] = {}
+        if self.state is None:
+            return out
+        for name in ("sim_memo", "lp_memo", "place_memo"):
+            memo = getattr(self.state, name, None)
+            hits = getattr(memo, "hits", None)
+            if hits is not None:
+                out[name] = (int(hits), int(memo.misses))
+        return out
+
 
 def make_state(profiles: ProfileSet, hardware: HardwareSpec, slo: SLO,
                qps_max: float, n_ranges: int = 8,
@@ -64,8 +80,10 @@ def make_state(profiles: ProfileSet, hardware: HardwareSpec, slo: SLO,
                sim_cfg: SimConfig = SimConfig(), seed: int = 0,
                pinned_replicas=None, warm_state: Optional[PlannerState] = None,
                fast_path: bool = True,
-               background_qps: Optional[Dict[str, float]] = None
-               ) -> PlannerState:
+               background_qps: Optional[Dict[str, float]] = None,
+               num_seeds: int = 1) -> PlannerState:
+    if num_seeds < 1:
+        raise ValueError(f"num_seeds must be >= 1, got {num_seeds}")
     prior = qps_prior if qps_prior is not None else zipf_prior(n_ranges)
     if pinned_replicas is not None:
         # immutable serving placement: only models already placed can
@@ -83,7 +101,8 @@ def make_state(profiles: ProfileSet, hardware: HardwareSpec, slo: SLO,
                          if pinned_replicas is not None else None,
                          fast_path=fast_path,
                          background_qps=dict(background_qps)
-                         if background_qps else None)
+                         if background_qps else None,
+                         mc_seeds=num_seeds)
     if fast_path:
         # stamp the memo with its profile provenance up front, so a later
         # warm start can tell whether this run's DES outcomes apply to it
@@ -112,6 +131,10 @@ def make_state(profiles: ProfileSet, hardware: HardwareSpec, slo: SLO,
             if warm_state.sim_memo.model_digests == \
                     state.sim_memo.model_digests:
                 state.place_memo.update(warm_state.place_memo)
+                # MC verdicts are (seed-set × DES-key)-pure, so they carry
+                # under the same unchanged-profiles guard as placements
+                state.mc_memo.update(warm_state.mc_memo)
+                trim_memo(state.mc_memo, SimMemo.MAX_ENTRIES // 8)
             # chained warm states must not leak cache without bound
             trim_memo(state.lp_memo, SimMemo.MAX_ENTRIES)
             trim_memo(state.place_memo, SimMemo.MAX_ENTRIES // 8)
@@ -125,8 +148,8 @@ def optimize_gear_plan(profiles: ProfileSet, hardware: HardwareSpec,
                        max_calls: int = 200, pinned_replicas=None,
                        warm_state: Optional[PlannerState] = None,
                        fast_path: bool = True,
-                       background_qps: Optional[Dict[str, float]] = None
-                       ) -> PlannerReport:
+                       background_qps: Optional[Dict[str, float]] = None,
+                       num_seeds: int = 1) -> PlannerReport:
     """Algorithm 1. Raises InfeasiblePlanError when no plan can satisfy the
     SLO on the given hardware.
 
@@ -138,13 +161,17 @@ def optimize_gear_plan(profiles: ProfileSet, hardware: HardwareSpec,
     certification (DESIGN.md §10); ``False`` restores the pre-fast-path
     search verbatim. ``background_qps`` is the multi-tenant contention term
     (core/tenancy.py): other tenants' expected per-model load on a shared
-    pinned placement, added to every range's LP demand.
+    pinned placement, added to every range's LP demand. ``num_seeds > 1``
+    turns on Monte-Carlo certification (DESIGN.md §12): the certified plan
+    is unchanged, but each range's p95 verdict is additionally scored
+    across that many arrival seeds (one lane-batched vecsim call) and the
+    (mean, CI) lands in the plan's provenance for the drift monitor.
     """
     t0 = time.time()
     state = make_state(profiles, hardware, slo, qps_max, n_ranges, qps_prior,
                        sim_cfg, seed, pinned_replicas=pinned_replicas,
                        warm_state=warm_state, fast_path=fast_path,
-                       background_qps=background_qps)
+                       background_qps=background_qps, num_seeds=num_seeds)
     modules = SUBMODULES
     names = ["SP1:search_cascades", "SP2:assign_cascades",
              "SP3:place_models", "SP4:tune_batch_sizes"]
@@ -265,4 +292,6 @@ def provenance_from_state(state: PlannerState) -> PlanProvenance:
         profile_digest=profile_digest(state.profiles),
         cert_means=tuple(
             (m, float(state.profiles[m].validation.certs.mean()))
-            for m in sorted(state.profiles)))
+            for m in sorted(state.profiles)),
+        mc_p95=tuple((float(m), float(c)) for m, c in state.mc_p95),
+        mc_seeds=state.mc_seeds)

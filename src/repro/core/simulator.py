@@ -150,6 +150,34 @@ class _ArrayQueue:
         self.t[tail] = t
         self.n += 1
 
+    def push_block(self, sids: List[int], stages: List[int],
+                   ts: List[float]) -> None:
+        """Bulk ``push``: append ``len(sids)`` entries in order with two
+        slice writes instead of per-sample calls (used by the lane-batched
+        simulator's no-fire commit paths)."""
+        k = len(sids)
+        while self.cap - self.n < k:
+            self._grow()
+        cap = self.cap
+        tail = self.head + self.n
+        if tail >= cap:
+            tail -= cap
+        end = tail + k
+        if end <= cap:
+            self.sid[tail:end] = sids
+            self.stage[tail:end] = stages
+            self.t[tail:end] = ts
+        else:
+            cut = cap - tail
+            self.sid[tail:] = sids[:cut]
+            self.stage[tail:] = stages[:cut]
+            self.t[tail:] = ts[:cut]
+            end -= cap
+            self.sid[:end] = sids[cut:]
+            self.stage[:end] = stages[cut:]
+            self.t[:end] = ts[cut:]
+        self.n += k
+
     def _grow(self) -> None:
         cap, h = self.cap, self.head
         self.sid = self.sid[h:] + self.sid[:h] + [0] * cap
@@ -188,6 +216,9 @@ class ServingSimulator:
     def __init__(self, profiles: ProfileSet, replicas: Sequence[Replica],
                  num_devices: int, cfg: SimConfig = SimConfig(),
                  backend: Optional[ExecutionBackend] = None):
+        # explicit ValueError, not assert: validation must survive python -O
+        if num_devices < 1:
+            raise ValueError(f"num_devices must be >= 1, got {num_devices}")
         self.profiles = profiles
         self.replicas = list(replicas)
         self.num_devices = num_devices
@@ -198,6 +229,13 @@ class ServingSimulator:
     def run_fixed(self, gear: Gear, qps: float, horizon: float = 2.0,
                   warm_start_backlog: int = 0) -> SimResult:
         """Constant-rate arrivals; the gear never changes (planner use)."""
+        if qps < 0:
+            raise ValueError(f"qps must be >= 0, got {qps}")
+        if horizon <= 0:
+            raise ValueError(f"horizon must be positive, got {horizon}")
+        if warm_start_backlog < 0:
+            raise ValueError(f"warm_start_backlog must be >= 0, got "
+                             f"{warm_start_backlog}")
         n = int(qps * horizon)
         arrivals = (np.arange(n) + 0.5) / max(qps, 1e-9)
         if warm_start_backlog:
@@ -220,6 +258,10 @@ class ServingSimulator:
         measurement tick and its ``SwapEvent``s are applied atomically
         (new gear table + QPS-remapped gear index + new selector).
         """
+        if not len(qps_per_sec):
+            raise ValueError("cannot replay an empty QPS trace")
+        if drain < 0:
+            raise ValueError(f"drain must be >= 0, got {drain}")
         arrivals = trace_to_arrivals(qps_per_sec)
         horizon = float(len(qps_per_sec)) + drain
         selector = with_hysteresis(plan_target(plan), self.cfg.alpha)

@@ -112,6 +112,23 @@ def _sim_for(state: PlannerState) -> ServingSimulator:
     return sim
 
 
+def _vecsim_for(state: PlannerState):
+    """Lane-batched engine for Monte-Carlo certification, cached like
+    ``_sim_for`` and sharing the same ReplayBackend (so the interpolation
+    memo is warm from the certification walk that just ran)."""
+    from repro.core.vecsim import VecSim
+    _sim_for(state)              # ensures state._replay_backend exists
+    vec = getattr(state, "_range_vecsim", None)
+    if vec is None or vec.replicas != state.replicas or \
+            vec.cfg is not state.sim_cfg or \
+            vec.num_devices != state.hardware.num_devices:
+        vec = VecSim(state.profiles, state.replicas,
+                     state.hardware.num_devices, state.sim_cfg,
+                     backend=state._replay_backend)
+        state._range_vecsim = vec  # type: ignore[attr-defined]
+    return vec
+
+
 def _evaluator_for(state: PlannerState) -> FastEvaluator:
     ev = getattr(state, "_fast_eval", None)
     if ev is None or ev.profiles is not state.profiles:
@@ -352,7 +369,8 @@ def _descend_to_minimal(state: PlannerState, r: int, ladder, g: int,
 # Certification: the exact DES has the last word
 # ---------------------------------------------------------------------------
 
-def certify_ranges(state: PlannerState) -> bool:
+def certify_ranges(state: PlannerState,
+                   num_seeds: Optional[int] = None) -> bool:
     """DES-certify the converged plan range-by-range (DESIGN.md §10).
 
     For every range the chosen trigger must be (a) stable under the exact
@@ -365,6 +383,15 @@ def certify_ranges(state: PlannerState) -> bool:
     when the plan stands, after installing the exact per-range p95s into
     the state. Each failing round adds DES facts for configs the estimate
     had judged differently, so certification terminates.
+
+    Monte-Carlo mode (DESIGN.md §12): with ``num_seeds`` (default
+    ``state.mc_seeds``) above 1, a plan that passes the point-estimate walk
+    additionally gets each range scored across that many arrival seeds in
+    ONE lane-batched vecsim call, and ``state.mc_p95`` records the
+    per-range (mean, 95% CI half-width) of the p95 distribution. The walk
+    itself — and therefore the certified plan — is byte-identical to the
+    single-seed certifier; the extra lanes only widen the *verdict* the
+    provenance (and the drift monitor) carries.
     """
     ladder = trigger_ladder(MAX_MIN_QUEUE)
     lat_cap = state.slo.latency_p95 if state.slo.kind == "latency" else None
@@ -410,7 +437,35 @@ def certify_ranges(state: PlannerState) -> bool:
     if ok:
         state.range_p95 = p95s
         state.range_stable = [True] * state.n_ranges
+        n = state.mc_seeds if num_seeds is None else num_seeds
+        state.mc_p95 = _mc_certify(state, n) if n > 1 else []
     return ok
+
+
+def _mc_certify(state: PlannerState, n: int) -> list:
+    """Per-range (mean, CI) of the DES p95 across ``n`` arrival seeds,
+    via one lane-batched vecsim call per range (memoized on the state so
+    warm re-plans over unchanged ranges pay nothing). Lane 0 runs seed
+    ``cfg.seed`` — the exact configuration the point-estimate walk just
+    certified — so the distribution always brackets the recorded p95."""
+    from repro.core.vecsim import mc_summary
+    vec = _vecsim_for(state)
+    out = []
+    for r in range(state.n_ranges):
+        qps, horizon, backlog = _range_sim_params(state, r)
+        gear = _range_gear(state, r, state.min_qlens[r])
+        key = (sim_memo_key(gear, qps, horizon, backlog, state.sim_cfg,
+                            state.replicas, state.hardware.num_devices), n)
+        mc = state.mc_memo.get(key)
+        if mc is None:
+            seeds = [state.sim_cfg.seed + i for i in range(n)]
+            lanes = vec.run_fixed_lanes(gear, qps=qps, horizon=horizon,
+                                        warm_start_backlog=backlog,
+                                        seeds=seeds)
+            mc = mc_summary([res.p95 for res in lanes])
+            state.mc_memo[key] = mc
+        out.append(mc)
+    return out
 
 
 def _slowest_model(state: PlannerState, r: int) -> str:

@@ -226,7 +226,8 @@ class MultiTenantReport:
 
 def plan_multi_tenant(profiles, hardware, tenants: Sequence[TenantSpec],
                       sim_cfg=None, seed: int = 0, fast_path: bool = True,
-                      max_calls: int = 200) -> MultiTenantReport:
+                      max_calls: int = 200,
+                      num_seeds: int = 1) -> MultiTenantReport:
     """Joint multi-tenant planning (DESIGN.md §11).
 
     1. **Solo pass** — Algorithm 1 per tenant on the full hardware: yields
@@ -265,7 +266,7 @@ def plan_multi_tenant(profiles, hardware, tenants: Sequence[TenantSpec],
                 qps_prior=np.asarray(t.qps_prior, np.float64)
                 if t.qps_prior is not None else None,
                 sim_cfg=sim_cfg, seed=seed, max_calls=max_calls,
-                fast_path=fast_path)
+                fast_path=fast_path, num_seeds=num_seeds)
         except InfeasiblePlanError as e:
             raise InfeasiblePlanError(
                 f"tenant {t.name} (solo pass): {e}") from e
@@ -305,7 +306,8 @@ def plan_multi_tenant(profiles, hardware, tenants: Sequence[TenantSpec],
                 if t.qps_prior is not None else None,
                 sim_cfg=sim_cfg, seed=seed, max_calls=max_calls,
                 pinned_replicas=joint, warm_state=solo[t.name].state,
-                fast_path=fast_path, background_qps=bg)
+                fast_path=fast_path, background_qps=bg,
+                num_seeds=num_seeds)
         except InfeasiblePlanError as e:
             raise InfeasiblePlanError(
                 f"tenant {t.name}: SLO unattainable on the shared "

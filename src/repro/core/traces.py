@@ -17,6 +17,9 @@ import numpy as np
 
 def zipf_prior(n_ranges: int, s: float = 1.5) -> np.ndarray:
     """Weight of each QPS range (range 0 = lowest QPS = most frequent)."""
+    # explicit ValueError, not assert: validation must survive python -O
+    if n_ranges < 1:
+        raise ValueError(f"n_ranges must be >= 1, got {n_ranges}")
     w = 1.0 / np.arange(1, n_ranges + 1, dtype=np.float64) ** s
     return w / w.sum()
 
@@ -30,6 +33,8 @@ def azure_like_trace(seconds: int = 1200, peak_qps: float = 60.0,
                      seed: int = 0) -> np.ndarray:
     """Bursty serverless-style trace: log-normal base load with Pareto
     spikes and second-scale burstiness (cf. Shahrad et al. 2020)."""
+    if seconds < 1:
+        raise ValueError(f"trace length must be >= 1 second, got {seconds}")
     rng = np.random.default_rng(seed)
     t = np.arange(seconds, dtype=np.float64)
     # bursty base load: geometric random walk (damped so the drift stays
@@ -52,6 +57,8 @@ def diurnal_like_trace(seconds: int = 1200, peak_qps: float = 7600.0,
                        seed: int = 1) -> np.ndarray:
     """Twitter-style trace: diurnal curve compressed into the window plus
     heavy-tailed minute-scale bursts."""
+    if seconds < 1:
+        raise ValueError(f"trace length must be >= 1 second, got {seconds}")
     rng = np.random.default_rng(seed)
     t = np.arange(seconds, dtype=np.float64)
     diurnal = 0.55 + 0.45 * np.sin(2 * np.pi * t / seconds - np.pi / 2)
@@ -69,6 +76,8 @@ def spiky_trace(seconds: int = 120, base_qps: float = 400.0,
                 spike_len: int = 10) -> np.ndarray:
     """Simplified step trace for the degradation study (Figs. 8/9):
     flat base load with rectangular spikes."""
+    if seconds < 1:
+        raise ValueError(f"trace length must be >= 1 second, got {seconds}")
     qps = np.full(seconds, base_qps, np.float64)
     spike_at = spike_at if spike_at is not None else [seconds // 3,
                                                       2 * seconds // 3]
@@ -82,6 +91,13 @@ def measured_qps_distribution(trace: np.ndarray, n_ranges: int,
                               qps_max: float) -> np.ndarray:
     """Empirical time-in-range distribution of a trace (used to re-plan when
     the Zipf assumption deviates; App. C.2)."""
+    if n_ranges < 1:
+        raise ValueError(f"n_ranges must be >= 1, got {n_ranges}")
+    if qps_max <= 0:
+        raise ValueError(f"qps_max must be positive, got {qps_max}")
+    if not len(trace):
+        raise ValueError("cannot measure a QPS distribution of an empty "
+                         "trace")
     width = qps_max / n_ranges
     idx = np.clip((np.asarray(trace) / width).astype(int), 0, n_ranges - 1)
     return np.bincount(idx, minlength=n_ranges) / len(trace)

@@ -200,6 +200,10 @@ def plan_check(archs, context: int, qps_max: float = 60.0,
           f"{report.certify_rounds} certification restart(s)")
     for sub, secs in sorted(report.submodule_seconds.items()):
         print(f"  {sub:22s} {secs:7.3f}s")
+    for memo, (hits, misses) in sorted(report.memo_stats.items()):
+        total = hits + misses
+        rate = hits / total if total else 0.0
+        print(f"  {memo:22s} {hits}/{total} hits ({rate:.0%})")
     for r, g in enumerate(report.plan.gears):
         print(f"  range {r}: {' -> '.join(g.cascade.models)} "
               f"p95={g.expected_p95 * 1e3:.0f}ms")

@@ -1,0 +1,347 @@
+"""VecSim equivalence + Monte-Carlo certification tests.
+
+The lane-batched engine (core/vecsim.py) is only usable because it is pinned
+to the scalar ``ServingSimulator`` the same way fastsim was pinned to the
+planner (DESIGN.md §10, §12): a single-lane VecSim run must be bit-identical
+at the *decision-trace* level — every routing draw, batch firing, cascade
+hop and gear switch, in order — on the five behavior-fingerprint scenarios.
+Anything weaker would let the vectorized fast paths silently re-tune every
+Monte-Carlo verdict the planner records.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.cascade import Cascade
+from repro.core.gears import GearPlan, PlanProvenance, SLO
+from repro.core.lp import Replica
+from repro.core.profiles import synthetic_family
+from repro.core.scheduling import DecisionTrace
+from repro.core.simulator import ServingSimulator, SimConfig, make_gear
+from repro.core.vecsim import VecSim, mc_summary
+from repro.distributed.fault_tolerance import HedgePolicy
+
+
+def _family():
+    return synthetic_family(["tiny", "mini", "base"], base_runtime=2e-4,
+                            runtime_ratio=2.4, base_acc=0.70, acc_gain=0.06,
+                            mem_base=0.4e9, seed=3)
+
+
+@pytest.fixture(scope="module")
+def world():
+    profiles = _family()
+    reps = [Replica(m, d, profiles[m].runtime_per_sample(1.0))
+            for d in range(2) for m in profiles]
+    g0 = make_gear(Cascade(("tiny", "base"), (0.35,)), reps, {"tiny": 2})
+    g1 = make_gear(Cascade(("tiny", "mini"), (0.2,)), reps, {"tiny": 4})
+    g2 = make_gear(Cascade(("tiny",), ()), reps, {"tiny": 8})
+    plan = GearPlan(qps_max=600.0, gears=[g0, g1, g2], replicas=reps,
+                    num_devices=2, slo=SLO(kind="latency", latency_p95=1.0))
+    return profiles, reps, plan
+
+
+def _digest(res):
+    return {
+        "completed": int(res.completed),
+        "offered": int(res.offered),
+        "backlog_end": int(res.backlog_end),
+        "p95": float(res.p95),
+        "accuracy": float(res.accuracy),
+        "switches": len(res.gear_switches),
+        "busy": float(res.device_busy.sum()),
+    }
+
+
+def _assert_equal(res_s, trace_s, res_v, trace_v, scenario):
+    assert trace_v.routes == trace_s.routes, scenario
+    assert trace_v.fires == trace_s.fires, scenario
+    assert trace_v.hops == trace_s.hops, scenario
+    assert trace_v.gear_switches == trace_s.gear_switches, scenario
+    assert trace_v.swaps == trace_s.swaps, scenario
+    assert _digest(res_v) == _digest(res_s), scenario
+    assert res_v.gear_switches == res_s.gear_switches, scenario
+    assert res_v.per_model_batches == res_s.per_model_batches, scenario
+    assert res_v.per_model_samples == res_s.per_model_samples, scenario
+    np.testing.assert_array_equal(res_v.latencies, res_s.latencies)
+    np.testing.assert_array_equal(res_v.correct, res_s.correct)
+    np.testing.assert_array_equal(res_v.resolver, res_s.resolver)
+    np.testing.assert_array_equal(res_v.device_busy, res_s.device_busy)
+
+
+def _pair(profiles, reps, cfg):
+    return (ServingSimulator(profiles, reps, 2, cfg),
+            VecSim(profiles, reps, 2, cfg))
+
+
+# --------------------------------------------------------------------------
+# the five fingerprint scenarios, decision-trace bit-identical
+# --------------------------------------------------------------------------
+
+def test_fixed_rate_bit_identical(world):
+    profiles, reps, plan = world
+    sim, vec = _pair(profiles, reps, SimConfig(max_batch=128))
+    ts, tv = DecisionTrace(), DecisionTrace()
+    qps, horizon = 300.0, 3.0
+    arrivals = (np.arange(int(qps * horizon)) + 0.5) / qps
+    # the scalar public run_fixed takes no trace; drive _run the way
+    # run_fixed does (same arrivals, gear list, null selector)
+    res_s = sim._run(arrivals, [plan.gears[0]], lambda t, q, g, q0: 0,
+                     horizon=horizon, decision_trace=ts)
+    res_v = vec.run_fixed(plan.gears[0], qps=qps, horizon=horizon,
+                          decision_trace=tv)
+    _assert_equal(res_s, ts, res_v, tv, "fixed-rate")
+
+
+def test_fixed_rate_backlog_bit_identical(world):
+    profiles, reps, plan = world
+    sim, vec = _pair(profiles, reps, SimConfig(max_batch=128))
+    res_s = sim.run_fixed(plan.gears[1], qps=420.0, horizon=2.0,
+                          warm_start_backlog=105)
+    res_v = vec.run_fixed(plan.gears[1], qps=420.0, horizon=2.0,
+                          warm_start_backlog=105)
+    assert _digest(res_v) == _digest(res_s)
+    np.testing.assert_array_equal(res_v.latencies, res_s.latencies)
+
+
+def test_trace_gear_switching_bit_identical(world):
+    profiles, reps, plan = world
+    sim, vec = _pair(profiles, reps, SimConfig(max_batch=128))
+    trace = np.concatenate([np.full(3, 60.0), np.full(3, 550.0),
+                            np.full(4, 60.0)])
+    ts, tv = DecisionTrace(), DecisionTrace()
+    res_s = sim.run_trace(plan, trace, decision_trace=ts)
+    res_v = vec.run_trace(plan, trace, decision_trace=tv)
+    _assert_equal(res_s, ts, res_v, tv, "trace")
+    assert len(ts.gear_switches) > 0          # the scenario actually switches
+
+
+def test_ensemble_bit_identical(world):
+    profiles, reps, plan = world
+    sim, vec = _pair(profiles, reps, SimConfig(max_batch=128))
+    ens = make_gear(Cascade(("tiny", "mini", "base"), (0.0, 0.0)), reps,
+                    mode="ensemble")
+    ens_plan = GearPlan(qps_max=600.0, gears=[ens], replicas=reps,
+                        num_devices=2, slo=plan.slo)
+    ts, tv = DecisionTrace(), DecisionTrace()
+    res_s = sim.run_trace(ens_plan, np.full(4, 80.0), decision_trace=ts)
+    res_v = vec.run_trace(ens_plan, np.full(4, 80.0), decision_trace=tv)
+    _assert_equal(res_s, ts, res_v, tv, "ensemble")
+
+
+def test_device_failure_bit_identical(world):
+    profiles, reps, plan = world
+    sim, vec = _pair(profiles, reps, SimConfig(max_batch=128))
+    ev = [(2.0, 0, "fail", 0.0), (9.0, 0, "recover", 1.0)]
+    ts, tv = DecisionTrace(), DecisionTrace()
+    res_s = sim.run_trace(plan, np.full(8, 50.0), device_events=ev,
+                          drain=3.0, decision_trace=ts)
+    res_v = vec.run_trace(plan, np.full(8, 50.0), device_events=ev,
+                          drain=3.0, decision_trace=tv)
+    _assert_equal(res_s, ts, res_v, tv, "device-failure")
+
+
+def test_hedging_bit_identical(world):
+    profiles, reps, plan = world
+    sim, vec = _pair(profiles, reps, SimConfig(max_batch=128))
+    ev = [(1.0, 1, "slow", 5.0), (6.0, 1, "recover", 1.0)]
+    ts, tv = DecisionTrace(), DecisionTrace()
+    res_s = sim.run_trace(plan, np.full(8, 60.0), device_events=ev,
+                          drain=3.0, hedge=HedgePolicy(hedge_multiplier=3.0),
+                          decision_trace=ts)
+    res_v = vec.run_trace(plan, np.full(8, 60.0), device_events=ev,
+                          drain=3.0, hedge=HedgePolicy(hedge_multiplier=3.0),
+                          decision_trace=tv)
+    _assert_equal(res_s, ts, res_v, tv, "hedging")
+
+
+# --------------------------------------------------------------------------
+# lane batching: every lane equals its scalar counterpart
+# --------------------------------------------------------------------------
+
+def test_lanes_match_scalar_per_seed(world):
+    profiles, reps, plan = world
+    cfg = SimConfig(max_batch=128)
+    vec = VecSim(profiles, reps, 2, cfg)
+    seeds = list(range(16))
+    lanes = vec.run_fixed_lanes(plan.gears[0], qps=350.0, horizon=2.0,
+                                warm_start_backlog=80, seeds=seeds)
+    assert len(lanes) == 16
+    for s in (2, 9):                     # spot-check two lanes bit-exactly
+        sim = ServingSimulator(profiles, reps, 2,
+                               dataclasses.replace(cfg, seed=s))
+        res = sim.run_fixed(plan.gears[0], qps=350.0, horizon=2.0,
+                            warm_start_backlog=80)
+        assert _digest(lanes[s]) == _digest(res)
+        np.testing.assert_array_equal(lanes[s].latencies, res.latencies)
+
+
+def test_seed_sensitivity_within_reported_ci(world):
+    """Property test guarding the seed plumbing: two fresh scalar runs with
+    different RoutePool seeds must land inside the lane-population band and
+    inside a 3x-widened CI of the vecsim-reported p95 distribution (the CI
+    is a statement about the mean; individual seeds get the 3x band)."""
+    profiles, reps, plan = world
+    cfg = SimConfig(max_batch=128)
+    vec = VecSim(profiles, reps, 2, cfg)
+    seeds = list(range(24))
+    lanes = vec.run_fixed_lanes(plan.gears[0], qps=400.0, horizon=2.0,
+                                warm_start_backlog=100, seeds=seeds)
+    p95s = [r.p95 for r in lanes]
+    mean, ci = mc_summary(p95s)
+    assert math.isfinite(mean) and ci >= 0.0
+    lo, hi = min(p95s), max(p95s)
+    for s in (31, 77):                   # seeds OUTSIDE the lane set
+        sim = ServingSimulator(profiles, reps, 2,
+                               dataclasses.replace(cfg, seed=s))
+        p = sim.run_fixed(plan.gears[0], qps=400.0, horizon=2.0,
+                          warm_start_backlog=100).p95
+        spread = max(3.0 * ci, hi - lo)
+        assert mean - spread <= p <= mean + spread, \
+            (s, p, mean, ci, lo, hi)
+
+
+def test_mc_summary_edge_cases():
+    mean, ci = mc_summary([])
+    assert mean == math.inf
+    mean, ci = mc_summary([0.25])
+    assert (mean, ci) == (0.25, 0.0)
+    mean, ci = mc_summary([0.2, math.inf])
+    assert mean == math.inf and ci == math.inf
+    mean, ci = mc_summary([0.2, 0.3, 0.4])
+    assert abs(mean - 0.3) < 1e-12 and ci > 0.0
+
+
+# --------------------------------------------------------------------------
+# Monte-Carlo certification through the planner
+# --------------------------------------------------------------------------
+
+def _plan_pair(num_seeds):
+    from repro.core.plan_state import HardwareSpec
+    from repro.core.planner import optimize_gear_plan
+    profiles = _family()
+    hw = HardwareSpec(num_devices=2, mem_per_device=2e9)
+    slo = SLO(kind="latency", latency_p95=1.0)
+    return optimize_gear_plan(profiles, hw, slo, qps_max=300.0, n_ranges=3,
+                              num_seeds=num_seeds)
+
+
+def test_mc_certification_same_plan_with_ci_provenance():
+    """num_seeds>1 must not change the certified plan at all — only widen
+    its provenance with the per-range (mean, CI) p95 distribution."""
+    r1 = _plan_pair(1)
+    rm = _plan_pair(6)
+    d1, dm = r1.plan.to_dict(), rm.plan.to_dict()
+    d1.pop("provenance"), dm.pop("provenance")
+    assert d1 == dm                      # identical plan, gears, placement
+    stats = r1.memo_stats                # satellite: memo hit-rate counters
+    assert set(stats) == {"sim_memo", "lp_memo", "place_memo"}
+    assert all(h >= 0 and m > 0 for h, m in stats.values())
+    assert r1.plan.provenance.mc_p95 == ()
+    assert r1.plan.provenance.mc_seeds == 1
+    prov = rm.plan.provenance
+    assert prov.mc_seeds == 6
+    assert len(prov.mc_p95) == 3
+    for (mean, ci), point in zip(prov.mc_p95, rm.state.range_p95):
+        assert math.isfinite(mean) and ci >= 0.0
+        # lane 0 IS the certified seed, so the point estimate must lie
+        # inside the sampled band
+        assert mean - 6 * ci - 1e-9 <= point <= mean + 6 * ci + 1e-9
+
+
+def test_mc_provenance_round_trip():
+    prov = PlanProvenance(
+        qps_max=100.0, n_ranges=2, qps_prior=(0.7, 0.3), num_devices=2,
+        mem_per_device=1e9, mc_p95=((0.01, 0.002), (0.02, 0.001)),
+        mc_seeds=16)
+    back = PlanProvenance.from_dict(prov.to_dict())
+    assert back == prov
+    # pre-MC serialized plans (no mc fields) still load, with defaults
+    d = prov.to_dict()
+    d.pop("mc_p95"), d.pop("mc_seeds")
+    old = PlanProvenance.from_dict(d)
+    assert old.mc_p95 == () and old.mc_seeds == 1
+
+
+def test_monitor_latency_drift_ci_keyed():
+    """The CI-keyed p95 drift check: observed p95 beyond the certified
+    band -> one latency-drift trigger, re-armed on recovery; plans without
+    an MC band (or factor 0) never trigger."""
+    from repro.core.adaption import MonitorConfig, PlanMonitor
+    prov = PlanProvenance(
+        qps_max=100.0, n_ranges=1, qps_prior=(1.0,), num_devices=2,
+        mem_per_device=1e9, mc_p95=((0.100, 0.010),), mc_seeds=8)
+    cfg = MonitorConfig(p95_drift_factor=2.0, p95_min_samples=10,
+                        cooldown=0.0)
+    mon = PlanMonitor(prov, cfg)
+    # threshold = mean + 2*ci = 0.12; feed latencies far above it
+    for _ in range(20):
+        mon.observe_latency(0.2)
+    trig = mon.on_tick(1.0, measured_qps=10.0)
+    assert trig is not None and trig.reason == "latency-drift"
+    assert mon.on_tick(2.0, measured_qps=10.0) is None   # report once
+    for _ in range(500):
+        mon.observe_latency(0.05)                        # recover
+    assert mon.on_tick(3.0, measured_qps=10.0) is None   # re-armed quietly
+    for _ in range(600):
+        mon.observe_latency(0.5)                         # drift again
+    trig = mon.on_tick(4.0, measured_qps=10.0)
+    assert trig is not None and trig.reason == "latency-drift"
+    # too few samples: silent
+    mon2 = PlanMonitor(prov, cfg)
+    for _ in range(5):
+        mon2.observe_latency(10.0)
+    assert mon2.on_tick(1.0, measured_qps=10.0) is None
+    # no MC band or disabled factor: the check never arms
+    flat = PlanProvenance(qps_max=100.0, n_ranges=1, qps_prior=(1.0,),
+                          num_devices=2, mem_per_device=1e9)
+    mon3 = PlanMonitor(flat, cfg)
+    for _ in range(20):
+        mon3.observe_latency(10.0)
+    assert mon3.on_tick(1.0, measured_qps=10.0) is None
+    mon4 = PlanMonitor(prov, MonitorConfig(p95_min_samples=10,
+                                           cooldown=0.0))
+    for _ in range(20):
+        mon4.observe_latency(10.0)
+    assert mon4.on_tick(1.0, measured_qps=10.0) is None
+
+
+def test_validation_errors():
+    """The PR 3/5 ValueError convention on the new and touched surfaces."""
+    from repro.core.traces import (measured_qps_distribution, spiky_trace,
+                                   zipf_prior)
+    profiles = _family()
+    reps = [Replica(m, d, profiles[m].runtime_per_sample(1.0))
+            for d in range(2) for m in profiles]
+    vec = VecSim(profiles, reps, 2, SimConfig())
+    sim = ServingSimulator(profiles, reps, 2, SimConfig())
+    g = make_gear(Cascade(("tiny",), ()), reps, {"tiny": 1})
+    for runner in (vec, sim):
+        with pytest.raises(ValueError):
+            runner.run_fixed(g, qps=-1.0)
+        with pytest.raises(ValueError):
+            runner.run_fixed(g, qps=10.0, horizon=0.0)
+        with pytest.raises(ValueError):
+            runner.run_fixed(g, qps=10.0, warm_start_backlog=-1)
+    with pytest.raises(ValueError):
+        VecSim(profiles, reps, 0)
+    with pytest.raises(ValueError):
+        ServingSimulator(profiles, reps, 0)
+    with pytest.raises(ValueError):
+        vec.run_fixed_lanes(g, qps=10.0, seeds=())
+    with pytest.raises(ValueError):
+        zipf_prior(0)
+    with pytest.raises(ValueError):
+        spiky_trace(seconds=0)
+    with pytest.raises(ValueError):
+        measured_qps_distribution(np.array([1.0]), 0, 10.0)
+    with pytest.raises(ValueError):
+        measured_qps_distribution(np.array([]), 2, 10.0)
+    from repro.core.planner import make_state
+    from repro.core.plan_state import HardwareSpec
+    with pytest.raises(ValueError):
+        make_state(profiles, HardwareSpec(2, 2e9),
+                   SLO(kind="latency", latency_p95=1.0), qps_max=100.0,
+                   num_seeds=0)
