@@ -30,6 +30,7 @@ BENCHES = [
     "bench_fault_tolerance",     # beyond-paper FT/elasticity
     "bench_replanning",          # beyond-paper online re-planning drift
     "bench_multitenant",         # beyond-paper multi-tenant shared fleet
+    "bench_tokens",              # token-level continuous batching vs rebatch
 ]
 
 

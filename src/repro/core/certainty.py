@@ -62,6 +62,76 @@ def predict_with_certainty(scores: jax.Array, estimator: str = "top2_gap"
 
 
 # ---------------------------------------------------------------------------
+# Streaming certainty over partial generations (token-level cascades)
+# ---------------------------------------------------------------------------
+
+class StreamingCertainty:
+    """O(1)-per-token certainty estimate over a partial generation.
+
+    Token-level cascades (DESIGN.md §13) cannot wait for the full response
+    to decide whether the small model is out of its depth: the per-token
+    top-2 logit gap is folded into a running statistic after EVERY decode
+    step, and the cascade consults ``value`` at token boundaries. Three
+    folds, selected by ``mode``:
+
+    * ``ewma`` (default) — exponentially weighted average of the gaps
+      (weight ``beta`` on the newest); tracks degradation mid-stream while
+      smoothing single-token noise.
+    * ``mean`` — running arithmetic mean (the full-response estimate the
+      one-shot cascade would have seen, available incrementally).
+    * ``min``  — weakest token so far (most conservative escalator).
+
+    Both token executors — the real ``TokenEngine`` and the virtual-time
+    token DES — drive an instance of this class with the same gap stream,
+    so their escalation decisions cannot diverge (the token analogue of the
+    SchedulerCore contract, DESIGN.md §2).
+    """
+
+    __slots__ = ("mode", "beta", "count", "_mean", "_min", "_ewma")
+
+    def __init__(self, mode: str = "ewma", beta: float = 0.35):
+        if mode not in ("ewma", "mean", "min"):
+            raise ValueError(
+                f"StreamingCertainty mode must be ewma|mean|min, got "
+                f"{mode!r}")
+        if not 0.0 < beta <= 1.0:
+            raise ValueError(f"beta must be in (0, 1], got {beta}")
+        self.mode = mode
+        self.beta = beta
+        self.reset()
+
+    def reset(self) -> None:
+        self.count = 0
+        self._mean = 0.0
+        self._min = float("inf")
+        self._ewma = 0.0
+
+    def update(self, gap: float) -> float:
+        """Fold one per-token gap; returns the updated ``value``."""
+        gap = float(gap)
+        self.count += 1
+        self._mean += (gap - self._mean) / self.count
+        if gap < self._min:
+            self._min = gap
+        if self.count == 1:
+            self._ewma = gap
+        else:
+            self._ewma += self.beta * (gap - self._ewma)
+        return self.value
+
+    @property
+    def value(self) -> float:
+        """The current certainty estimate (0.0 before any token)."""
+        if self.count == 0:
+            return 0.0
+        if self.mode == "mean":
+            return self._mean
+        if self.mode == "min":
+            return self._min
+        return self._ewma
+
+
+# ---------------------------------------------------------------------------
 # Threshold calibration utilities (host-side, numpy)
 # ---------------------------------------------------------------------------
 

@@ -36,11 +36,12 @@ from typing import (Callable, Dict, List, Mapping, Optional, Sequence, Tuple,
 
 import numpy as np
 
-from repro.core.profiles import ModelProfile, ProfileSet, ValidationRecord
+from repro.core.profiles import (ModelProfile, ProfileSet, TokenProfileSet,
+                                 ValidationRecord)
 
 __all__ = ["BatchExecution", "ExecutionBackend", "ReplayBackend",
-           "EngineBackend", "CostModelBackend", "profile_backend",
-           "resolve_estimator"]
+           "EngineBackend", "CostModelBackend", "TokenReplayBackend",
+           "profile_backend", "resolve_estimator"]
 
 
 def resolve_estimator(est: Union[str, Callable]) -> Callable:
@@ -219,6 +220,66 @@ class ReplayBackend(ExecutionBackend):
             batch_runtimes=np.asarray([p.runtime(b) for b in bs]),
             devices_per_replica=p.devices_per_replica,
             validation=p.validation)
+
+
+# ---------------------------------------------------------------------------
+# TokenReplayBackend: per-token replay physics (token-level DES)
+# ---------------------------------------------------------------------------
+
+class TokenReplayBackend:
+    """Token-level replay physics for the virtual-time token DES
+    (DESIGN.md §13) — the generation analogue of ``ReplayBackend``.
+
+    One request ``sid`` at model ``m`` replays validation index
+    ``sid % n_val`` of ``m``'s ``TokenProfile``: its generation length, its
+    per-token certainty-gap stream (fed to the SAME ``StreamingCertainty``
+    fold the real ``TokenEngine`` uses), and its correctness if resolved at
+    ``m``. Costs are the profile's prompt-proportional prefill and
+    batch-dependent per-step decode runtimes. Everything is deterministic
+    in ``sid``, so continuous-batching runs are reproducible and comparable
+    across scheduling modes on the same trace.
+    """
+
+    name = "token_replay"
+
+    def __init__(self, token_profiles: TokenProfileSet):
+        if not token_profiles:
+            raise ValueError("TokenReplayBackend needs at least one profile")
+        self.token_profiles = dict(token_profiles)
+        self._rt_memo: Dict[Tuple[str, int], float] = {}
+        # scalar-read views (the DES step loop reads one gap at a time)
+        self._gen = {m: p.gen_len.tolist()
+                     for m, p in token_profiles.items()}
+        self._gaps = {m: p.gaps for m, p in token_profiles.items()}
+        self._corr = {m: p.correct.tolist()
+                      for m, p in token_profiles.items()}
+        self._n = {m: p.validation_n for m, p in token_profiles.items()}
+
+    def models(self) -> List[str]:
+        return list(self.token_profiles)
+
+    def prefill_runtime(self, model: str, prompt_tokens: int) -> float:
+        return self.token_profiles[model].prefill_runtime(prompt_tokens)
+
+    def decode_step_runtime(self, model: str, batch: int) -> float:
+        rt = self._rt_memo.get((model, batch))
+        if rt is None:
+            rt = self.token_profiles[model].decode_step_runtime(batch)
+            self._rt_memo[(model, batch)] = rt
+        return rt
+
+    def gen_len(self, model: str, sid: int) -> int:
+        return self._gen[model][sid % self._n[model]]
+
+    def token_gap(self, model: str, sid: int, pos: int) -> float:
+        """Certainty gap of the ``pos``-th generated token (0-based)."""
+        return float(self._gaps[model][sid % self._n[model], pos])
+
+    def correct(self, model: str, sid: int) -> bool:
+        return self._corr[model][sid % self._n[model]]
+
+    def kv_bytes_per_slot(self, model: str) -> float:
+        return self.token_profiles[model].kv_bytes_per_slot
 
 
 # ---------------------------------------------------------------------------

@@ -57,6 +57,12 @@ class Gear:
     load_fractions: Dict[str, Dict[int, float]]
     expected_accuracy: float = 0.0
     expected_p95: float = 0.0
+    # token-level serving (DESIGN.md §13): per-model decode-slot count a
+    # replica keeps resident (continuous-batching capacity) and the HBM
+    # bytes ONE resident slot's KV cache costs — the placement constraint
+    # the planner charges next to weights. Empty for one-shot gears.
+    decode_slots: Dict[str, int] = field(default_factory=dict)
+    kv_bytes_per_slot: Dict[str, float] = field(default_factory=dict)
 
     def __post_init__(self):
         for m, trig in self.min_queue_lens.items():
@@ -69,6 +75,20 @@ class Gear:
                     raise ValueError(
                         f"load fraction for {m} on replica {ridx} must be "
                         f">= 0, got {f}")
+        for m, s in self.decode_slots.items():
+            if s < 1:
+                raise ValueError(
+                    f"decode_slots for {m} must be >= 1, got {s}")
+        for m, b in self.kv_bytes_per_slot.items():
+            if b < 0:
+                raise ValueError(
+                    f"kv_bytes_per_slot for {m} must be >= 0, got {b}")
+
+    def kv_reserve(self, model: str) -> float:
+        """HBM bytes one replica of ``model`` reserves for its resident
+        decode slots under this gear (0 for one-shot gears)."""
+        return self.kv_bytes_per_slot.get(model, 0.0) \
+            * self.decode_slots.get(model, 0)
 
     def to_dict(self) -> Dict:
         return {
@@ -79,6 +99,8 @@ class Gear:
                                for m, d in self.load_fractions.items()},
             "expected_accuracy": self.expected_accuracy,
             "expected_p95": self.expected_p95,
+            "decode_slots": dict(self.decode_slots),
+            "kv_bytes_per_slot": dict(self.kv_bytes_per_slot),
         }
 
     @classmethod
@@ -89,7 +111,11 @@ class Gear:
             load_fractions={m: {int(k): float(v) for k, v in sub.items()}
                             for m, sub in d["load_fractions"].items()},
             expected_accuracy=d.get("expected_accuracy", 0.0),
-            expected_p95=d.get("expected_p95", 0.0))
+            expected_p95=d.get("expected_p95", 0.0),
+            decode_slots={m: int(v) for m, v in
+                          d.get("decode_slots", {}).items()},
+            kv_bytes_per_slot={m: float(v) for m, v in
+                               d.get("kv_bytes_per_slot", {}).items()})
 
 
 @dataclass(frozen=True)

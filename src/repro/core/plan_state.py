@@ -72,6 +72,16 @@ class PlannerState:
     # provisioned for the sum of worst cases — DESIGN.md §11).
     background_qps: Optional[Dict[str, float]] = None
 
+    # Token-level serving (DESIGN.md §13): per-model HBM bytes one replica
+    # reserves for its resident KV-cache decode slots (kv_bytes_per_slot
+    # * decode_slots) — charged next to weights by SP3's placement — and
+    # the per-model expected seconds one request occupies a decode slot,
+    # driving SP4's Little's-law slot-stability verdict. Empty → one-shot
+    # planning, bit-identical.
+    kv_reserve: Dict[str, float] = field(default_factory=dict)
+    decode_slots: Dict[str, int] = field(default_factory=dict)
+    token_residency: Dict[str, float] = field(default_factory=dict)
+
     # Fast evaluation layer (core/fastsim.py, DESIGN.md §10): when enabled
     # the submodule search runs on the vectorized steady-state evaluator
     # and the converged plan is certified range-by-range by the exact DES.

@@ -42,6 +42,25 @@ class SchedulerConfig:
     seed: int = 0
 
 
+def head_of_line_wait(t: float, head_t: float, max_wait: float) -> float:
+    """Head-of-line wait for the EXACT ``head_wait >= max_wait`` fire
+    comparison (no epsilon fudge).
+
+    Virtual-time drivers schedule the head's timeout event at the float
+    ``head_t + max_wait``; by the driver's own clock the head has waited
+    the full ``max_wait`` once ``t`` reaches that float, even where the
+    raw IEEE subtraction ``t - head_t`` undershoots ``max_wait`` by an
+    ulp. Snapping the wait to ``max_wait`` at the scheduled deadline makes
+    the exact comparison fire at exactly the event times the driver
+    scheduled — the ``max_wait - 1e-9`` fudge this replaces instead fired
+    any head within 1e-9 of the timeout EARLY, and made the trigger
+    brittle to float accumulation of virtual time."""
+    w = t - head_t
+    if w < max_wait and t >= head_t + max_wait:
+        return max_wait
+    return w
+
+
 # ---------------------------------------------------------------------------
 # Gear selection: the GearSelector protocol + α-hysteresis composition
 # ---------------------------------------------------------------------------
@@ -97,6 +116,74 @@ def is_ensemble(gear: Gear) -> bool:
 def majority_vote(n_correct_votes: int, n_members: int) -> bool:
     """Ensemble decision (Cocktail+): strict majority of member votes."""
     return n_correct_votes * 2 > n_members
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching (token-level serving, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+class ContinuousBatcher:
+    """Token-boundary decisions for a slot-based decode batch.
+
+    Token-level serving replaces "fire one batch, run it to completion"
+    with a *running* decode batch: requests occupy KV-cache slots, every
+    decode step advances all resident requests by one token, and membership
+    changes only at token boundaries. This class owns the two decisions
+    that membership turns on, as pure functions over explicit state, so the
+    real ``TokenEngine`` and the virtual-time token DES cannot diverge
+    (the token extension of the SchedulerCore contract, §2):
+
+    * ``admit(n_active, n_waiting)`` — how many waiting requests join the
+      batch at this boundary (FIFO; as many as there are free slots).
+    * ``boundary_hop(...)`` — per resident request, after its newest token:
+      keep decoding (``None``), resolve, or escalate. End-of-stream uses
+      the ordinary ``next_hop`` rule on the streamed certainty. MID-stream,
+      a request whose streaming certainty has settled clearly below the
+      gear's threshold (below ``early_margin * threshold``, after at least
+      ``min_tokens`` tokens) escalates immediately — the small model is out
+      of its depth and every further token it streams is wasted device
+      time. The hop carries the PROMPT, not the KV cache: the next model
+      re-prefills (caches are architecture-shaped and unshareable).
+    """
+
+    __slots__ = ("core", "n_slots", "min_tokens", "early_margin")
+
+    def __init__(self, core: "SchedulerCore", n_slots: int,
+                 min_tokens: int = 4, early_margin: float = 0.5):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        if min_tokens < 1:
+            raise ValueError(f"min_tokens must be >= 1, got {min_tokens}")
+        if not 0.0 <= early_margin <= 1.0:
+            raise ValueError(
+                f"early_margin must be in [0, 1], got {early_margin}")
+        self.core = core
+        self.n_slots = n_slots
+        self.min_tokens = min_tokens
+        self.early_margin = early_margin
+
+    def admit(self, n_active: int, n_waiting: int) -> int:
+        """Number of waiting requests that join at this token boundary."""
+        free = self.n_slots - n_active
+        if free <= 0 or n_waiting <= 0:
+            return 0
+        return min(free, n_waiting, self.core.cfg.max_batch)
+
+    def boundary_hop(self, stage: int, cert_value: float, pos: int,
+                     gen_len: int, gear: Gear) -> Optional[Hop]:
+        """Decision for one resident request after its ``pos``-th token
+        (1-based): ``None`` keeps decoding; ``Resolved``/``CascadeHop``
+        leave the batch at this boundary."""
+        if pos >= gen_len:
+            # end of stream: the standard cascade rule on the streamed
+            # certainty (recorded in the DecisionTrace like any hop)
+            return self.core.next_hop(stage, cert_value, gear)
+        if pos >= self.min_tokens:
+            casc = gear.cascade
+            if stage < len(casc.thresholds) and \
+                    cert_value < casc.thresholds[stage] * self.early_margin:
+                return self.core.next_hop(stage, cert_value, gear)
+        return None
 
 
 # ---------------------------------------------------------------------------
@@ -225,7 +312,10 @@ class SchedulerCore:
         # routing table.
         self._hop_memo: Dict[Tuple[int, int], tuple] = {}
         self._route_memo: Dict[Tuple[int, str], tuple] = {}
-        self._fire_wait = cfg.max_wait - 1e-9
+        # exact timeout comparison — no epsilon fudge; drivers compute the
+        # wait via ``head_of_line_wait`` so their scheduled timeout events
+        # meet it despite ulp undershoot in (t + max_wait) - t
+        self._fire_wait = cfg.max_wait
 
     # ----------------------------------------------------------- routing
     def route(self, model: str, gear: Gear, u: float) -> int:

@@ -36,17 +36,21 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.cascade import Cascade
-from repro.core.execution import ExecutionBackend, ReplayBackend
+from repro.core.certainty import StreamingCertainty
+from repro.core.execution import (ExecutionBackend, ReplayBackend,
+                                  TokenReplayBackend)
 from repro.core.gears import Gear, GearPlan, uniform_load_fractions
 from repro.core.lp import Replica
 from repro.core.profiles import ProfileSet
-from repro.core.scheduling import (CascadeHop, DecisionTrace, GearSelector,
+from repro.core.scheduling import (CascadeHop, ContinuousBatcher,
+                                   DecisionTrace, GearSelector, Resolved,
                                    RoutePool, SchedulerConfig, SchedulerCore,
-                                   is_ensemble, majority_vote, plan_target,
+                                   head_of_line_wait, is_ensemble,
+                                   majority_vote, plan_target,
                                    with_hysteresis)
 
-__all__ = ["SimConfig", "SimResult", "ServingSimulator", "GearSelector",
-           "trace_to_arrivals", "make_gear"]
+__all__ = ["SimConfig", "SimResult", "TokenSimResult", "ServingSimulator",
+           "GearSelector", "trace_to_arrivals", "make_gear"]
 
 
 @dataclass(frozen=True)
@@ -205,6 +209,59 @@ class _ArrayQueue:
 DeviceEvent = Tuple[float, int, str, float]
 
 
+@dataclass
+class TokenSimResult:
+    """Per-request outcome of a token-level run (``run_token_trace``).
+
+    ``first_token`` is the time the RESOLVING stage emitted its first token
+    (a mid-stream escalation restarts the clock at the next model — the
+    abandoned stream's tokens were never the answer); ``tokens_out`` is the
+    resolving stage's generation length. ``total_tokens`` additionally
+    counts every token of abandoned streams (wasted decode work)."""
+    arrive: np.ndarray              # (completed,) seconds
+    first_token: np.ndarray         # (completed,) seconds
+    complete: np.ndarray            # (completed,) seconds
+    tokens_out: np.ndarray          # (completed,) int
+    correct: np.ndarray             # (completed,) bool
+    resolver: np.ndarray            # (completed,) resolving cascade stage
+    offered: int
+    completed: int
+    horizon: float
+    total_tokens: int = 0
+    device_busy: np.ndarray = field(default_factory=lambda: np.zeros(1))
+    per_model_steps: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def accuracy(self) -> float:
+        return float(self.correct.mean()) if self.completed else 0.0
+
+    @property
+    def ttft(self) -> np.ndarray:
+        return self.first_token - self.arrive
+
+    @property
+    def tpot(self) -> np.ndarray:
+        """Mean seconds per output token after the first, per request."""
+        return (self.complete - self.first_token) \
+            / np.maximum(self.tokens_out - 1, 1)
+
+    def ttft_p95(self) -> float:
+        return float(np.quantile(self.ttft, 0.95)) if self.completed \
+            else math.inf
+
+    def tpot_p95(self) -> float:
+        return float(np.quantile(self.tpot, 0.95)) if self.completed \
+            else math.inf
+
+    @property
+    def token_throughput(self) -> float:
+        """Useful (resolving-stage) tokens per second of makespan."""
+        if not self.completed:
+            return 0.0
+        span = float(self.complete.max() - self.arrive.min())
+        return float(self.tokens_out.sum()) / max(span, 1e-9)
+
+
 class ServingSimulator:
     """Backend-agnostic discrete-event driver.
 
@@ -292,6 +349,227 @@ class ServingSimulator:
         horizon = float(len(qps_per_sec)) + drain
         return self._run(arrivals, gears, selector, horizon=horizon,
                          decision_trace=decision_trace)
+
+    # ------------------------------------------------- token-level execution
+    def run_token_trace(self, gear: Gear, arrivals: np.ndarray,
+                        prompt_lens: np.ndarray,
+                        token_backend: TokenReplayBackend,
+                        mode: str = "continuous", n_slots: int = 8,
+                        min_tokens: int = 4, early_margin: float = 0.5,
+                        stream_mode: str = "ewma", beta: float = 0.35,
+                        horizon: Optional[float] = None,
+                        decision_trace: Optional[DecisionTrace] = None
+                        ) -> TokenSimResult:
+        """Token-level discrete-event mode (DESIGN.md §13).
+
+        Each request is a (prompt length, generation) pair; execution
+        physics come from ``token_backend`` (prompt-proportional prefill,
+        batch-dependent per-token decode steps, per-token certainty-gap
+        streams). Two scheduling modes over the SAME decisions layer:
+
+        * ``continuous`` — requests join/leave the running decode batch at
+          token boundaries (``ContinuousBatcher``); a join inserts a
+          prefill phase (phase split: the resident batch stalls while the
+          joiners' prompts are processed), after which the enlarged batch
+          decodes on.
+        * ``rebatch`` — static batching baseline: a replica admits only
+          when its batch has fully drained, forming batches with the
+          ordinary ``should_fire`` trigger; stragglers hold the batch.
+
+        Cascade decisions run mid-stream: per-token gaps fold into a
+        ``StreamingCertainty`` and ``ContinuousBatcher.boundary_hop``
+        resolves/escalates at token boundaries. An escalation carries the
+        PROMPT to the next model (fresh prefill there), never the cache.
+        """
+        if mode not in ("continuous", "rebatch"):
+            raise ValueError(f"mode must be continuous|rebatch, got {mode!r}")
+        arrivals = np.asarray(arrivals, np.float64)
+        prompt_lens = np.asarray(prompt_lens, np.int64)
+        if arrivals.shape != prompt_lens.shape:
+            raise ValueError(
+                f"arrivals/prompt_lens shape mismatch: {arrivals.shape} vs "
+                f"{prompt_lens.shape}")
+        n_arr = len(arrivals)
+        cfg = self.cfg
+        replicas = self.replicas
+        core = SchedulerCore(replicas, cfg, trace=decision_trace)
+        pool = RoutePool.for_arrivals(cfg.seed, n_arr)
+        if horizon is None:
+            horizon = (float(arrivals[-1]) if n_arr else 0.0) + 120.0
+
+        # per-replica slot capacity: the gear's planned decode_slots when
+        # present, else the uniform default
+        slots_of = [gear.decode_slots.get(r.model, n_slots)
+                    for r in replicas]
+        batchers = [ContinuousBatcher(core, s, min_tokens=min_tokens,
+                                      early_margin=early_margin)
+                    for s in slots_of]
+
+        # per-request records
+        arrive_l = arrivals.tolist()
+        plens = prompt_lens.tolist()
+        first_tok = [math.nan] * n_arr
+        complete = [math.nan] * n_arr
+        tokens_out = [0] * n_arr
+        correct = [False] * n_arr
+        resolver = [-1] * n_arr
+        total_tokens = 0
+
+        # per-replica state: waiting queue + resident decode slots
+        # (parallel lists per slot: request id, stage, tokens generated,
+        # generation length, certainty fold)
+        wait: List[_ArrayQueue] = [_ArrayQueue() for _ in replicas]
+        act_rid: List[List[int]] = [[] for _ in replicas]
+        act_stage: List[List[int]] = [[] for _ in replicas]
+        act_pos: List[List[int]] = [[] for _ in replicas]
+        act_gen: List[List[int]] = [[] for _ in replicas]
+        act_str: List[List[StreamingCertainty]] = [[] for _ in replicas]
+        pending: List[List[Tuple[int, int]]] = [[] for _ in replicas]
+        dev_idle = np.ones(self.num_devices, bool)
+        dev_busy = np.zeros(self.num_devices)
+        per_model_steps: Dict[str, int] = {}
+        reps_on_dev = core.reps_on_dev
+
+        heap: List[Tuple[float, int, str, int]] = []
+        seq = 0
+
+        def push_event(t: float, kind: str, ridx: int):
+            nonlocal seq
+            heapq.heappush(heap, (t, seq, kind, ridx))
+            seq += 1
+
+        def enqueue(rid: int, stage: int, model: str, t: float):
+            ridx = core.route(model, gear, pool.next())
+            wait[ridx].push(rid, stage, t)
+            poll(ridx, t)
+            if wait[ridx].n and mode == "rebatch":
+                push_event(t + cfg.max_wait, "timeout", ridx)
+
+        def poll(ridx: int, t: float):
+            """Start the next phase on ``ridx`` if its device is idle:
+            prefill for admitted joiners first (phase split), else one
+            decode step over the resident batch."""
+            r = replicas[ridx]
+            if not dev_idle[r.device]:
+                return
+            q = wait[ridx]
+            n_act = len(act_rid[ridx])
+            if mode == "continuous":
+                joiners = batchers[ridx].admit(n_act, q.n)
+            else:
+                joiners = 0
+                if n_act == 0 and q.n and core.should_fire(
+                        q.n, head_of_line_wait(t, q.t[q.head], cfg.max_wait),
+                        r.model, gear):
+                    joiners = min(q.n, slots_of[ridx], cfg.max_batch)
+            if joiners:
+                rids, stages = q.pop(joiners)
+                if decision_trace is not None:
+                    decision_trace.record_fire(ridx, rids)
+                pending[ridx] = list(zip(rids, stages))
+                pf = token_backend.prefill_runtime(
+                    r.model, sum(plens[rid] for rid in rids))
+                dev_idle[r.device] = False
+                dev_busy[r.device] += pf
+                push_event(t + pf, "pfdone", ridx)
+            elif n_act:
+                dt = token_backend.decode_step_runtime(r.model, n_act)
+                dev_idle[r.device] = False
+                dev_busy[r.device] += dt
+                per_model_steps[r.model] = \
+                    per_model_steps.get(r.model, 0) + 1
+                push_event(t + dt, "stepdone", ridx)
+
+        def leave(ridx: int, k: int, t: float, hop) -> None:
+            """Remove slot ``k`` from the resident batch per ``hop``."""
+            rid = act_rid[ridx][k]
+            stage = act_stage[ridx][k]
+            if isinstance(hop, Resolved):
+                complete[rid] = t
+                tokens_out[rid] = act_pos[ridx][k]
+                correct[rid] = token_backend.correct(
+                    replicas[ridx].model, rid)
+                resolver[rid] = stage
+            else:
+                enqueue(rid, hop.next_stage, hop.next_model, t)
+            for lst in (act_rid, act_stage, act_pos, act_gen, act_str):
+                lst[ridx].pop(k)
+
+        def boundary(ridx: int, t: float) -> None:
+            """Apply per-request boundary decisions right-to-left (pops
+            keep earlier indices valid)."""
+            model = replicas[ridx].model
+            for k in range(len(act_rid[ridx]) - 1, -1, -1):
+                hop = batchers[ridx].boundary_hop(
+                    act_stage[ridx][k], act_str[ridx][k].value,
+                    act_pos[ridx][k], act_gen[ridx][k], gear)
+                if hop is not None:
+                    leave(ridx, k, t, hop)
+
+        def release_device(dev: int, t: float) -> None:
+            dev_idle[dev] = True
+            for rj in reps_on_dev.get(dev, []):
+                poll(rj, t)
+                if not dev_idle[dev]:
+                    break
+
+        arr_ptr = 0
+        inf = math.inf
+        while True:
+            t_arr = arrive_l[arr_ptr] if arr_ptr < n_arr else inf
+            t_evt = heap[0][0] if heap else inf
+            t = min(t_arr, t_evt)
+            if t == inf or t > horizon:
+                break
+            if t_arr <= t_evt:
+                rid = arr_ptr
+                arr_ptr += 1
+                enqueue(rid, 0, gear.cascade.models[0], t_arr)
+                continue
+            _, _, kind, ridx = heapq.heappop(heap)
+            model = replicas[ridx].model
+            if kind == "pfdone":
+                # joiners become resident; prefill emits each request's
+                # FIRST token (TTFT is measured here — re-stamped when a
+                # later stage becomes the resolving stream)
+                for rid, stage in pending[ridx]:
+                    first_tok[rid] = t_evt
+                    stream = StreamingCertainty(stream_mode, beta)
+                    stream.update(token_backend.token_gap(model, rid, 0))
+                    act_rid[ridx].append(rid)
+                    act_stage[ridx].append(stage)
+                    act_pos[ridx].append(1)
+                    act_gen[ridx].append(
+                        token_backend.gen_len(model, rid))
+                    act_str[ridx].append(stream)
+                    total_tokens += 1
+                pending[ridx] = []
+                boundary(ridx, t_evt)
+                release_device(replicas[ridx].device, t_evt)
+            elif kind == "stepdone":
+                for k in range(len(act_rid[ridx])):
+                    pos = act_pos[ridx][k]
+                    act_str[ridx][k].update(token_backend.token_gap(
+                        model, act_rid[ridx][k], pos))
+                    act_pos[ridx][k] = pos + 1
+                total_tokens += len(act_rid[ridx])
+                boundary(ridx, t_evt)
+                release_device(replicas[ridx].device, t_evt)
+            elif kind == "timeout":
+                poll(ridx, t_evt)
+
+        complete_a = np.asarray(complete, np.float64)
+        done = ~np.isnan(complete_a)
+        return TokenSimResult(
+            arrive=arrivals[done],
+            first_token=np.asarray(first_tok, np.float64)[done],
+            complete=complete_a[done],
+            tokens_out=np.asarray(tokens_out, np.int64)[done],
+            correct=np.asarray(correct, bool)[done],
+            resolver=np.asarray(resolver, np.int32)[done],
+            offered=n_arr, completed=int(done.sum()), horizon=horizon,
+            total_tokens=total_tokens, device_busy=dev_busy,
+            per_model_steps=per_model_steps)
 
     # ----------------------------------------------------------------- core
     def _run(self, arrivals: np.ndarray, gears: List[Gear],
@@ -388,7 +666,9 @@ class ServingSimulator:
             if not dev_idle[r.device] or not dev_alive[r.device]:
                 return
             gear = gears[cur_gear]
-            if not core.should_fire(qlen, t - q.t[q.head], r.model, gear):
+            if not core.should_fire(
+                    qlen, head_of_line_wait(t, q.t[q.head], cfg.max_wait),
+                    r.model, gear):
                 return
             bsz = qlen if qlen < max_batch else max_batch
             sids, stages = q.pop(bsz)

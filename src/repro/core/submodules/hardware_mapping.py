@@ -100,11 +100,19 @@ def _replica_obj(state: PlannerState, model: str, device: int) -> Replica:
     return Replica(model, device, prof.runtime(b) / b)
 
 
+def _replica_mem(state: PlannerState, model: str) -> float:
+    """HBM bytes one replica of ``model`` occupies: weights + the KV-cache
+    reservation for its resident decode slots (token-level serving,
+    DESIGN.md §13 — zero for one-shot plans)."""
+    return state.profiles[model].mem_bytes \
+        + state.kv_reserve.get(model, 0.0)
+
+
 def _mem_per_device(state: PlannerState, replicas: List[Replica]
                     ) -> np.ndarray:
     mem = np.zeros(state.hardware.num_devices)
     for rep in replicas:
-        mem[rep.device] += state.profiles[rep.model].mem_bytes
+        mem[rep.device] += _replica_mem(state, rep.model)
     return mem
 
 
@@ -119,6 +127,7 @@ def _placement_key(state: PlannerState, kind: str, used: List[str],
                    wc_qps: Dict[str, float]) -> Tuple:
     return (kind, tuple(used), tuple(sorted(wc_qps.items())),
             tuple(sorted(state.min_replicas.items())),
+            tuple(sorted(state.kv_reserve.items())),
             state.hardware.num_devices, state.hardware.mem_per_device)
 
 
@@ -150,7 +159,7 @@ def _prune_placement(state: PlannerState, replicas: List[Replica],
             if cnt[rep.model] <= state.min_replicas.get(rep.model, 1):
                 continue  # util = -inf: last / protected replica
             freed = min(over[rep.device],
-                        state.profiles[rep.model].mem_bytes)
+                        _replica_mem(state, rep.model))
             cand = replicas[:i] + replicas[i + 1:]
             u_max, _ = _lp(state, cand, wc_qps)
             if u_max is None:
@@ -194,11 +203,11 @@ def _additive_repair_inner(state: PlannerState, used: List[str],
     need = []
     for m in used:
         need += [m] * state.min_replicas.get(m, 1)
-    for m in sorted(need, key=lambda m: -state.profiles[m].mem_bytes):
+    for m in sorted(need, key=lambda m: -_replica_mem(state, m)):
         d = int(np.argmax(free))
-        if free[d] < state.profiles[m].mem_bytes:
+        if free[d] < _replica_mem(state, m):
             return None  # not even one replica per model fits
-        free[d] -= state.profiles[m].mem_bytes
+        free[d] -= _replica_mem(state, m)
         replicas.append(_replica_obj(state, m, d))
 
     u_cur, _ = _lp(state, replicas, wc_qps)
@@ -207,7 +216,7 @@ def _additive_repair_inner(state: PlannerState, used: List[str],
     while True:
         best = None
         for m in used:
-            mem = state.profiles[m].mem_bytes
+            mem = _replica_mem(state, m)
             for d in range(hw.num_devices):
                 if free[d] < mem:
                     continue
@@ -221,19 +230,25 @@ def _additive_repair_inner(state: PlannerState, used: List[str],
         if best is None:
             return replicas
         u_cur, m, d = best
-        free[d] -= state.profiles[m].mem_bytes
+        free[d] -= _replica_mem(state, m)
         replicas.append(_replica_obj(state, m, d))
 
 
 def solve_joint_placement(profiles, hardware, wc_qps: Dict[str, float],
                           used: Optional[List[str]] = None,
                           min_replicas: Optional[Dict[str, int]] = None,
+                          kv_reserve: Optional[Dict[str, float]] = None,
                           fast_path: bool = True) -> List[Replica]:
     """One shared placement for an aggregate demand (multi-tenant planning,
     core/tenancy.py): run the Eq.-4 prune (with additive repair as usual)
     against the SUM of the tenants' worst-case per-model QPS, outside the
     per-tenant EM loops. The result is then PINNED for every tenant's own
     SP2/SP4 run, exactly like an online re-plan pins the serving placement.
+
+    ``kv_reserve`` maps model -> HBM bytes one replica reserves for its
+    resident KV-cache decode slots (token-level serving, DESIGN.md §13):
+    charged next to weights, so a gear plan whose slot memory exceeds
+    device HBM is rejected HERE, at placement time.
 
     Raises ``InfeasiblePlanError`` when not even one replica per model fits.
     """
@@ -252,6 +267,8 @@ def solve_joint_placement(profiles, hardware, wc_qps: Dict[str, float],
         qps_prior=np.ones(1), fast_path=fast_path)
     if min_replicas:
         state.min_replicas = dict(min_replicas)
+    if kv_reserve:
+        state.kv_reserve = dict(kv_reserve)
     replicas = _prune_placement(
         state,
         [_replica_obj(state, m, d)

@@ -56,7 +56,8 @@ import numpy as np
 from repro.core.gears import Gear, GearPlan, SLO
 from repro.core.lp import Replica
 from repro.core.scheduling import (CascadeHop, DecisionTrace, RoutePool,
-                                   SchedulerCore, is_ensemble, plan_target,
+                                   SchedulerCore, head_of_line_wait,
+                                   is_ensemble, plan_target,
                                    with_hysteresis)
 from repro.core.simulator import SimResult, _ArrayQueue, trace_to_arrivals
 
@@ -578,7 +579,8 @@ def run_multi_tenant_sim(sim, mt_plan: MultiTenantPlan,
             return
         trig = effective_trigger(r.model, qt_counts[ridx],
                                  cur_gears_list())
-        if not core0.fire_at(qlen, t - q.t[q.head], trig):
+        if not core0.fire_at(
+                qlen, head_of_line_wait(t, q.t[q.head], cfg.max_wait), trig):
             return
         bsz = qlen if qlen < max_batch else max_batch
         sids, stages = q.pop(bsz)

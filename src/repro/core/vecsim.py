@@ -222,7 +222,10 @@ class VecSim:
         for i, r in enumerate(self.replicas):
             self.reps_of.setdefault(r.model, []).append(i)
             self.reps_on_dev.setdefault(r.device, []).append(i)
-        self._fire_wait = cfg.max_wait - 1e-9
+        # exact timeout comparison (no epsilon fudge): the elapsed-wait
+        # checks below snap to the scheduled deadline float head_t + mw,
+        # mirroring scheduling.head_of_line_wait
+        self._fire_wait = cfg.max_wait
         self._rep_dev = [r.device for r in self.replicas]
         self._rt_memo: Dict[Tuple[str, int], float] = {}
         # (id(gear), model) -> (gear, cum np, ridx np, fallback, scan list)
@@ -775,7 +778,9 @@ class VecSim:
             return
         gear = lane.gears[lane.cur_gear]
         trig = gear.min_queue_lens.get(r.model, 1)
-        if not (qlen >= trig or t - q.t[q.head] >= self._fire_wait):
+        ht = q.t[q.head]
+        if not (qlen >= trig or t - ht >= self._fire_wait
+                or t >= ht + self._fire_wait):
             return
         max_batch = self.cfg.max_batch
         bsz = qlen if qlen < max_batch else max_batch
@@ -801,7 +806,7 @@ class VecSim:
                 n = len(ts)
                 head_t = q.t[q.head]
                 fw = self._fire_wait
-                while h < n and ts[h] - head_t < fw:
+                while h < n and ts[h] < head_t + fw:
                     h += 1
                 lane.to_head[ridx] = h
         rt = self._runtime(r.model, bsz)
@@ -1068,7 +1073,8 @@ class VecSim:
                 dev = rep_dev[r]
                 if lane.dev_idle[dev] and lane.dev_alive[dev]:
                     q = qs[r]
-                    if q.n and (q.n >= trig or t - q.t[q.head] >= fw):
+                    if q.n and (q.n >= trig or t - q.t[q.head] >= fw
+                                or t >= q.t[q.head] + fw):
                         budgets.append((r, 0))
                     else:
                         budgets.append((r, trig - 1 - q.n))

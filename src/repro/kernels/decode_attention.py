@@ -60,7 +60,8 @@ def _decode_kernel(vl_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
 def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                             valid_len: jax.Array, block_c: int = 512,
                             interpret: bool = False) -> jax.Array:
-    """q (B, H, D); k/v (B, HKV, C, D); valid_len scalar -> (B, H, D)."""
+    """q (B, H, D); k/v (B, HKV, C, D); valid_len scalar or (B,) per-row
+    (ragged batch) -> (B, H, D)."""
     b, h, d = q.shape
     hkv, c = k.shape[1], k.shape[2]
     g = h // hkv

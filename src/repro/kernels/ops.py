@@ -45,7 +45,10 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 @functools.partial(jax.jit, static_argnames=("block_c",))
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      valid_len: jax.Array, block_c: int = 512) -> jax.Array:
-    """q (B,H,D), k/v (B,HKV,C,D), valid_len scalar -> (B,H,D)."""
+    """q (B,H,D), k/v (B,HKV,C,D), valid_len scalar or (B,) -> (B,H,D).
+
+    A (B,) valid_len serves ragged decode batches (continuous batching):
+    the kernel's vl BlockSpec already indexes per batch row."""
     return decode_attention_pallas(q, k, v, valid_len, block_c=block_c,
                                    interpret=_interpret())
 

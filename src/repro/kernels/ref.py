@@ -39,8 +39,8 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
 
 def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                          valid_len: jax.Array) -> jax.Array:
-    """q (B, H, D) one token; k/v (B, HKV, C, D); valid_len scalar i32 —
-    attend to cache positions < valid_len. -> (B, H, D)."""
+    """q (B, H, D) one token; k/v (B, HKV, C, D); valid_len scalar or (B,)
+    i32 — row b attends to cache positions < valid_len[b]. -> (B, H, D)."""
     b, h, d = q.shape
     hkv, c = k.shape[1], k.shape[2]
     g = h // hkv
@@ -49,7 +49,8 @@ def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     scores = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
                         kr.astype(jnp.float32)) / jnp.sqrt(
         jnp.asarray(d, jnp.float32))
-    mask = jnp.arange(c)[None, None, :] < valid_len
+    vl = jnp.broadcast_to(jnp.asarray(valid_len), (b,))
+    mask = jnp.arange(c)[None, None, :] < vl[:, None, None]
     scores = jnp.where(mask, scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     return jnp.einsum("bhk,bhkd->bhd", probs,

@@ -221,27 +221,47 @@ def decode_attention(p: Params, cfg: ModelConfig, x: jax.Array,
                      cache: Params, cache_index: jax.Array
                      ) -> Tuple[jax.Array, Params]:
     """One-token decode. x (B,1,D); cache k/v (B,C,KV,hd); cache_index is the
-    number of tokens already in context (the new token's position)."""
+    number of tokens already in context (the new token's position) — a
+    scalar, or ``(B,)`` for a ragged batch of requests at different
+    generation depths (continuous batching)."""
     b = x.shape[0]
-    positions = jnp.broadcast_to(cache_index, (b, 1))
+    ragged = jnp.ndim(cache_index) != 0
+    positions = jnp.broadcast_to(cache_index, (b,)).reshape(b, 1)
     q, k_new, v_new = _project_qkv(p, cfg, x)
     q = apply_rope(q, positions, cfg.rope_theta)
     k_new = apply_rope(k_new, positions, cfg.rope_theta)
 
     c_len = cache["k"].shape[1]
     slot = jnp.mod(cache_index, c_len) if cfg.sliding_window > 0 else cache_index
-    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+    if ragged:
+        # per-row scatter: row i writes its own slot[i]
+        onehot = jnp.arange(c_len)[None, :] == slot[:, None]      # (B,C)
+        sel = onehot[:, :, None, None]
+        k = jnp.where(sel, k_new.astype(cache["k"].dtype), cache["k"])
+        v = jnp.where(sel, v_new.astype(cache["v"].dtype), cache["v"])
+    else:
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot,
+                                                axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot,
+                                                axis=1)
 
     kr = _repeat_kv(k, cfg.num_heads)
     vr = _repeat_kv(v, cfg.num_heads)
     idx = jnp.arange(c_len)
-    if cfg.sliding_window > 0:
-        # ring buffer: valid once written; all slots valid when full
-        valid = (idx <= slot) | (cache_index >= c_len)
+    if ragged:
+        if cfg.sliding_window > 0:
+            valid = (idx[None, :] <= slot[:, None]) \
+                | (cache_index[:, None] >= c_len)                 # (B,C)
+        else:
+            valid = idx[None, :] <= cache_index[:, None]          # (B,C)
+        mask = valid[:, None, None, :]  # (B,1,1,C)
     else:
-        valid = idx <= cache_index
-    mask = valid[None, None, None, :]  # (1,1,1,C)
+        if cfg.sliding_window > 0:
+            # ring buffer: valid once written; all slots valid when full
+            valid = (idx <= slot) | (cache_index >= c_len)
+        else:
+            valid = idx <= cache_index
+        mask = valid[None, None, None, :]  # (1,1,1,C)
     # repeat_kv form: under GSPMD the grouped 5-dim einsum breaks head-dim
     # sharding propagation and replicates the cache (+4.9x bytes measured,
     # §Perf H4 refuted); the grouped math lives in the shard_map

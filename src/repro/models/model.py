@@ -167,8 +167,11 @@ def _apply_block(spec: LayerSpec, p: Params, cfg: ModelConfig, x: jax.Array,
         else:  # decode
             from repro.distributed.context import get_context
             ctx = get_context()
+            # the shard_map flash body indexes one global slot; ragged
+            # (B,) cache_index batches keep the dense per-row path
             use_flash = (ctx is not None and ctx.mesh is not None
                          and ctx.flash_decode and cfg.sliding_window == 0
+                         and jnp.ndim(cache_index) == 0
                          and cache["k"].shape[1]
                          % ctx.axis_size(ctx.model_axis) == 0)
             if use_flash:
@@ -360,17 +363,25 @@ def _precompute_cross_kv(params: Params, cfg: ModelConfig, memory: jax.Array
 
 
 def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
-            cache_len: int = 0) -> Tuple[jax.Array, Params]:
+            cache_len: Optional[int] = None) -> Tuple[jax.Array, Params]:
     """Process the prompt; returns (last-position logits (B, V) f32, cache).
 
-    cache_len 0 means "capacity = prompt length".
+    cache_len is the KV-cache capacity in tokens; ``None`` (the default)
+    means "capacity = prompt length" (no decode headroom). An explicit
+    cache_len must cover the prompt: cache_len >= prompt_len.
     """
     cross_kv = None
     if cfg.is_encoder_decoder:
         memory = encode(params, cfg, batch["source_frames"])
         cross_kv = _precompute_cross_kv(params, cfg, memory)
     x, positions, _ = _embed_inputs(params, cfg, batch)
-    cache_len = cache_len or x.shape[1]
+    if cache_len is None:
+        cache_len = x.shape[1]
+    elif cache_len < x.shape[1]:
+        raise ValueError(
+            f"prefill: cache_len={cache_len} is smaller than the prompt "
+            f"({x.shape[1]} tokens incl. any modality prefix); the cache "
+            f"would drop prompt positions")
     x, caches, _ = _run_blocks(params["blocks"], cfg, x, positions, "prefill",
                                cross_kv=cross_kv, cache_len=cache_len)
     x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
@@ -388,12 +399,13 @@ def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
                 cache: Params, cache_index: jax.Array
                 ) -> Tuple[jax.Array, Params]:
     """One-token decode. tokens (B, 1); cache from ``prefill``/``init_cache``;
-    cache_index = number of tokens already in context. Returns
-    (logits (B, V) f32, new cache)."""
+    cache_index = number of tokens already in context — a scalar (whole
+    batch at one depth) or ``(B,)`` (ragged batch: per-request depths, the
+    continuous-batching case). Returns (logits (B, V) f32, new cache)."""
     x = embed_tokens(params["embed"], tokens, cfg.d_model)
     x = constrain(x, "batch", None, None)
     b = x.shape[0]
-    positions = jnp.broadcast_to(cache_index, (b, 1))
+    positions = jnp.broadcast_to(cache_index, (b,)).reshape(b, 1)
     x, caches, _ = _run_blocks(
         params["blocks"], cfg, x, positions, "decode",
         caches=cache["blocks"], cross_kv=cache.get("cross"),

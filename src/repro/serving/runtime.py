@@ -42,7 +42,8 @@ from repro.core.execution import EngineBackend, ExecutionBackend
 from repro.core.gears import Gear, GearPlan
 from repro.core.scheduling import (CascadeHop, DecisionTrace, GearSelector,
                                    RoutePool, SchedulerConfig, SchedulerCore,
-                                   plan_target, with_hysteresis)
+                                   head_of_line_wait, plan_target,
+                                   with_hysteresis)
 from repro.serving.engine import InferenceEngine
 
 
@@ -243,7 +244,8 @@ class CascadeServer:
         plan, cur, _ = self._active     # one consistent read
         model = plan.replicas[ridx].model
         head = q.head_time()
-        head_wait = now - head if head is not None else 0.0
+        head_wait = head_of_line_wait(now, head, self.cfg.max_wait) \
+            if head is not None else 0.0
         gear = plan.gears[cur]
         if not self.core.should_fire(qlen, head_wait, model, gear):
             return None
@@ -618,7 +620,8 @@ class MultiTenantServer:
             [self._active[ti][0].gears[self._active[ti][1]]
              for ti in range(len(self.names))])
         head = q.head_time()
-        head_wait = now - head if head is not None else 0.0
+        head_wait = head_of_line_wait(now, head, self.cfg.max_wait) \
+            if head is not None else 0.0
         if not self.cores[0].fire_at(qlen, head_wait, trig):
             return None
         batch = q.pop_batch_tenant(self.cores[0].batch_size(qlen),

@@ -1,0 +1,283 @@
+"""Token-level serving engine (DESIGN.md §13): continuous batching over the
+real ``prefill``/``decode_step`` kernels.
+
+The one-shot ``InferenceEngine`` (serving/engine.py) treats a request as a
+single classify-and-resolve unit. Generation breaks that model: a request
+occupies KV-cache memory for its whole lifetime and produces a decision
+point at EVERY token. This module adds the token-native execution layer:
+
+* ``SlotEngine`` — one model's resident decode batch. A fixed pool of
+  ``n_slots`` KV-cache slots (one ``init_cache`` allocation, batch axis 1
+  of the rep-stacked cache arrays) is driven by ONE jitted ``decode_step``
+  executable of static shape ``(n_slots, 1)`` with a per-slot ``(B,)``
+  ``cache_index`` — the ragged-decode path. Requests join by prefilling at
+  batch 1 and scattering the resulting cache into a free slot; rows are
+  independent under the ragged per-row masks, so joins are bit-invisible
+  to resident requests (pinned by tests/test_token_engine.py).
+* ``TokenEngine`` — a cascade of SlotEngines sharing the scheduling
+  decision layer with the token DES: ``ContinuousBatcher`` admits waiting
+  requests at token boundaries (prefill phase before the next decode
+  step — the phase split) and decides mid-stream escalation from a
+  ``StreamingCertainty`` fold of per-token top-2 gaps. Escalation carries
+  the PROMPT to the next model, never the cache (incompatible layouts
+  across architectures; the paper's cascades re-run the larger model from
+  scratch for the same reason).
+
+The engine advances in deterministic logical steps (no wall clock): timing
+lives in the DES (``ServingSimulator.run_token_trace``), which consumes the
+same ``ContinuousBatcher``/``StreamingCertainty`` objects, so engine and
+simulator agree on every admission and escalation decision by construction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.certainty import StreamingCertainty, top2_gap
+from repro.core.gears import Gear
+from repro.core.scheduling import (ContinuousBatcher, SchedulerConfig,
+                                   SchedulerCore)
+from repro.models import model as model_lib
+
+__all__ = ["SlotEngine", "TokenEngine", "TokenRequest", "TokenResult",
+           "greedy_generate"]
+
+
+def greedy_generate(params, cfg, prompt: np.ndarray, max_new: int
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Reference single-request greedy decode: prefill + N x decode_step.
+
+    prompt (L,) int32 -> (tokens (max_new,), per-token top-2 gaps
+    (max_new,)). The parity tests pin this position-for-position against
+    the full ``forward`` pass.
+    """
+    toks = np.asarray(prompt, np.int32)[None, :]
+    cache_len = toks.shape[1] + max_new
+    logits, cache = model_lib.prefill(params, cfg, {"tokens": toks},
+                                      cache_len=cache_len)
+    out, gaps = [], []
+    pos = toks.shape[1]
+    for _ in range(max_new):
+        nxt = int(np.argmax(np.asarray(logits[0])))
+        gaps.append(float(np.asarray(top2_gap(logits))[0]))
+        out.append(nxt)
+        step = np.full((1, 1), nxt, np.int32)
+        logits, cache = model_lib.decode_step(
+            params, cfg, step, cache, np.asarray([pos], np.int32))
+        pos += 1
+    return np.asarray(out, np.int32), np.asarray(gaps, np.float64)
+
+
+class SlotEngine:
+    """One model's resident decode batch over a fixed KV-slot pool."""
+
+    def __init__(self, name: str, params, cfg, n_slots: int, max_len: int):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        if max_len < 2:
+            raise ValueError(f"max_len must be >= 2, got {max_len}")
+        self.name = name
+        self.params = params
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache = model_lib.init_cache(cfg, n_slots, max_len)
+        self.free: List[int] = list(range(n_slots - 1, -1, -1))  # pop -> 0
+        # per-slot context depth (tokens already in cache); 0 = idle slot
+        self.pos = np.zeros(n_slots, np.int32)
+        self.active = np.zeros(n_slots, bool)
+        # one decode executable, static shape (n_slots, 1) + (n_slots,)
+        self._decode = jax.jit(
+            lambda p, t, c, i: model_lib.decode_step(p, cfg, t, c, i))
+        self._prefill = jax.jit(
+            lambda p, t: model_lib.prefill(p, cfg, {"tokens": t},
+                                           cache_len=max_len))
+
+    @property
+    def n_active(self) -> int:
+        return self.n_slots - len(self.free)
+
+    def prefill_into_slot(self, prompt: np.ndarray) -> Tuple[int, np.ndarray]:
+        """Prefill one prompt and scatter its cache into a free slot.
+
+        Returns (slot index, last-position logits (V,)). The scatter
+        overwrites the slot's whole cache lane, so stale contents from the
+        previous occupant cannot leak.
+        """
+        if not self.free:
+            raise RuntimeError(f"{self.name}: no free decode slot")
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.ndim != 1 or prompt.size == 0:
+            raise ValueError("prompt must be a non-empty 1-D token array")
+        if prompt.size >= self.max_len:
+            raise ValueError(
+                f"prompt ({prompt.size} tokens) leaves no decode headroom "
+                f"in a {self.max_len}-token slot")
+        logits, cache1 = self._prefill(self.params, prompt[None, :])
+        slot = self.free.pop()
+        # rep-stacked cache leaves are (reps, B, ...): batch at axis 1
+        self.cache = jax.tree.map(
+            lambda pool, new: pool.at[:, slot].set(
+                new[:, 0].astype(pool.dtype)), self.cache, cache1)
+        self.pos[slot] = prompt.size
+        self.active[slot] = True
+        return slot, np.asarray(logits[0])
+
+    def release(self, slot: int) -> None:
+        if not self.active[slot]:
+            raise ValueError(f"slot {slot} is not active")
+        self.active[slot] = False
+        self.pos[slot] = 0
+        self.free.append(slot)
+
+    def decode(self, tokens_by_slot: Dict[int, int]) -> Dict[int, np.ndarray]:
+        """One ragged decode step over the resident batch.
+
+        tokens_by_slot: {slot: next input token} for every ACTIVE slot.
+        Idle slots ride along at position 0 with a zero token (their rows
+        are independent under the per-row ragged masks and their lanes are
+        fully overwritten at the next prefill scatter). Returns
+        {slot: logits (V,)} and advances each active slot's depth.
+        """
+        if set(tokens_by_slot) != set(np.flatnonzero(self.active)):
+            raise ValueError("decode needs exactly the active slots")
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        for s, t in tokens_by_slot.items():
+            if self.pos[s] >= self.max_len:
+                raise ValueError(
+                    f"slot {s} is full ({self.max_len} tokens)")
+            toks[s, 0] = t
+        logits, self.cache = self._decode(
+            self.params, toks, self.cache, self.pos.copy())
+        logits = np.asarray(logits)
+        out = {}
+        for s in tokens_by_slot:
+            out[s] = logits[s]
+            self.pos[s] += 1
+        return out
+
+
+@dataclass
+class TokenRequest:
+    rid: int
+    prompt: np.ndarray            # (L,) int32
+    max_new: int
+
+
+@dataclass
+class TokenResult:
+    rid: int
+    tokens: List[int] = field(default_factory=list)
+    gaps: List[float] = field(default_factory=list)
+    resolver: int = -1            # cascade stage that resolved the request
+    hops: int = 0                 # mid-stream / end-of-stream escalations
+    first_token_step: int = -1    # logical step of the first decode output
+    done_step: int = -1
+
+
+@dataclass
+class _Active:
+    req: TokenRequest
+    slot: int
+    next_token: int               # greedy argmax fed to the next step
+    cert: StreamingCertainty
+    res: TokenResult
+
+
+class TokenEngine:
+    """Continuous-batching cascade over per-model ``SlotEngine`` pools.
+
+    Decisions (admission, escalation, resolution) are delegated to the
+    same ``ContinuousBatcher``/``SchedulerCore`` layer the token DES uses;
+    this class only owns the real-model execution state. ``serve`` runs
+    the whole request set to completion in deterministic logical steps —
+    one step = (admit + prefill joiners) then one ragged decode per stage.
+    """
+
+    def __init__(self, stages: Sequence[SlotEngine], gear: Gear,
+                 cfg: SchedulerConfig = SchedulerConfig(),
+                 min_tokens: int = 4, early_margin: float = 0.5,
+                 stream_mode: str = "ewma", beta: float = 0.35):
+        if not stages:
+            raise ValueError("TokenEngine needs at least one SlotEngine")
+        if tuple(e.name for e in stages) != tuple(gear.cascade.models):
+            raise ValueError(
+                f"stage engines {[e.name for e in stages]} do not match "
+                f"the gear cascade {list(gear.cascade.models)}")
+        self.stages = list(stages)
+        self.gear = gear
+        self.core = SchedulerCore([], cfg)
+        self.batchers = [
+            ContinuousBatcher(self.core, e.n_slots, min_tokens=min_tokens,
+                              early_margin=early_margin) for e in stages]
+        self.stream_mode = stream_mode
+        self.beta = beta
+
+    def serve(self, requests: Sequence[TokenRequest]
+              ) -> Dict[int, TokenResult]:
+        """Run all requests through the cascade; returns {rid: result}."""
+        waiting: List[List[Tuple[TokenRequest, TokenResult]]] = [
+            [] for _ in self.stages]
+        act: List[List[_Active]] = [[] for _ in self.stages]
+        results: Dict[int, TokenResult] = {}
+        for r in requests:
+            res = TokenResult(rid=r.rid)
+            results[r.rid] = res
+            waiting[0].append((r, res))
+
+        step = 0
+        while any(waiting) or any(act):
+            for si, eng in enumerate(self.stages):
+                # admission at the token boundary: prefill phase first
+                k = self.batchers[si].admit(eng.n_active, len(waiting[si]))
+                for _ in range(k):
+                    req, res = waiting[si].pop(0)
+                    slot, logits = eng.prefill_into_slot(req.prompt)
+                    gap = float(np.asarray(top2_gap(logits[None, :]))[0])
+                    cert = StreamingCertainty(mode=self.stream_mode,
+                                              beta=self.beta)
+                    cert.update(gap)
+                    nxt = int(np.argmax(logits))
+                    res.tokens.append(nxt)
+                    res.gaps.append(gap)
+                    if res.first_token_step < 0:
+                        res.first_token_step = step
+                    act[si].append(_Active(req, slot, nxt, cert, res))
+                if not act[si]:
+                    continue
+                # one ragged decode step over the resident batch
+                out = eng.decode({a.slot: a.next_token for a in act[si]})
+                for a in act[si]:
+                    logits = out[a.slot]
+                    gap = float(np.asarray(top2_gap(logits[None, :]))[0])
+                    a.cert.update(gap)
+                    a.next_token = int(np.argmax(logits))
+                    a.res.tokens.append(a.next_token)
+                    a.res.gaps.append(gap)
+                # token-boundary decisions (iterate over a copy: leaves
+                # mutate the active list)
+                for a in list(act[si]):
+                    hop = self.batchers[si].boundary_hop(
+                        si, a.cert.value, len(a.res.tokens),
+                        a.req.max_new, self.gear)
+                    if hop is None:
+                        continue
+                    eng.release(a.slot)
+                    act[si].remove(a)
+                    if getattr(hop, "next_stage", None) is not None:
+                        # escalate: prompt (never the cache) to next model
+                        a.res.hops += 1
+                        a.res.tokens.clear()
+                        a.res.gaps.clear()
+                        # TTFT re-stamps at the resolving stage (as in the
+                        # token DES): the user-visible stream restarts
+                        a.res.first_token_step = -1
+                        waiting[hop.next_stage].append((a.req, a.res))
+                    else:
+                        a.res.resolver = si
+                        a.res.done_step = step
+            step += 1
+        return results

@@ -105,6 +105,32 @@ def test_decode_attention_sweep(b, h, hkv, c, d, vl):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
 
 
+@pytest.mark.skipif(
+    tuple(int(x) for x in jax.__version__.split(".")[:3]) < (0, 4, 37),
+    reason="ragged (B,) valid_len in interpret-mode pallas needs the "
+           f"per-row BlockSpec scalar path (jax {jax.__version__}; "
+           "needs >= 0.4.37)")
+@pytest.mark.parametrize("vl", [[100, 7, 256], [1, 64, 33]])
+def test_decode_attention_ragged_batch(vl):
+    """Per-row (B,) valid_len — the continuous-batching cache layout:
+    matches the ref oracle AND per-row scalar calls (row independence)."""
+    b, h, hkv, c, d = 3, 8, 2, 256, 32
+    q = randf((b, h, d))
+    k = randf((b, hkv, c, d))
+    v = randf((b, hkv, c, d))
+    vl_arr = jnp.asarray(vl, jnp.int32)
+    out = decode_attention_pallas(q, k, v, vl_arr, block_c=64,
+                                  interpret=True)
+    ref = ops.decode_attention_ref(q, k, v, vl_arr)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+    for i in range(b):
+        solo = decode_attention_pallas(q[i:i + 1], k[i:i + 1], v[i:i + 1],
+                                       jnp.asarray(vl[i]), block_c=64,
+                                       interpret=True)
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(solo[0]),
+                                   atol=1e-6)
+
+
 def test_decode_attention_valid_len_masks_garbage():
     b, h, hkv, c, d = 1, 4, 2, 128, 32
     q = randf((b, h, d))

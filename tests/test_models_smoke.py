@@ -52,11 +52,15 @@ def test_prefill_decode_shapes(arch):
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     b, s = 2, 16
     batch = make_batch(cfg, b, s, with_labels=False)
-    logits, cache = M.prefill(params, cfg, batch, cache_len=s + 4)
+    # the cache must cover the FULL prompt incl. any modality prefix
+    # (prefill validates this since the cache_len sentinel fix)
+    s_tot = s + (cfg.frontend.num_prefix_embeddings
+                 if cfg.frontend.kind == "vision" else 0)
+    logits, cache = M.prefill(params, cfg, batch, cache_len=s_tot + 4)
     assert logits.shape == (b, cfg.vocab_size)
     tok = jnp.zeros((b, 1), jnp.int32)
     dlogits, cache2 = M.decode_step(params, cfg, tok, cache,
-                                    jnp.asarray(s, jnp.int32))
+                                    jnp.asarray(s_tot, jnp.int32))
     assert dlogits.shape == (b, cfg.vocab_size)
     assert bool(jnp.all(jnp.isfinite(dlogits)))
     # cache structure preserved

@@ -20,7 +20,7 @@ from repro.core import (DecisionTrace, RoutePool, SchedulerConfig,
 from repro.core.cascade import Cascade
 from repro.core.gears import GearPlan, SLO
 from repro.core.lp import Replica
-from repro.core.scheduling import CascadeHop, Resolved
+from repro.core.scheduling import CascadeHop, Resolved, head_of_line_wait
 from repro.core.simulator import make_gear, trace_to_arrivals
 from repro.serving.runtime import CascadeServer, Request
 
@@ -262,7 +262,11 @@ def test_should_fire_trigger_and_timeout():
     assert not core.should_fire(3, 0.01, "a", g)          # below trigger
     assert core.should_fire(4, 0.0, "a", g)               # trigger reached
     assert core.should_fire(1, 0.05, "a", g)              # HOL timeout
-    assert core.should_fire(1, 0.05 - 1e-12, "a", g)      # boundary epsilon
+    # the comparison is EXACT (no epsilon fudge): a wait one ulp short of
+    # max_wait does not fire — drivers snap the wait to max_wait at the
+    # scheduled deadline float via scheduling.head_of_line_wait instead
+    assert not core.should_fire(1, 0.05 - 1e-12, "a", g)
+    assert core.should_fire(1, head_of_line_wait(1.05, 1.0, 0.05), "a", g)
 
 
 def test_next_hop_threshold_semantics():
