@@ -100,6 +100,15 @@ def main(quick: bool = False):
         res.add("accuracy", round(out.accuracy, 4), mode=mode)
         res.add("completed", out.completed, mode=mode)
         res.add("device_s_per_1k_tokens", round(cost, 4), mode=mode)
+        # step-time breakdown: where each model's busy seconds went
+        for m in sorted(set(out.per_model_prefill_time)
+                        | set(out.per_model_decode_time)):
+            res.add("prefill_busy_s",
+                    round(out.per_model_prefill_time.get(m, 0.0), 4),
+                    mode=mode, model=m)
+            res.add("decode_busy_s",
+                    round(out.per_model_decode_time.get(m, 0.0), 4),
+                    mode=mode, model=m)
 
     c, r = runs["continuous"], runs["rebatch"]
     res.add("throughput_gain",

@@ -31,6 +31,7 @@ BENCHES = [
     "bench_replanning",          # beyond-paper online re-planning drift
     "bench_multitenant",         # beyond-paper multi-tenant shared fleet
     "bench_tokens",              # token-level continuous batching vs rebatch
+    "bench_decode_loop",         # device-resident fused loop vs host loop
 ]
 
 

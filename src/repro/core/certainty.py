@@ -132,6 +132,81 @@ class StreamingCertainty:
 
 
 # ---------------------------------------------------------------------------
+# Device-side streaming fold (fused decode loop, DESIGN.md §14)
+# ---------------------------------------------------------------------------
+#
+# The fused decode executable folds per-token gaps into the same running
+# statistics as ``StreamingCertainty``, but as (B,) float32 arrays carried
+# through the jitted step (a ``lax.scan`` carry at K > 1), so each step can
+# transfer (B,) certainty values instead of (B, V) logits. The host fold
+# (float64, above) stays the DECISION authority — both token executors keep
+# folding the returned gap trace through ``StreamingCertainty`` so
+# escalation decisions are bit-identical to the pre-fusion path and to the
+# token DES; the device fold is what ships off-device and what the
+# speculative multi-token guard consults, pinned to the host fold within
+# float32 tolerance by tests/test_decode_loop.py.
+
+FoldState = Dict[str, "jax.Array"]
+
+
+def device_fold_init(batch: int) -> FoldState:
+    """Fresh per-row fold state: {count, mean, min, ewma} of shape (B,)."""
+    return {
+        "count": jnp.zeros((batch,), jnp.int32),
+        "mean": jnp.zeros((batch,), jnp.float32),
+        "min": jnp.full((batch,), jnp.inf, jnp.float32),
+        "ewma": jnp.zeros((batch,), jnp.float32),
+    }
+
+
+def device_fold_update(state: FoldState, gap: jax.Array, beta: float
+                       ) -> FoldState:
+    """Fold one per-row gap (B,) f32 — same recurrences as
+    ``StreamingCertainty.update``, elementwise over the batch (beta is a
+    trace-time constant)."""
+    gap = gap.astype(jnp.float32)
+    count = state["count"] + 1
+    first = state["count"] == 0
+    return {
+        "count": count,
+        "mean": state["mean"]
+        + (gap - state["mean"]) / count.astype(jnp.float32),
+        "min": jnp.minimum(state["min"], gap),
+        "ewma": jnp.where(
+            first, gap,
+            state["ewma"] + jnp.float32(beta) * (gap - state["ewma"])),
+    }
+
+
+def device_fold_value(state: FoldState, mode: str) -> jax.Array:
+    """(B,) certainty values for ``mode`` (0.0 before any token), matching
+    ``StreamingCertainty.value``."""
+    if mode == "mean":
+        v = state["mean"]
+    elif mode == "min":
+        v = state["min"]
+    elif mode == "ewma":
+        v = state["ewma"]
+    else:
+        raise ValueError(
+            f"fold mode must be ewma|mean|min, got {mode!r}")
+    return jnp.where(state["count"] == 0, jnp.float32(0.0), v)
+
+
+def device_fold_set_rows(state: FoldState, rows: jax.Array, gap: jax.Array
+                         ) -> FoldState:
+    """Reset ``rows`` to a one-token fold seeded with ``gap`` — the join
+    path (the prefill emits each request's first token/gap)."""
+    gap = gap.astype(jnp.float32)
+    return {
+        "count": state["count"].at[rows].set(1),
+        "mean": state["mean"].at[rows].set(gap),
+        "min": state["min"].at[rows].set(gap),
+        "ewma": state["ewma"].at[rows].set(gap),
+    }
+
+
+# ---------------------------------------------------------------------------
 # Threshold calibration utilities (host-side, numpy)
 # ---------------------------------------------------------------------------
 

@@ -36,8 +36,8 @@ from typing import (Callable, Dict, List, Mapping, Optional, Sequence, Tuple,
 
 import numpy as np
 
-from repro.core.profiles import (ModelProfile, ProfileSet, TokenProfileSet,
-                                 ValidationRecord)
+from repro.core.profiles import (ModelProfile, ProfileSet, TokenProfile,
+                                 TokenProfileSet, ValidationRecord)
 
 __all__ = ["BatchExecution", "ExecutionBackend", "ReplayBackend",
            "EngineBackend", "CostModelBackend", "TokenReplayBackend",
@@ -280,6 +280,52 @@ class TokenReplayBackend:
 
     def kv_bytes_per_slot(self, model: str) -> float:
         return self.token_profiles[model].kv_bytes_per_slot
+
+    @classmethod
+    def from_gap_streams(cls, models: Sequence[str],
+                         stage_gaps: Sequence[Mapping[int, Sequence[float]]],
+                         gen_len: Sequence[int],
+                         correct: Optional[Mapping[str, Sequence[bool]]]
+                         = None,
+                         prefill_per_token: float = 1e-4,
+                         decode_step_runtime: float = 1e-3,
+                         kv_bytes_per_slot: float = 1.0
+                         ) -> "TokenReplayBackend":
+        """Backend that replays gap streams RECORDED by a real engine run
+        (``TokenResult.stage_gaps``) — the bridge for engine-vs-DES
+        decision-parity tests (DESIGN.md §14).
+
+        ``stage_gaps[sid]`` maps stage index -> the per-token gaps request
+        ``sid`` actually consumed at that stage; ``gen_len[sid]`` is its
+        generation budget (``max_new``). Rows for (model, sid) pairs the
+        request never visited are zero-filled — under a parity replay the
+        DES makes the same decisions from the same folds, so it never
+        reads them; a mid-stream-escalated stage's stream is zero-padded
+        past the escalation point for the same reason. Runtimes are
+        uniform placeholders (parity tests compare DECISIONS, not time).
+        """
+        n = len(stage_gaps)
+        if n == 0 or len(gen_len) != n:
+            raise ValueError(
+                f"stage_gaps/gen_len must align and be non-empty "
+                f"({n} vs {len(gen_len)})")
+        gen = np.asarray(gen_len, np.int64)
+        width = max(1, int(gen.max()))
+        profiles: TokenProfileSet = {}
+        for si, name in enumerate(models):
+            gaps = np.zeros((n, width), np.float64)
+            for sid, per_stage in enumerate(stage_gaps):
+                row = np.asarray(per_stage.get(si, ()), np.float64)
+                gaps[sid, :row.size] = row[:width]
+            corr = np.asarray(correct[name], bool) if correct is not None \
+                else np.ones(n, bool)
+            profiles[name] = TokenProfile(
+                name=name, prefill_per_token=prefill_per_token,
+                decode_batch_sizes=np.asarray([1.0]),
+                decode_step_runtimes=np.asarray([decode_step_runtime]),
+                kv_bytes_per_slot=kv_bytes_per_slot,
+                gen_len=gen, gaps=gaps, correct=corr)
+        return cls(profiles)
 
 
 # ---------------------------------------------------------------------------

@@ -185,6 +185,54 @@ class ContinuousBatcher:
                 return self.core.next_hop(stage, cert_value, gear)
         return None
 
+    def stream_trace_hop(self, stage: int, cert: "object",
+                         gaps: Sequence[float], start_pos: int,
+                         gen_len: int, gear: Gear
+                         ) -> Tuple[int, Optional[Hop]]:
+        """Boundary decisions over a returned gap trace (fused loop,
+        DESIGN.md §14).
+
+        The device-resident loop runs K decode steps per executable call
+        and hands back the per-token gap trace; this method replays the
+        EXACT per-boundary rule over it: fold each gap into ``cert`` (a
+        ``StreamingCertainty`` — the same float64 fold every executor
+        uses, so decisions stay bit-identical to the K=1 path and the
+        token DES), consult ``boundary_hop`` at the same token counts a
+        single-step loop would have, and STOP at the first decision —
+        tokens past it are speculative and the caller discards them.
+
+        Returns (n_consumed, hop): ``n_consumed`` gaps were folded (the
+        row's real tokens); ``hop`` is None if the row decodes on.
+        """
+        for j, g in enumerate(gaps):
+            v = cert.update(float(g))
+            hop = self.boundary_hop(stage, v, start_pos + j + 1, gen_len,
+                                    gear)
+            if hop is not None:
+                return j + 1, hop
+        return len(gaps), None
+
+    def near_boundary(self, stage: int, cert_value: float, pos: int,
+                      gen_len: int, gear: Gear, slack: float = 1.5) -> bool:
+        """Speculation guard: is this row close enough to an escalation
+        boundary that a multi-token scan would likely waste tokens?
+
+        The fused engine collapses K to 1 whenever any row answers True
+        (and whenever any request is waiting — see ``TokenEngine``), so
+        speculative scans only run deep inside a stream's steady state.
+        ``slack`` widens the mid-stream escalation band: a row whose
+        streaming certainty sits below ``slack x`` the escalation
+        threshold is treated as near. End-of-stream nearness is handled
+        separately by capping K at the tokens remaining. Purely a
+        performance heuristic — a wrong answer costs discarded
+        speculative tokens, never a decision (decisions are re-derived
+        from the gap trace at the same token counts)."""
+        casc = gear.cascade
+        if stage >= len(casc.thresholds):
+            return False            # terminal stage never escalates
+        return cert_value < casc.thresholds[stage] * self.early_margin \
+            * slack
+
 
 # ---------------------------------------------------------------------------
 # Deterministic routing randomness (shared so executors can be compared)

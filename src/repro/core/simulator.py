@@ -230,6 +230,10 @@ class TokenSimResult:
     total_tokens: int = 0
     device_busy: np.ndarray = field(default_factory=lambda: np.zeros(1))
     per_model_steps: Dict[str, int] = field(default_factory=dict)
+    # step-time breakdown: busy seconds split by phase per model (prefill
+    # = join phases, decode = resident-batch steps); sums to device_busy
+    per_model_prefill_time: Dict[str, float] = field(default_factory=dict)
+    per_model_decode_time: Dict[str, float] = field(default_factory=dict)
 
     @property
     def accuracy(self) -> float:
@@ -428,6 +432,8 @@ class ServingSimulator:
         dev_idle = np.ones(self.num_devices, bool)
         dev_busy = np.zeros(self.num_devices)
         per_model_steps: Dict[str, int] = {}
+        pf_time: Dict[str, float] = {}
+        dec_time: Dict[str, float] = {}
         reps_on_dev = core.reps_on_dev
 
         heap: List[Tuple[float, int, str, int]] = []
@@ -471,11 +477,13 @@ class ServingSimulator:
                     r.model, sum(plens[rid] for rid in rids))
                 dev_idle[r.device] = False
                 dev_busy[r.device] += pf
+                pf_time[r.model] = pf_time.get(r.model, 0.0) + pf
                 push_event(t + pf, "pfdone", ridx)
             elif n_act:
                 dt = token_backend.decode_step_runtime(r.model, n_act)
                 dev_idle[r.device] = False
                 dev_busy[r.device] += dt
+                dec_time[r.model] = dec_time.get(r.model, 0.0) + dt
                 per_model_steps[r.model] = \
                     per_model_steps.get(r.model, 0) + 1
                 push_event(t + dt, "stepdone", ridx)
@@ -569,7 +577,9 @@ class ServingSimulator:
             resolver=np.asarray(resolver, np.int32)[done],
             offered=n_arr, completed=int(done.sum()), horizon=horizon,
             total_tokens=total_tokens, device_busy=dev_busy,
-            per_model_steps=per_model_steps)
+            per_model_steps=per_model_steps,
+            per_model_prefill_time=pf_time,
+            per_model_decode_time=dec_time)
 
     # ----------------------------------------------------------------- core
     def _run(self, arrivals: np.ndarray, gears: List[Gear],

@@ -91,3 +91,24 @@ def top2gap_pallas(scores: jax.Array, block_b: int = 8, block_v: int = 512,
         interpret=interpret,
     )(scores)
     return gap[:b], idx[:b]
+
+
+def argmax_gap(scores: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Fused greedy-sampling reduction: scores (B, V) ->
+    (argmax (B,) i32, top-1 minus top-2 gap (B,) f32).
+
+    This is the device-resident decode loop's per-step reduction
+    (DESIGN.md §14): folded INTO the jitted decode step so the step ships
+    (B,) tokens + (B,) certainty values off-device instead of (B, V)
+    logits. On a TPU backend it lowers to the Pallas kernel above (one
+    HBM pass for both outputs); elsewhere it falls back to
+    ``lax.top_k``/``argmax``, which is bit-identical to the host path the
+    pre-fusion engine used (``core.certainty.top2_gap`` + ``np.argmax``) —
+    both select the same maxima, ties broken to the lowest index.
+    """
+    if jax.default_backend() == "tpu":
+        gap, idx = top2gap_pallas(scores)
+        return idx, gap
+    top2 = jax.lax.top_k(scores, 2)[0]
+    gap = (top2[..., 0] - top2[..., 1]).astype(jnp.float32)
+    return jnp.argmax(scores, axis=-1).astype(jnp.int32), gap

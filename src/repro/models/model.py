@@ -420,6 +420,134 @@ def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Device-resident decode loop entry points (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+def decode_fused_steps(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                       cache: Params, positions: jax.Array,
+                       active: jax.Array, fold_state: Dict[str, jax.Array],
+                       *, k: int = 1, beta: float = 0.35,
+                       mode: str = "ewma"
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array,
+                                  Params, jax.Array, Dict[str, jax.Array]]:
+    """``k`` greedy decode steps fused into one executable.
+
+    The per-step greedy argmax, the top-2-gap reduction
+    (``kernels.top2gap.argmax_gap``) and the streaming-certainty fold
+    (``core.certainty.device_fold_*``) run inside the jit, and at k > 1
+    the whole loop is a ``lax.scan`` whose carry — tokens, KV cache,
+    positions, fold state — never leaves the device. Each call transfers
+    O(k·B) scalars to the host instead of k·(B, V) logits.
+
+    tokens (B,) i32     — each row's next input token (the previous argmax)
+    positions (B,) i32  — per-row context depth; inactive rows are pinned
+                          to position 0 (their lanes are scratch, fully
+                          overwritten at the next prefill scatter)
+    active (B,) bool    — resident-request mask; inactive rows neither
+                          advance positions nor feed their sampled token
+                          forward
+    fold_state          — ``device_fold_init`` pytree of (B,) arrays
+
+    Returns (token trace (k, B) i32, gap trace (k, B) f32, certainty trace
+    (k, B) f32, next input tokens (B,), cache, positions, fold state).
+    """
+    from repro.core import certainty as _cert
+    from repro.kernels.top2gap import argmax_gap
+
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    active_i = active.astype(positions.dtype)
+
+    def body(carry, _):
+        toks, cache, pos, st = carry
+        pos_eff = jnp.where(active, pos, 0)
+        logits, cache = decode_step(params, cfg, toks[:, None], cache,
+                                    pos_eff)
+        nxt, gap = argmax_gap(logits)
+        st = _cert.device_fold_update(st, gap, beta)
+        cert = _cert.device_fold_value(st, mode)
+        toks = jnp.where(active, nxt, toks)
+        pos = pos + active_i
+        return (toks, cache, pos, st), (nxt, gap, cert)
+
+    init = (tokens, cache, positions, fold_state)
+    if k == 1:
+        carry, (tt, gt, ct) = body(init, None)
+        tt, gt, ct = tt[None], gt[None], ct[None]
+    else:
+        carry, (tt, gt, ct) = jax.lax.scan(body, init, None, length=k)
+    toks, cache, pos, st = carry
+    return tt, gt, ct, toks, cache, pos, st
+
+
+def bucketed_prefill_supported(cfg: ModelConfig) -> bool:
+    """Whether right-padded batched prefill is EXACT for this config.
+
+    Right padding is invisible to a row's true positions only when every
+    per-position computation is causal and row-independent: attention
+    masks pad keys out (and the pad K/V beyond the true length is masked
+    until overwritten during decode). It is NOT exact for
+
+    * SSM mixers — ``mamba_prefill`` returns the recurrent state after
+      the FULL padded sequence (conv tail + scan carry), which pads
+      corrupt;
+    * MoE FFNs — capacity-based routing drops tokens as a function of the
+      whole flattened batch, so co-batched rows perturb each other;
+    * enc-dec / modality-frontend archs — the prompt is not a plain token
+      sequence.
+
+    Those fall back to exact-length batch-1 prefill.
+    """
+    if cfg.is_encoder_decoder or cfg.moe is not None:
+        return False
+    if cfg.frontend.kind != "none" and cfg.frontend.frontend_dim:
+        return False
+    return all(s.mixer == "attn" for s in block_pattern(cfg))
+
+
+def prefill_bucketed(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                     true_lens: jax.Array, cache_len: int
+                     ) -> Tuple[jax.Array, Params]:
+    """Batched prefill over right-padded prompts.
+
+    tokens (B, Lb) i32 — prompts padded to a shared length bucket;
+    true_lens (B,) i32 — each row's real prompt length (1..Lb). Returns
+    (per-row logits at position ``true_lens - 1`` (B, V) f32, cache).
+
+    The returned cache rows hold pad K/V at positions >= true_len; those
+    slots are masked by every decode step (``idx <= cache_index``) until
+    the decode stream overwrites them one position at a time, so they are
+    unobservable. Sliding-window ring caches re-home slots modulo the
+    window, which WOULD fold pads into the live window — callers must
+    keep ``Lb < kv_cache_len`` (enforced here).
+    """
+    if not bucketed_prefill_supported(cfg):
+        raise ValueError(
+            f"{cfg.name}: bucketed prefill needs an attention-only decoder "
+            f"(no SSM state, no MoE capacity routing, no enc-dec/frontend)")
+    x, positions, _ = _embed_inputs(params, cfg, {"tokens": tokens})
+    b, s = x.shape[0], x.shape[1]
+    if cache_len < s:
+        raise ValueError(
+            f"prefill_bucketed: cache_len={cache_len} < padded prompt "
+            f"length {s}")
+    if cfg.sliding_window > 0 and s >= attn.kv_cache_len(cfg, cache_len):
+        raise ValueError(
+            f"prefill_bucketed: padded length {s} does not fit the "
+            f"sliding-window ring ({attn.kv_cache_len(cfg, cache_len)}); "
+            f"pads would alias live window slots")
+    x, caches, _ = _run_blocks(params["blocks"], cfg, x, positions,
+                               "prefill", cache_len=cache_len)
+    x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    last = jnp.take_along_axis(
+        x, jnp.clip(true_lens - 1, 0, s - 1)[:, None, None]
+        .astype(jnp.int32), axis=1)                   # (B, 1, D)
+    logits = lm_logits(params["embed"], last, cfg.tie_embeddings)[:, 0]
+    logits = constrain(logits, "batch", "vocab")
+    return logits, {"blocks": caches}
+
+
+# ---------------------------------------------------------------------------
 # Cache construction
 # ---------------------------------------------------------------------------
 
