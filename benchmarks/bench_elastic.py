@@ -1,0 +1,164 @@
+"""Elastic fleet economics over a simulated week (distributed/fault_tolerance).
+
+The ROADMAP's payoff metric for the elastic/chaos subsystem:
+$/million-requests over a simulated week of diurnal traffic with injected
+spot preemptions, three provisioning arms at the same latency SLO:
+
+* **elastic** — a ``FleetController`` sized by ``PlanMonitor`` scale
+  triggers (sustained over-range QPS grows the fleet, sustained
+  under-utilization shrinks it behind the iso-SLO guard), paying only for
+  the device-hours it actually holds;
+* **static-peak** — the full 4-device plan held all week (the provisioning
+  the offline planner would ship without elasticity);
+* **static-mean** — a 2-device plan sized for the mean of the diurnal
+  curve (cheap, but it eats the peaks unprotected).
+
+A second sub-scenario prices the drain window itself: the same constant
+overload with a ``SpotPreemption`` served once with its warning lead
+(drain window: routing moves off the device while it serves down its
+queue) and once as the zero-lead hard variant (the machine vanishes with
+its queue and in-flight batch). Drained preemptions must shed strictly
+fewer requests — that delta is the entire value of the warning.
+
+Each simulated "day" is compressed to a few hundred seconds so the week
+fits in CI; the diurnal shape, preemption timing, and accounting are
+unchanged by the compression.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Results
+from repro.core import HardwareSpec, SLO, optimize_gear_plan
+from repro.core.adaption import MonitorConfig
+from repro.core.profiles import synthetic_family
+from repro.core.scenarios import (DeviceRecover, Scenario, SpotPreemption,
+                                  constant, diurnal_noise)
+from repro.distributed.fault_tolerance import (FleetConfig, FleetController,
+                                               run_elastic_fleet)
+
+QPS_MAX = 1000.0
+SLO_LATENCY = 0.4
+N_DEVICES = 4
+
+
+def fleet_family():
+    """Three models spanning ~9x runtime; the 4-device plan sustains the
+    full qps_max, halves of the fleet sustain roughly halves of it — the
+    structure that makes fleet size a meaningful planner action."""
+    return synthetic_family(["e-small", "e-medium", "e-large"],
+                            base_runtime=2e-3, runtime_ratio=3.0,
+                            base_acc=0.70, acc_gain=0.09,
+                            mem_base=0.4e9, seed=7)
+
+
+def week_scenario(days: int, day_seconds: int) -> Scenario:
+    """Diurnal week with two mid-peak spot preemptions (device recovers a
+    minute later — the provider hands back a replacement machine)."""
+    traffic = diurnal_noise(days=days, day_seconds=day_seconds,
+                            peak_qps=900.0, trough_frac=0.25,
+                            noise=0.10, seed=3)
+    # peak sits mid-day; preempt through two different peaks
+    peak_off = day_seconds // 2
+    evs = []
+    for day, dev in ((1, 3), (min(4, days - 1), 2)):
+        t = float(day * day_seconds + peak_off)
+        evs.append(SpotPreemption(t=t, device=dev, lead=10.0))
+        evs.append(DeviceRecover(t=t + 70.0, device=dev))
+    return Scenario(traffic=traffic, events=tuple(evs), drain=2.0,
+                    name="diurnal-week")
+
+
+def preemption_scenario(seconds: int, load: float) -> Scenario:
+    return Scenario(traffic=constant(seconds, load),
+                    events=(SpotPreemption(t=float(seconds) * 0.8,
+                                           device=3, lead=10.0),),
+                    drain=2.0, name="preempt-under-load")
+
+
+def arm_row(res: Results, label: str, r) -> None:
+    sizes = [n for _, n in r.fleet_sizes]
+    res.add(f"{label}_cost_per_million", round(r.cost_per_million, 2),
+            device_hours=round(r.device_hours, 3),
+            slo_attainment=round(r.slo_attainment, 4),
+            p95_ms=round(r.p95 * 1e3, 1), shed=r.shed,
+            completed=r.completed, offered=r.offered,
+            fleet_min=min(sizes), fleet_max=max(sizes),
+            actions=len(r.actions), windows=r.windows)
+
+
+def main(quick: bool = False):
+    days, day_seconds = (2, 360) if quick else (7, 360)
+    window = 15.0
+    res = Results("bench_elastic", scenario={
+        "days": days, "day_seconds": day_seconds, "peak_qps": 900.0,
+        "qps_max": QPS_MAX, "slo_latency_s": SLO_LATENCY,
+        "window_s": window, "device_hour_price": 1.0,
+        "quick": bool(quick)})
+
+    profiles = fleet_family()
+    hw = HardwareSpec(num_devices=N_DEVICES, mem_per_device=16e9)
+    slo = SLO(kind="latency", latency_p95=SLO_LATENCY)
+    report = optimize_gear_plan(profiles, hw, slo, qps_max=QPS_MAX,
+                                n_ranges=4)
+    week = week_scenario(days, day_seconds)
+
+    # -------------------------------------------------- the three arms
+    fleet_cfg = FleetConfig(min_devices=1, max_devices=N_DEVICES,
+                            cooldown=20.0, shrink_guard=1.3,
+                            device_hour_price=1.0)
+    mon_cfg = MonitorConfig(scale_out_frac=0.50, scale_out_ticks=3,
+                            scale_in_frac=0.55, scale_in_ticks=20,
+                            cooldown=10.0)
+    controller = FleetController(report.state, fleet_cfg,
+                                 base_plan=report.plan, start_devices=2)
+    elastic = run_elastic_fleet(profiles, week, controller=controller,
+                                monitor_cfg=mon_cfg,
+                                slo_latency=SLO_LATENCY, window=window)
+    arm_row(res, "elastic", elastic)
+    res.add("elastic_replan_walls_s",
+            [round(w, 3) for w in controller.replan_walls])
+
+    peak_arm = run_elastic_fleet(profiles, week, plan=report.plan,
+                                 slo_latency=SLO_LATENCY, window=window)
+    arm_row(res, "static_peak", peak_arm)
+
+    # mean provisioning: the fleet size whose capacity covers the MEAN of
+    # the diurnal curve (2 devices for this family/shape)
+    sizer = FleetController(report.state, fleet_cfg,
+                            base_plan=report.plan)
+    mean_plan = sizer.plan_for(2)
+    mean_arm = run_elastic_fleet(profiles, week, plan=mean_plan,
+                                 slo_latency=SLO_LATENCY, window=window)
+    arm_row(res, "static_mean", mean_arm)
+
+    cheaper = elastic.cost_per_million < peak_arm.cost_per_million
+    iso_slo = elastic.slo_attainment >= peak_arm.slo_attainment
+    res.add("elastic_beats_static_peak", bool(cheaper and iso_slo),
+            cheaper_than_peak=bool(cheaper), iso_slo=bool(iso_slo),
+            saving_pct=round(100.0 * (1.0 - elastic.cost_per_million
+                                      / peak_arm.cost_per_million), 1))
+
+    # ------------------------------------- drain window vs hard revoke
+    pre_secs, pre_load = (60, 900.0) if quick else (150, 1000.0)
+    pre = preemption_scenario(pre_secs, pre_load)
+    drained = run_elastic_fleet(profiles, pre, plan=report.plan,
+                                slo_latency=SLO_LATENCY, window=300.0)
+    hard = run_elastic_fleet(profiles, pre.hard_fail_variant(),
+                             plan=report.plan,
+                             slo_latency=SLO_LATENCY, window=300.0)
+    res.add("drained_shed", drained.shed,
+            slo_attainment=round(drained.slo_attainment, 4),
+            completed=drained.completed)
+    res.add("hard_fail_shed", hard.shed,
+            slo_attainment=round(hard.slo_attainment, 4),
+            completed=hard.completed)
+    res.add("drain_sheds_strictly_less", bool(drained.shed < hard.shed),
+            delta=hard.shed - drained.shed)
+
+    return res.finish()
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv)

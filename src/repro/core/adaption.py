@@ -57,7 +57,8 @@ __all__ = ["MonitorConfig", "PlanMonitor", "ReplanTrigger", "PlanVersion",
 class ReplanTrigger:
     """One detected departure from the active plan's validity regime."""
     reason: str            # qps-exceeds-range | qps-distribution-drift |
-    #                        certainty-drift | device-loss | latency-drift
+    #                        certainty-drift | device-loss | latency-drift |
+    #                        scale-out | scale-in
     t: float
     measured_qps: float
     qps_window: Tuple[float, ...] = ()   # recent per-tick measurements
@@ -90,6 +91,16 @@ class MonitorConfig:
     p95_min_samples: int = 500
     # devices missing for this many consecutive ticks = permanent loss
     device_loss_ticks: int = 20
+    # autoscaling triggers (both OFF by default — enabling them changes
+    # what on_tick can emit, so existing drivers are unaffected):
+    # sustained measured QPS above scale_out_frac * qps_max asks the fleet
+    # controller for more devices; sustained below scale_in_frac * qps_max
+    # asks to release some (the iso-SLO shrink guard lives in the
+    # controller, which knows the candidate plan's capacity)
+    scale_out_frac: float = 0.0
+    scale_out_ticks: int = 5
+    scale_in_frac: float = 0.0
+    scale_in_ticks: int = 30
     # no re-trigger storm: quiet period after a trigger fires
     cooldown: float = 10.0
     window_ticks: int = 600
@@ -135,6 +146,8 @@ class PlanMonitor:
                 + self.cfg.p95_drift_factor * (w * cis).sum())
         self._over_ticks = 0
         self._loss_ticks = 0
+        self._scale_out_ticks = 0
+        self._scale_in_ticks = 0
         self._tick_no = 0
         with self._cert_lock:   # consumer threads may be mid-observe_cert
             self._cert_count = {}
@@ -184,6 +197,16 @@ class PlanMonitor:
             self._over_ticks += 1
         else:
             self._over_ticks = 0
+        if cfg.scale_out_frac > 0 and \
+                measured_qps > cfg.scale_out_frac * self.provenance.qps_max:
+            self._scale_out_ticks += 1
+        else:
+            self._scale_out_ticks = 0
+        if cfg.scale_in_frac > 0 and \
+                measured_qps < cfg.scale_in_frac * self.provenance.qps_max:
+            self._scale_in_ticks += 1
+        else:
+            self._scale_in_ticks = 0
         if self._n_alive is not None and \
                 self._n_alive < self.provenance.num_devices:
             self._loss_ticks += 1
@@ -198,6 +221,8 @@ class PlanMonitor:
             self._quiet_until = t + cfg.cooldown
             self._over_ticks = 0
             self._loss_ticks = 0
+            self._scale_out_ticks = 0
+            self._scale_in_ticks = 0
         return trig
 
     def _check(self, t: float, measured_qps: float
@@ -206,6 +231,16 @@ class PlanMonitor:
         # the rare paths that emit a trigger or run the TV check — not on
         # every tick of the measurement loop
         cfg = self.cfg
+        # scale-out outranks the in-range re-plan: sustained load near the
+        # planned ceiling is a capacity problem before it is a plan problem
+        if cfg.scale_out_frac > 0 and \
+                self._scale_out_ticks >= cfg.scale_out_ticks:
+            return ReplanTrigger(
+                "scale-out", t, measured_qps, tuple(self._qps_window),
+                detail=f"measured {measured_qps:.0f} qps > "
+                       f"{cfg.scale_out_frac:.2f} x qps_max "
+                       f"{self.provenance.qps_max:.0f} for "
+                       f"{self._scale_out_ticks} ticks")
         if self._over_ticks >= cfg.qps_sustain_ticks:
             return ReplanTrigger(
                 "qps-exceeds-range", t, measured_qps,
@@ -266,6 +301,16 @@ class PlanMonitor:
                 return ReplanTrigger(
                     "qps-distribution-drift", t, measured_qps, window,
                     detail=f"TV distance {tv:.2f} from planned prior")
+        # scale-in is checked LAST: any live drift concern vetoes releasing
+        # hardware this tick (hysteresis against shrink-then-scramble)
+        if cfg.scale_in_frac > 0 and \
+                self._scale_in_ticks >= cfg.scale_in_ticks:
+            return ReplanTrigger(
+                "scale-in", t, measured_qps, tuple(self._qps_window),
+                detail=f"measured {measured_qps:.0f} qps < "
+                       f"{cfg.scale_in_frac:.2f} x qps_max "
+                       f"{self.provenance.qps_max:.0f} for "
+                       f"{self._scale_in_ticks} ticks")
         return None
 
     def _tv_distance(self, window: Tuple[float, ...]) -> float:
@@ -478,10 +523,15 @@ class PlanLifecycle:
                  replanner: Optional[BackgroundReplanner] = None,
                  selector_factory: Optional[
                      Callable[[GearPlan], GearSelector]] = None,
-                 alpha: float = 8.0):
+                 alpha: float = 8.0, fleet=None):
         prov = plan.provenance or provenance_for_plan(plan)
         self.monitor = monitor if monitor is not None else PlanMonitor(prov)
         self.replanner = replanner
+        # scale-out / scale-in triggers are FLEET actions, not hot-swaps:
+        # they route to the FleetController (distributed/fault_tolerance),
+        # which applies them between serving windows — a fleet change moves
+        # replicas and can never pass _placement_compatible
+        self.fleet = fleet
         # when no explicit factory is given, the hysteresis alpha is
         # adopted from the attached core's config (attach()), so a swap
         # never silently resets a driver's tuned alpha to the default
@@ -527,7 +577,10 @@ class PlanLifecycle:
         trig = self.monitor.on_tick(t, measured_qps)
         if trig is not None:
             self.triggers.append(trig)
-            if not self.frozen and self.replanner is not None:
+            if trig.reason in ("scale-out", "scale-in"):
+                if not self.frozen and self.fleet is not None:
+                    self.fleet.request(trig, t)
+            elif not self.frozen and self.replanner is not None:
                 self.replanner.submit(trig, self.active, t)
         if self.frozen or self.replanner is None:
             return None

@@ -45,7 +45,7 @@ from repro.core.lp import Replica
 
 __all__ = ["AdmissionConfig", "AdmissionDecision", "AdmissionController",
            "fleet_capacities", "gear_capacity", "cheapest_gear_index",
-           "weighted_fair_shares"]
+           "weighted_fair_shares", "plan_capacity_qps"]
 
 
 # ---------------------------------------------------------------------------
@@ -122,6 +122,40 @@ def cheapest_gear_index(plan: GearPlan,
         if c >= best_cap:
             best, best_cap = i, c
     return best
+
+
+def plan_capacity_qps(plan: GearPlan,
+                      profiles: Optional[Mapping[str, object]] = None,
+                      gear_index: Optional[int] = None) -> float:
+    """Sustainable offered QPS of ``plan`` — the FleetController's iso-SLO
+    shrink guard asks this before releasing hardware ("can the shrunken
+    fleet still absorb the recent peak?").
+
+    With ``profiles`` the per-stage demand comes from the cascade's reach
+    fractions (``evaluate_cascade``): stage *i* sees ``fractions[i]`` samples
+    per admitted request. Without profiles only the entry model is charged
+    (optimistic). ``gear_index=None`` rates the plan at its cheapest
+    (highest-throughput) gear — the configuration the producer clamps to
+    under overload, hence the plan's true ceiling.
+    """
+    if not plan.gears:
+        return 0.0
+    caps = fleet_capacities(plan.replicas)
+    work = model_work(plan.replicas)
+
+    def demand_for(g: Gear) -> Dict[str, float]:
+        models = list(g.cascade.models)
+        if profiles is not None:
+            from repro.core.cascade import evaluate_cascade
+            ev = evaluate_cascade(g.cascade, profiles)
+            return {m: f for m, f in zip(models, ev.fractions)}
+        return {models[0]: 1.0}
+
+    if gear_index is not None:
+        g = plan.gears[gear_index]
+        return gear_capacity(demand_for(g), caps, work, plan.num_devices)
+    return max(gear_capacity(demand_for(g), caps, work, plan.num_devices)
+               for g in plan.gears)
 
 
 # ---------------------------------------------------------------------------

@@ -50,7 +50,8 @@ from repro.core.scheduling import (CascadeHop, ContinuousBatcher,
                                    with_hysteresis)
 
 __all__ = ["SimConfig", "SimResult", "TokenSimResult", "ServingSimulator",
-           "GearSelector", "trace_to_arrivals", "make_gear"]
+           "GearSelector", "trace_to_arrivals", "make_gear",
+           "validate_device_events"]
 
 
 @dataclass(frozen=True)
@@ -73,6 +74,10 @@ class SimResult:
     backlog_end: int
     device_busy: np.ndarray         # busy seconds per device
     horizon: float
+    # samples permanently lost to spot revokes ("revoke" events): they were
+    # resident on the machine when it vanished and had no live hedge copy.
+    # Disjoint from backlog_end, which is recoverable work still in flight.
+    shed: int = 0
     gear_switches: List[Tuple[float, int]] = field(default_factory=list)
     per_model_batches: Dict[str, int] = field(default_factory=dict)
     per_model_samples: Dict[str, int] = field(default_factory=dict)
@@ -205,8 +210,80 @@ class _ArrayQueue:
         return sids, stages
 
 
-# (time, device, kind, factor): kind in {"fail", "slow", "recover"}
+# (time, device, kind, factor): kind in {"fail", "slow", "recover", "drain",
+# "netdeg"}. "drain" is a spot-preemption notice: new routing moves off the
+# device while it keeps serving its queued batches, racing the revoke
+# deadline (factor carries the warning lead, for observability). "revoke"
+# is the spot machine actually vanishing: same teardown as "fail", but the
+# work still resident on the device (queued samples and the in-flight
+# batch) is LOST — shed, never replayed — because the machine that held it
+# no longer exists. "fail" keeps replay semantics: it models a crash where
+# the serving layer re-issues everything to siblings. "netdeg" (device
+# must be -1) is fleet-wide dispatch degradation: every batch runtime is
+# multiplied by `factor` until a second netdeg resets it to 1.0.
 DeviceEvent = Tuple[float, int, str, float]
+
+_EVENT_KINDS = frozenset(
+    ("fail", "slow", "recover", "drain", "revoke", "netdeg"))
+
+
+def validate_device_events(events: Optional[List[DeviceEvent]],
+                           num_devices: int) -> List[DeviceEvent]:
+    """Validate a ``DeviceEvent`` stream at driver entry.
+
+    Checks shape, time-sortedness, known kinds, device range (``-1`` only
+    for the fleet-wide ``netdeg``), and factor sign (multiplicative kinds
+    need ``factor > 0``; fail/recover/drain/revoke carry informational
+    factors that only need to be non-negative). Raises ``ValueError`` instead of
+    letting a malformed stream silently mis-simulate. Returns the stream
+    as a normalized list of plain tuples."""
+    if not events:
+        return []
+    out: List[DeviceEvent] = []
+    prev_t = -math.inf
+    for i, ev in enumerate(events):
+        try:
+            t, dev, kind, factor = ev
+            t, dev, factor = float(t), int(dev), float(factor)
+        except (TypeError, ValueError):
+            raise ValueError(
+                f"device event #{i} must be a (time, device, kind, factor) "
+                f"tuple, got {ev!r}")
+        if t < 0:
+            raise ValueError(f"device event #{i}: time must be >= 0, "
+                             f"got {t}")
+        if t < prev_t:
+            raise ValueError(
+                f"device event #{i}: stream must be sorted by time "
+                f"({t} after {prev_t})")
+        prev_t = t
+        if kind not in _EVENT_KINDS:
+            raise ValueError(
+                f"device event #{i}: unknown kind {kind!r} (expected one "
+                f"of {sorted(_EVENT_KINDS)})")
+        if kind == "netdeg":
+            if dev != -1:
+                raise ValueError(
+                    f"device event #{i}: netdeg is fleet-wide, device must "
+                    f"be -1, got {dev}")
+            if factor <= 0:
+                raise ValueError(
+                    f"device event #{i}: netdeg factor must be > 0, "
+                    f"got {factor}")
+        else:
+            if not 0 <= dev < num_devices:
+                raise ValueError(
+                    f"device event #{i}: device {dev} out of range "
+                    f"[0, {num_devices})")
+            if kind == "slow" and factor <= 0:
+                raise ValueError(
+                    f"device event #{i}: slow-down factor must be > 0, "
+                    f"got {factor}")
+            if factor < 0:
+                raise ValueError(
+                    f"device event #{i}: factor must be >= 0, got {factor}")
+        out.append((t, dev, kind, factor))
+    return out
 
 
 @dataclass
@@ -305,21 +382,35 @@ class ServingSimulator:
         return self._run(arrivals, [gear], lambda t, q, g, q0: 0,
                          horizon=horizon)
 
-    def run_trace(self, plan: GearPlan, qps_per_sec: np.ndarray,
+    def run_trace(self, plan: GearPlan,
+                  qps_per_sec: Optional[np.ndarray] = None,
                   drain: float = 2.0,
                   device_events: Optional[List[DeviceEvent]] = None,
                   on_failure: Optional[Callable] = None,
                   hedge=None,
                   decision_trace: Optional[DecisionTrace] = None,
-                  lifecycle=None) -> SimResult:
+                  lifecycle=None, scenario=None) -> SimResult:
         """Replay a trace (per-second QPS) with the §5 producer policy.
 
         ``lifecycle`` (a ``repro.core.adaption.PlanLifecycle`` over the
         same plan) enables online re-planning: it is stepped at every
         measurement tick and its ``SwapEvent``s are applied atomically
         (new gear table + QPS-remapped gear index + new selector).
+
+        ``scenario`` (a ``repro.core.scenarios.Scenario``) is the
+        declarative spelling: it supplies the trace, the device-event
+        stream, and the drain window in one object and is mutually
+        exclusive with explicit ``qps_per_sec``/``device_events``.
         """
-        if not len(qps_per_sec):
+        if scenario is not None:
+            if qps_per_sec is not None or device_events is not None:
+                raise ValueError(
+                    "pass either scenario= or explicit qps_per_sec/"
+                    "device_events, not both")
+            qps_per_sec = scenario.qps()
+            device_events = scenario.device_events()
+            drain = scenario.drain
+        if qps_per_sec is None or not len(qps_per_sec):
             raise ValueError("cannot replay an empty QPS trace")
         if drain < 0:
             raise ValueError(f"drain must be >= 0, got {drain}")
@@ -633,6 +724,20 @@ class ServingSimulator:
         dev_alive = np.ones(self.num_devices, bool)
         dev_speed = np.ones(self.num_devices)
         dev_epoch = np.zeros(self.num_devices, np.int64)
+        # preemption drain windows: a draining device finishes its in-flight
+        # batch (racing the revoke deadline) but starts nothing new and is
+        # skipped as a re-issue/hedge sibling
+        dev_draining = np.zeros(self.num_devices, bool)
+        # epochs that ended in a spot revoke: an in-flight batch carrying
+        # one of these epochs died WITH the machine — its samples are shed,
+        # not re-issued (contrast "fail", where the batch is replayed)
+        revoked: Dict[int, set] = {}
+        shed_count = 0
+        net = 1.0   # fleet-wide dispatch degradation multiplier ("netdeg")
+        # hedge retry budget: hedges issued per live sample, and the replica
+        # the live hedge copy went to (for the drain/fail refund)
+        hedge_used: Dict[int, int] = {}
+        hedged_to: Dict[int, int] = {}
         gears = list(gears)
         cur_gear = 0
         correctness_known = True
@@ -689,18 +794,22 @@ class ServingSimulator:
                 rt = backend.batch_runtime(r.model, bsz) \
                     + cfg.dispatch_overhead
                 rt_memo[(r.model, bsz)] = rt
-            rt_actual = rt * dev_speed[r.device]
+            # the hedge straggler test compares against the expected runtime
+            # under current FLEET conditions (rt * net): a global dispatch
+            # degradation is not one straggling device
+            rt_eff = rt * net
+            rt_actual = rt_eff * dev_speed[r.device]
             dev_idle[r.device] = False
             dev_busy[r.device] += rt_actual
             per_model_batches[r.model] = per_model_batches.get(r.model, 0) + 1
             push_event(t + rt_actual, "complete",
                        (ridx, sids, stages, dev_epoch[r.device]))
             if hedge is not None and hedge.enabled and \
-                    rt_actual > hedge.hedge_multiplier * rt:
+                    rt_actual > hedge.hedge_multiplier * rt_eff:
                 # straggler: re-issue on a sibling replica after the
                 # expected runtime; duplicate completions are suppressed
                 # by the per-sample stage guard
-                push_event(t + rt * hedge.hedge_multiplier, "hedge",
+                push_event(t + rt_eff * hedge.hedge_multiplier, "hedge",
                            (ridx, sids, stages))
 
         def finish_sample(sid: int, stage: int, t: float, is_correct: bool):
@@ -734,6 +843,11 @@ class ServingSimulator:
                                       majority_vote(st[1], st[2]))
                     continue
                 hop = core.next_hop(stage, certs[k], g)
+                if hedge_used:
+                    # the hedge budget is per batch: a stage advance (or
+                    # resolution) retires the sample's straggler history
+                    hedge_used.pop(sid, None)
+                    hedged_to.pop(sid, None)
                 if isinstance(hop, CascadeHop):
                     cur_stage[sid] = hop.next_stage
                     enqueue(sid, hop.next_stage, hop.next_model, t, g)
@@ -747,22 +861,53 @@ class ServingSimulator:
                         break
 
         def sibling_replica(ridx: int) -> Optional[int]:
+            """Fastest (min-queue) alive, non-draining sibling of ridx."""
             model = replicas[ridx].model
             best, best_q = None, None
             for rj in reps_of.get(model, []):
-                if rj == ridx or not dev_alive[replicas[rj].device]:
+                d = replicas[rj].device
+                if rj == ridx or not dev_alive[d] or dev_draining[d]:
                     continue
                 if best is None or qs[rj].n < best_q:
                     best, best_q = rj, qs[rj].n
             return best
 
+        def refund_hedge(sid: int, rj: int) -> None:
+            # forced re-issue off replica rj: when the live hedge copy is
+            # the one parked there (the drain/fail won the race), hand the
+            # retry budget back — the fleet, not the sample's straggler
+            # history, caused this re-issue
+            if hedged_to.get(sid) == rj:
+                hedged_to.pop(sid, None)
+                n_used = hedge_used.get(sid, 0) - 1
+                if n_used > 0:
+                    hedge_used[sid] = n_used
+                else:
+                    hedge_used.pop(sid, None)
+
+        def drain_queues(t: float, dev: int) -> None:
+            """Move queued samples off ``dev`` to sibling replicas."""
+            for rj in reps_on_dev.get(dev, []):
+                sids, stages = qs[rj].pop(qs[rj].n)
+                alt = sibling_replica(rj)
+                if alt is None:
+                    continue
+                for sid, stage in zip(sids, stages):
+                    refund_hedge(sid, rj)
+                    qs[alt].push(sid, stage, t)
+                    push_event(t + cfg.max_wait, "timeout", (alt,))
+
         def on_device_event(t: float, dev: int, kind: str, factor: float):
-            nonlocal gears
+            nonlocal gears, net
             if kind == "slow":
                 dev_speed[dev] = factor
                 return
+            if kind == "netdeg":
+                net = factor
+                return
             if kind == "recover":
                 dev_speed[dev] = 1.0
+                dev_draining[dev] = False
                 if not dev_alive[dev]:
                     dev_alive[dev] = True
                     dev_idle[dev] = True
@@ -773,19 +918,58 @@ class ServingSimulator:
                         if not dev_idle[dev]:
                             break
                 return
+            if kind == "drain":
+                # preemption notice: open the drain window — NEW work stops
+                # landing here (the survivor gears from the failure callback
+                # route around it, sibling/hedge re-issues skip it), but the
+                # device keeps serving its queued batches, racing the revoke
+                # deadline; the callback also pre-computes the survivor plan
+                # so the swap at revoke time is O(1)
+                dev_draining[dev] = True
+                if on_failure is not None:
+                    new_gears = on_failure(t, dev)
+                    if new_gears is not None:
+                        gears = list(new_gears)
+                return
+            if kind == "revoke":
+                # spot revoke: the machine vanishes with whatever it holds.
+                # Queued samples are shed now; the in-flight batch's epoch
+                # is recorded so its completion event sheds (not re-issues)
+                # the samples still riding it. A sample whose live copy is
+                # a hedge duplicate elsewhere survives — only sole copies
+                # die with the machine.
+                nonlocal shed_count
+                revoked.setdefault(dev, set()).add(int(dev_epoch[dev]))
+                dev_alive[dev] = False
+                dev_idle[dev] = False
+                dev_draining[dev] = False
+                dev_epoch[dev] += 1
+                for rj in reps_on_dev.get(dev, []):
+                    sids, stages = qs[rj].pop(qs[rj].n)
+                    for sid, stage in zip(sids, stages):
+                        if cur_stage[sid] != stage:
+                            continue  # stale duplicate, sample lives on
+                        alt = hedged_to.get(sid)
+                        if alt == rj:
+                            # the queued copy is the hedge duplicate; the
+                            # primary batch is still running elsewhere
+                            refund_hedge(sid, rj)
+                        elif alt is None:
+                            cur_stage[sid] = 1 << 30
+                            shed_count += 1
+                        # else: primary copy dies, hedge copy carries it
+                if on_failure is not None:
+                    new_gears = on_failure(t, dev)
+                    if new_gears is not None:
+                        gears = list(new_gears)
+                return
             # fail: kill the device, invalidate its in-flight batch, move
             # queued samples to sibling replicas
             dev_alive[dev] = False
             dev_idle[dev] = False
+            dev_draining[dev] = False
             dev_epoch[dev] += 1
-            for rj in reps_on_dev.get(dev, []):
-                sids, stages = qs[rj].pop(qs[rj].n)
-                alt = sibling_replica(rj)
-                if alt is None:
-                    continue
-                for sid, stage in zip(sids, stages):
-                    qs[alt].push(sid, stage, t)
-                    push_event(t + cfg.max_wait, "timeout", (alt,))
+            drain_queues(t, dev)
             if on_failure is not None:
                 new_gears = on_failure(t, dev)
                 if new_gears is not None:
@@ -795,8 +979,11 @@ class ServingSimulator:
             if lifecycle is not None:
                 lifecycle.monitor.observe_devices(int(dev_alive.sum()))
 
-        # scheduled device events (failures / stragglers)
-        for ev_t, ev_d, ev_kind, ev_f in (device_events or []):
+        # scheduled device events (failures / stragglers / drain windows),
+        # validated up front: a malformed stream raises instead of silently
+        # simulating the wrong world
+        for ev_t, ev_d, ev_kind, ev_f in validate_device_events(
+                device_events, self.num_devices):
             push_event(ev_t, "devevent", (ev_d, ev_kind, ev_f))
 
         # producer QPS measurement
@@ -860,11 +1047,22 @@ class ServingSimulator:
                 if kind == "complete":
                     ridx, sids, stages, epoch = payload
                     if epoch != dev_epoch[replicas[ridx].device]:
+                        if epoch in revoked.get(replicas[ridx].device, ()):
+                            # the batch died WITH the revoked spot machine:
+                            # sole copies are shed, hedged samples are
+                            # carried by their duplicate elsewhere
+                            for sid, stage in zip(sids, stages):
+                                if cur_stage[sid] == stage and \
+                                        hedged_to.get(sid) is None:
+                                    cur_stage[sid] = 1 << 30
+                                    shed_count += 1
+                            continue
                         # device died mid-batch: re-issue surviving work
                         alt = sibling_replica(ridx)
                         if alt is not None:
                             for sid, stage in zip(sids, stages):
                                 if cur_stage[sid] == stage:
+                                    refund_hedge(sid, ridx)
                                     qs[alt].push(sid, stage, t_evt)
                                     push_event(t_evt + cfg.max_wait,
                                                "timeout", (alt,))
@@ -877,8 +1075,12 @@ class ServingSimulator:
                     alt = sibling_replica(ridx)
                     if alt is not None:
                         pushed = False
+                        budget = hedge.max_hedges_per_batch
                         for sid, stage in zip(sids, stages):
-                            if cur_stage[sid] == stage:
+                            if cur_stage[sid] == stage and \
+                                    hedge_used.get(sid, 0) < budget:
+                                hedge_used[sid] = hedge_used.get(sid, 0) + 1
+                                hedged_to[sid] = alt
                                 qs[alt].push(sid, stage, t_evt)
                                 pushed = True
                         if pushed:
@@ -896,7 +1098,7 @@ class ServingSimulator:
         correct_a = np.asarray(correct, bool)
         resolver_a = np.asarray(resolver, np.int32)
         done = ~np.isnan(complete_a)
-        backlog = int(n_arr - done.sum())
+        backlog = int(n_arr - done.sum()) - shed_count
         return SimResult(
             latencies=(complete_a[done] - arrive[done]),
             correct=correct_a[done],
@@ -906,6 +1108,7 @@ class ServingSimulator:
             completed=int(done.sum()),
             offered=n_arr,
             backlog_end=backlog,
+            shed=shed_count,
             device_busy=dev_busy,
             horizon=horizon,
             gear_switches=switches,

@@ -87,6 +87,58 @@ def spiky_trace(seconds: int = 120, base_qps: float = 400.0,
     return qps
 
 
+def ramp_trace(seconds: int = 600, start_qps: float = 100.0,
+               end_qps: float = 1000.0) -> np.ndarray:
+    """Linear load ramp (capacity-planning staple: find the knee)."""
+    if seconds < 1:
+        raise ValueError(f"trace length must be >= 1 second, got {seconds}")
+    return np.linspace(start_qps, end_qps, seconds, dtype=np.float64)
+
+
+def flash_crowd_trace(seconds: int = 600, base_qps: float = 200.0,
+                      peak_qps: float = 2000.0, at: Optional[int] = None,
+                      rise: int = 10, fall: int = 60) -> np.ndarray:
+    """Flash crowd: steady base load, a steep ``rise``-second surge to
+    ``peak_qps`` at ``at``, then an exponential ``fall``-second decay back
+    to base (the multi-tenant bench's 2.5x surge, as a reusable shape)."""
+    if seconds < 1:
+        raise ValueError(f"trace length must be >= 1 second, got {seconds}")
+    if rise < 1 or fall < 1:
+        raise ValueError(f"rise/fall must be >= 1, got {rise}/{fall}")
+    at = seconds // 3 if at is None else int(at)
+    t = np.arange(seconds, dtype=np.float64)
+    qps = np.full(seconds, base_qps, np.float64)
+    up = (t >= at) & (t < at + rise)
+    qps[up] = base_qps + (peak_qps - base_qps) * (t[up] - at + 1) / rise
+    down = t >= at + rise
+    qps[down] = base_qps + (peak_qps - base_qps) * np.exp(
+        -(t[down] - at - rise) / fall)
+    return qps
+
+
+def diurnal_noise_trace(days: int = 7, day_seconds: int = 600,
+                        peak_qps: float = 2000.0, trough_frac: float = 0.25,
+                        noise: float = 0.15, seed: int = 0) -> np.ndarray:
+    """A multi-day diurnal cycle with log-normal noise: ``days`` sinusoidal
+    day curves (trough at ``trough_frac * peak``), each compressed into
+    ``day_seconds`` simulated seconds — the 'simulated week' of the elastic
+    provisioning study (ROADMAP: $/M-requests elastic vs static)."""
+    if days < 1:
+        raise ValueError(f"days must be >= 1, got {days}")
+    if day_seconds < 2:
+        raise ValueError(f"day_seconds must be >= 2, got {day_seconds}")
+    if not 0.0 < trough_frac <= 1.0:
+        raise ValueError(f"trough_frac must be in (0, 1], got {trough_frac}")
+    rng = np.random.default_rng(seed)
+    seconds = days * day_seconds
+    t = np.arange(seconds, dtype=np.float64)
+    mid = 0.5 * (1.0 + trough_frac)
+    amp = 0.5 * (1.0 - trough_frac)
+    diurnal = mid + amp * np.sin(2 * np.pi * t / day_seconds - np.pi / 2)
+    jitter = np.exp(rng.normal(0.0, noise, seconds))
+    return scale_to_peak(diurnal * jitter, peak_qps)
+
+
 def measured_qps_distribution(trace: np.ndarray, n_ranges: int,
                               qps_max: float) -> np.ndarray:
     """Empirical time-in-range distribution of a trace (used to re-plan when

@@ -57,7 +57,7 @@ from repro.core.scheduling import (DecisionTrace, SchedulerCore, is_ensemble,
                                    majority_vote, plan_target,
                                    with_hysteresis)
 from repro.core.simulator import (DeviceEvent, SimConfig, SimResult,
-                                  _ArrayQueue)
+                                  _ArrayQueue, validate_device_events)
 
 __all__ = ["VecSim", "LaneResult", "mc_summary"]
 
@@ -114,7 +114,8 @@ class _Lane:
         "qs", "to_t", "to_seq", "to_head", "to_cand", "comp_t", "comp_seq",
         "comp_payload", "rare", "seq", "pool", "arr_ptr", "meas_end",
         "meas_count", "cur_gear", "gears", "dev_idle", "dev_alive",
-        "dev_speed", "dev_busy", "dev_epoch", "complete", "correct",
+        "dev_speed", "dev_busy", "dev_epoch", "dev_draining", "revoked",
+        "shed", "net", "hedge_used", "hedged_to", "complete", "correct",
         "resolver", "cur_stage", "gear_of", "votes", "switches",
         "per_model_batches", "per_model_samples", "trace", "active",
         "ck", "simple", "single_gear")
@@ -148,6 +149,14 @@ class _Lane:
         self.dev_speed = [1.0] * n_dev
         self.dev_busy = [0.0] * n_dev
         self.dev_epoch = [0] * n_dev
+        self.dev_draining = [False] * n_dev
+        # epochs ended by a spot revoke (dev -> set of epochs): in-flight
+        # batches carrying them are shed, not re-issued
+        self.revoked: Dict[int, set] = {}
+        self.shed = 0
+        self.net = 1.0                 # fleet-wide "netdeg" multiplier
+        self.hedge_used: Dict[int, int] = {}
+        self.hedged_to: Dict[int, int] = {}
         self.complete = np.full(n_arr, math.nan)
         self.correct = np.zeros(n_arr, bool)
         self.resolver = np.full(n_arr, -1, np.int32)
@@ -278,16 +287,31 @@ class VecSim:
             gear, qps, horizon, warm_start_backlog, seeds=(self.cfg.seed,),
             decision_traces=[decision_trace])[0]
 
-    def run_trace(self, plan: GearPlan, qps_per_sec: np.ndarray,
+    def run_trace(self, plan: GearPlan,
+                  qps_per_sec: Optional[np.ndarray] = None,
                   drain: float = 2.0,
                   device_events: Optional[List[DeviceEvent]] = None,
                   hedge=None,
-                  decision_trace: Optional[DecisionTrace] = None
-                  ) -> SimResult:
+                  decision_trace: Optional[DecisionTrace] = None,
+                  on_failure=None, scenario=None) -> SimResult:
         """Single-lane trace replay with the §5 producer policy — the
-        equivalence surface against ``ServingSimulator.run_trace``."""
+        equivalence surface against ``ServingSimulator.run_trace``.
+
+        ``scenario`` (a ``repro.core.scenarios.Scenario``) supplies trace,
+        device events, and drain in one object, mutually exclusive with
+        explicit ``qps_per_sec``/``device_events``. ``on_failure(t, dev)``
+        mirrors the scalar driver's survivor-plan callback (invoked at
+        drain notices and failures; may return a replacement gear list)."""
         from repro.core.simulator import trace_to_arrivals
-        if not len(qps_per_sec):
+        if scenario is not None:
+            if qps_per_sec is not None or device_events is not None:
+                raise ValueError(
+                    "pass either scenario= or explicit qps_per_sec/"
+                    "device_events, not both")
+            qps_per_sec = scenario.qps()
+            device_events = scenario.device_events()
+            drain = scenario.drain
+        if qps_per_sec is None or not len(qps_per_sec):
             raise ValueError("cannot replay an empty QPS trace")
         if drain < 0:
             raise ValueError(f"drain must be >= 0, got {drain}")
@@ -298,7 +322,7 @@ class VecSim:
                                horizon=horizon, seeds=(self.cfg.seed,),
                                decision_traces=[decision_trace],
                                measure=True, device_events=device_events,
-                               hedge=hedge)[0]
+                               hedge=hedge, on_failure=on_failure)[0]
 
     # --------------------------------------------------------- shared tables
     def _route_table(self, gear: Gear, model: str) -> tuple:
@@ -386,7 +410,7 @@ class VecSim:
                    selector, horizon: float, seeds: Sequence[int],
                    decision_traces=None, measure: bool = True,
                    device_events: Optional[List[DeviceEvent]] = None,
-                   hedge=None) -> List[SimResult]:
+                   hedge=None, on_failure=None) -> List[SimResult]:
         cfg = self.cfg
         n_arr = len(arrivals)
         arrive = np.asarray(arrivals, np.float64)
@@ -396,13 +420,15 @@ class VecSim:
         if len(traces) != len(seeds):
             raise ValueError("decision_traces must align with seeds")
 
+        device_events = validate_device_events(device_events,
+                                               self.num_devices)
         simple = hedge is None and not device_events
         lanes = []
         for seed, trace in zip(seeds, traces):
             lane = _Lane(len(self.replicas), self.num_devices, n_arr, seed,
                          gears, cfg.measure_interval, trace)
             lane.simple = simple
-            for ev_t, ev_d, ev_kind, ev_f in (device_events or []):
+            for ev_t, ev_d, ev_kind, ev_f in device_events:
                 heapq.heappush(lane.rare,
                                (ev_t, lane.seq, "devevent",
                                 (ev_d, ev_kind, ev_f)))
@@ -414,7 +440,7 @@ class VecSim:
             nxt = []
             for lane in active:
                 if self._quantum(lane, core, arrive, arrive_l, horizon,
-                                 measure, hedge):
+                                 measure, hedge, on_failure):
                     nxt.append(lane)
             active = nxt
 
@@ -495,7 +521,7 @@ class VecSim:
 
     def _quantum(self, lane: _Lane, core: SchedulerCore, arrive: np.ndarray,
                  arrive_l: List[float], horizon: float, measure: bool,
-                 hedge) -> bool:
+                 hedge, on_failure=None) -> bool:
         """Advance one lane by one event — or one bulk arrival run. Returns
         False when the lane is finished."""
         inf = math.inf
@@ -535,7 +561,7 @@ class VecSim:
             lane.comp_payload[c_dev] = None
             ridx, sids, stages, epoch = payload
             if epoch != lane.dev_epoch[self.replicas[ridx].device]:
-                self._reissue(lane, ridx, sids, stages, c_t)
+                self._reissue(lane, ridx, sids, stages, c_t, epoch)
             else:
                 self._on_complete(lane, core, ridx, sids, stages, c_t,
                                   hedge)
@@ -549,16 +575,17 @@ class VecSim:
         if kind == "timeout":
             self._try_start(lane, core, payload[0], r_t, hedge)
         elif kind == "hedge":
-            self._on_hedge(lane, payload, r_t)
+            self._on_hedge(lane, payload, r_t, hedge)
         elif kind == "stale":
             ridx, sids, stages, epoch = payload
             if epoch != lane.dev_epoch[self.replicas[ridx].device]:
-                self._reissue(lane, ridx, sids, stages, r_t)
+                self._reissue(lane, ridx, sids, stages, r_t, epoch)
             else:       # unreachable (epoch only moves at fail), kept for
                 self._on_complete(lane, core, ridx, sids, stages, r_t,
                                   hedge)  # structural parity
         elif kind == "devevent":
-            self._on_device_event(lane, core, r_t, *payload)
+            self._on_device_event(lane, core, r_t, *payload,
+                                  on_failure=on_failure)
         return True
 
     # ------------------------------------------------------------- arrivals
@@ -810,7 +837,10 @@ class VecSim:
                     h += 1
                 lane.to_head[ridx] = h
         rt = self._runtime(r.model, bsz)
-        rt_actual = rt * lane.dev_speed[r.device]
+        # hedge straggler tests compare against the expected runtime under
+        # current FLEET conditions (rt * net) — mirrors the scalar driver
+        rt_eff = rt * lane.net
+        rt_actual = rt_eff * lane.dev_speed[r.device]
         lane.dev_idle[r.device] = False
         lane.dev_busy[r.device] += rt_actual
         lane.per_model_batches[r.model] = \
@@ -821,9 +851,9 @@ class VecSim:
                                        lane.dev_epoch[r.device])
         lane.seq += 1
         if hedge is not None and hedge.enabled and \
-                rt_actual > hedge.hedge_multiplier * rt:
+                rt_actual > hedge.hedge_multiplier * rt_eff:
             heapq.heappush(lane.rare,
-                           (t + rt * hedge.hedge_multiplier, lane.seq,
+                           (t + rt_eff * hedge.hedge_multiplier, lane.seq,
                             "hedge", (ridx, sids, stages)))
             lane.seq += 1
 
@@ -909,6 +939,11 @@ class VecSim:
             for k, (sid, stage) in enumerate(zip(sids, stages)):
                 if lane.cur_stage[sid] != stage:
                     continue
+                if lane.hedge_used:
+                    # per-batch hedge budget: a stage advance (or
+                    # resolution) retires the straggler history
+                    lane.hedge_used.pop(sid, None)
+                    lane.hedged_to.pop(sid, None)
                 g = lane.gear_of[sid]
                 if self._gear_is_ensemble(g):
                     st = lane.votes[sid]
@@ -1127,34 +1162,63 @@ class VecSim:
 
     # ------------------------------------------------------------ rare paths
     def _sibling(self, lane: _Lane, ridx: int) -> Optional[int]:
+        """Fastest (min-queue) alive, non-draining sibling of ridx."""
         model = self.replicas[ridx].model
         best, best_q = None, None
         for rj in self.reps_of.get(model, []):
-            if rj == ridx or not lane.dev_alive[self.replicas[rj].device]:
+            d = self.replicas[rj].device
+            if rj == ridx or not lane.dev_alive[d] or lane.dev_draining[d]:
                 continue
             if best is None or lane.qs[rj].n < best_q:
                 best, best_q = rj, lane.qs[rj].n
         return best
 
+    @staticmethod
+    def _refund_hedge(lane: _Lane, sid: int, rj: int) -> None:
+        # forced re-issue off replica rj: when the live hedge copy is the
+        # one parked there, hand the retry budget back (the fleet, not the
+        # sample's straggler history, caused this re-issue)
+        if lane.hedged_to.get(sid) == rj:
+            lane.hedged_to.pop(sid, None)
+            n_used = lane.hedge_used.get(sid, 0) - 1
+            if n_used > 0:
+                lane.hedge_used[sid] = n_used
+            else:
+                lane.hedge_used.pop(sid, None)
+
     def _reissue(self, lane: _Lane, ridx: int, sids, stages,
-                 t: float) -> None:
+                 t: float, epoch: int) -> None:
+        if epoch in lane.revoked.get(self.replicas[ridx].device, ()):
+            # the batch died WITH the revoked spot machine: sole copies
+            # are shed, hedged samples are carried by their duplicate
+            for sid, stage in zip(sids, stages):
+                if lane.cur_stage[sid] == stage and \
+                        lane.hedged_to.get(sid) is None:
+                    lane.cur_stage[sid] = 1 << 30
+                    lane.shed += 1
+            return
         alt = self._sibling(lane, ridx)
         if alt is None:
             return
         mw = self.cfg.max_wait
         for sid, stage in zip(sids, stages):
             if lane.cur_stage[sid] == stage:
+                self._refund_hedge(lane, sid, ridx)
                 lane.qs[alt].push(sid, stage, t)
                 self._ring_append(lane, alt, t + mw)
 
-    def _on_hedge(self, lane: _Lane, payload, t: float) -> None:
+    def _on_hedge(self, lane: _Lane, payload, t: float, hedge) -> None:
         ridx, sids, stages = payload
         alt = self._sibling(lane, ridx)
         if alt is None:
             return
         pushed = False
+        budget = hedge.max_hedges_per_batch
         for sid, stage in zip(sids, stages):
-            if lane.cur_stage[sid] == stage:
+            if lane.cur_stage[sid] == stage and \
+                    lane.hedge_used.get(sid, 0) < budget:
+                lane.hedge_used[sid] = lane.hedge_used.get(sid, 0) + 1
+                lane.hedged_to[sid] = alt
                 lane.qs[alt].push(sid, stage, t)
                 pushed = True
         if pushed:
@@ -1164,13 +1228,31 @@ class VecSim:
             lane.seq += 1
             self._ring_append(lane, alt, t + self.cfg.max_wait)
 
+    def _drain_queues(self, lane: _Lane, t: float, dev: int) -> None:
+        """Move queued samples off ``dev`` to sibling replicas."""
+        mw = self.cfg.max_wait
+        for rj in self.reps_on_dev.get(dev, []):
+            sids, stages = lane.qs[rj].pop(lane.qs[rj].n)
+            alt = self._sibling(lane, rj)
+            if alt is None:
+                continue
+            for sid, stage in zip(sids, stages):
+                self._refund_hedge(lane, sid, rj)
+                lane.qs[alt].push(sid, stage, t)
+                self._ring_append(lane, alt, t + mw)
+
     def _on_device_event(self, lane: _Lane, core: SchedulerCore, t: float,
-                         dev: int, kind: str, factor: float) -> None:
+                         dev: int, kind: str, factor: float,
+                         on_failure=None) -> None:
         if kind == "slow":
             lane.dev_speed[dev] = factor
             return
+        if kind == "netdeg":
+            lane.net = factor
+            return
         if kind == "recover":
             lane.dev_speed[dev] = 1.0
+            lane.dev_draining[dev] = False
             if not lane.dev_alive[dev]:
                 lane.dev_alive[dev] = True
                 lane.dev_idle[dev] = True
@@ -1179,10 +1261,62 @@ class VecSim:
                     if not lane.dev_idle[dev]:
                         break
             return
+        if kind == "drain":
+            # preemption notice: NEW work stops landing here (survivor
+            # gears from the failure callback route around it, sibling /
+            # hedge re-issues skip it), but the device keeps serving its
+            # queued batches, racing the revoke deadline; the callback
+            # also pre-computes the survivor plan so the swap at revoke
+            # time is O(1)
+            lane.dev_draining[dev] = True
+            if on_failure is not None:
+                new_gears = on_failure(t, dev)
+                if new_gears is not None:
+                    lane.gears = list(new_gears)
+                    lane.single_gear = len(lane.gears) == 1
+            return
+        if kind == "revoke":
+            # spot revoke: the machine vanishes with whatever it holds.
+            # Queued sole copies are shed now; the in-flight batch becomes
+            # a stale completion under a revoked epoch, so `_reissue`
+            # sheds (not re-issues) it at exactly the (t, seq) the scalar
+            # heap pops it.
+            lane.revoked.setdefault(dev, set()).add(lane.dev_epoch[dev])
+            lane.dev_alive[dev] = False
+            lane.dev_idle[dev] = False
+            lane.dev_draining[dev] = False
+            lane.dev_epoch[dev] += 1
+            if lane.comp_payload[dev] is not None:
+                heapq.heappush(lane.rare,
+                               (lane.comp_t[dev], lane.comp_seq[dev],
+                                "stale", lane.comp_payload[dev]))
+                lane.comp_t[dev] = math.inf
+                lane.comp_payload[dev] = None
+            for rj in self.reps_on_dev.get(dev, []):
+                sids, stages = lane.qs[rj].pop(lane.qs[rj].n)
+                for sid, stage in zip(sids, stages):
+                    if lane.cur_stage[sid] != stage:
+                        continue  # stale duplicate, sample lives on
+                    alt = lane.hedged_to.get(sid)
+                    if alt == rj:
+                        # the queued copy is the hedge duplicate; the
+                        # primary batch is still running elsewhere
+                        self._refund_hedge(lane, sid, rj)
+                    elif alt is None:
+                        lane.cur_stage[sid] = 1 << 30
+                        lane.shed += 1
+                    # else: primary dies, hedge copy carries the sample
+            if on_failure is not None:
+                new_gears = on_failure(t, dev)
+                if new_gears is not None:
+                    lane.gears = list(new_gears)
+                    lane.single_gear = len(lane.gears) == 1
+            return
         # fail: the in-flight batch becomes a stale completion — it keeps
         # its (t, seq) so it pops exactly when the scalar heap would pop it
         lane.dev_alive[dev] = False
         lane.dev_idle[dev] = False
+        lane.dev_draining[dev] = False
         lane.dev_epoch[dev] += 1
         if lane.comp_payload[dev] is not None:
             heapq.heappush(lane.rare,
@@ -1190,15 +1324,12 @@ class VecSim:
                             lane.comp_payload[dev]))
             lane.comp_t[dev] = math.inf
             lane.comp_payload[dev] = None
-        mw = self.cfg.max_wait
-        for rj in self.reps_on_dev.get(dev, []):
-            sids, stages = lane.qs[rj].pop(lane.qs[rj].n)
-            alt = self._sibling(lane, rj)
-            if alt is None:
-                continue
-            for sid, stage in zip(sids, stages):
-                lane.qs[alt].push(sid, stage, t)
-                self._ring_append(lane, alt, t + mw)
+        self._drain_queues(lane, t, dev)
+        if on_failure is not None:
+            new_gears = on_failure(t, dev)
+            if new_gears is not None:
+                lane.gears = list(new_gears)
+                lane.single_gear = len(lane.gears) == 1
 
     def _measure_tick(self, lane: _Lane, core: SchedulerCore,
                       t: float) -> None:
@@ -1231,7 +1362,8 @@ class VecSim:
             resolver=lane.resolver[done],
             completed=int(done.sum()),
             offered=n_arr,
-            backlog_end=int(n_arr - done.sum()),
+            backlog_end=int(n_arr - done.sum()) - lane.shed,
+            shed=lane.shed,
             device_busy=np.asarray(lane.dev_busy),
             horizon=horizon,
             gear_switches=lane.switches,

@@ -360,10 +360,11 @@ class CascadeServer:
 
     # ------------------------------------------------- virtual-time driver
     def run_virtual(self, requests: Sequence[Request],
-                    qps_per_sec: np.ndarray,
+                    qps_per_sec: Optional[np.ndarray] = None,
                     batch_runtime: Optional[Callable[[str, int], float]]
                     = None,
-                    drain: float = 2.0) -> List[Request]:
+                    drain: float = 2.0,
+                    device_events=None, scenario=None) -> List[Request]:
         """Deterministic open-loop replay in VIRTUAL time: no threads, no
         wall clock, no sleeps.
 
@@ -377,8 +378,28 @@ class CascadeServer:
         ``DecisionTrace`` captured here is directly comparable to one from
         ``ServingSimulator.run_trace`` — that equality is the planner's
         fidelity contract (tests/test_scheduling_parity.py).
+
+        ``device_events`` (or a full ``repro.core.scenarios.Scenario`` via
+        ``scenario=``, mutually exclusive with explicit trace/events) run
+        the same fail / slow / recover / drain / revoke / netdeg machinery
+        as the simulators: a failed device invalidates its in-flight batch
+        (the epoch guard re-issues the work on a sibling), a draining
+        device keeps serving its queued batches but receives no re-issued
+        work, racing the revoke deadline, and a revoked device sheds
+        whatever was still resident on it — the spot machine is gone.
         """
-        from repro.core.simulator import trace_to_arrivals
+        from repro.core.simulator import (trace_to_arrivals,
+                                          validate_device_events)
+        if scenario is not None:
+            if qps_per_sec is not None or device_events is not None:
+                raise ValueError(
+                    "pass either scenario= or explicit qps_per_sec/"
+                    "device_events, not both")
+            qps_per_sec = scenario.qps()
+            device_events = scenario.device_events()
+            drain = scenario.drain
+        if qps_per_sec is None or not len(qps_per_sec):
+            raise ValueError("cannot replay an empty QPS trace")
         if batch_runtime is None:
             batch_runtime = self.backend.batch_runtime
         arrivals = trace_to_arrivals(qps_per_sec).tolist()
@@ -387,8 +408,18 @@ class CascadeServer:
         horizon = float(len(qps_per_sec)) + drain
         replicas = self.plan.replicas
         reps_on_dev = self.core.reps_on_dev
+        reps_of = self.core.reps_of
         max_wait = self.cfg.max_wait
-        dev_idle = [True] * self.plan.num_devices
+        n_dev = self.plan.num_devices
+        dev_idle = [True] * n_dev
+        dev_alive = [True] * n_dev
+        dev_speed = [1.0] * n_dev
+        dev_epoch = [0] * n_dev
+        dev_draining = [False] * n_dev
+        # epochs ended by a spot revoke: in-flight batches carrying them
+        # are dropped (the requests never resolve — shed), not re-issued
+        revoked: Dict[int, set] = {}
+        net = 1.0
 
         heap: List[Tuple[float, int, str, tuple]] = []
         seq = 0
@@ -400,14 +431,16 @@ class CascadeServer:
 
         def try_fire(ridx: int, t: float):
             dev = replicas[ridx].device
-            if not dev_idle[dev]:
+            if not dev_idle[dev] or not dev_alive[dev]:
                 return
             batch = self._poll_replica(ridx, t)
             if not batch:
                 return
             rt = batch_runtime(replicas[ridx].model, len(batch))
+            rt_actual = rt * net * dev_speed[dev]
             dev_idle[dev] = False
-            push_event(t + rt, "complete", (ridx, batch))
+            push_event(t + rt_actual, "complete",
+                       (ridx, batch, dev_epoch[dev]))
 
         def on_enqueue(ridx: int, t: float):
             # mirror the simulator's enqueue: poll the target replica, then
@@ -415,6 +448,72 @@ class CascadeServer:
             try_fire(ridx, t)
             if len(self.queues[ridx]):
                 push_event(t + max_wait, "timeout", (ridx,))
+
+        def sibling_replica(ridx: int) -> Optional[int]:
+            # fastest (min-queue) alive, non-draining sibling — mirrors the
+            # simulators' re-issue target choice
+            model = replicas[ridx].model
+            best, best_q = None, None
+            for rj in reps_of.get(model, []):
+                d = replicas[rj].device
+                if rj == ridx or not dev_alive[d] or dev_draining[d]:
+                    continue
+                if best is None or len(self.queues[rj]) < best_q:
+                    best, best_q = rj, len(self.queues[rj])
+            return best
+
+        def drain_queues(t: float, dev: int) -> None:
+            for rj in reps_on_dev.get(dev, []):
+                moved = self.queues[rj].pop_batch(len(self.queues[rj]))
+                alt = sibling_replica(rj)
+                if alt is None:
+                    continue
+                for req, _ in moved:
+                    self.queues[alt].push(req, t)
+                    push_event(t + max_wait, "timeout", (alt,))
+
+        def on_device_event(t: float, dev: int, kind: str, factor: float):
+            nonlocal net
+            if kind == "slow":
+                dev_speed[dev] = factor
+            elif kind == "netdeg":
+                net = factor
+            elif kind == "recover":
+                dev_speed[dev] = 1.0
+                dev_draining[dev] = False
+                if not dev_alive[dev]:
+                    dev_alive[dev] = True
+                    dev_idle[dev] = True
+                    for rj in reps_on_dev.get(dev, []):
+                        try_fire(rj, t)
+                        if not dev_idle[dev]:
+                            break
+            elif kind == "drain":
+                # preemption notice: new routing (sibling re-issues) skips
+                # the device, but it keeps serving its queued batches,
+                # racing the revoke deadline
+                dev_draining[dev] = True
+            elif kind == "revoke":
+                # spot revoke: the machine vanishes with whatever it
+                # holds — queued requests are dropped now, the in-flight
+                # batch's epoch is recorded so its completion drops too
+                revoked.setdefault(dev, set()).add(dev_epoch[dev])
+                dev_alive[dev] = False
+                dev_idle[dev] = False
+                dev_draining[dev] = False
+                dev_epoch[dev] += 1
+                for rj in reps_on_dev.get(dev, []):
+                    self.queues[rj].pop_batch(len(self.queues[rj]))
+            else:  # fail
+                dev_alive[dev] = False
+                dev_idle[dev] = False
+                dev_draining[dev] = False
+                dev_epoch[dev] += 1
+                drain_queues(t, dev)
+
+        for ev_t, ev_d, ev_kind, ev_f in validate_device_events(
+                device_events, n_dev):
+            push_event(ev_t, "devevent", (ev_d, ev_kind, ev_f))
 
         meas_end = self.cfg.measure_interval
         arr_ptr = 0
@@ -439,17 +538,35 @@ class CascadeServer:
             else:
                 _, _, kind, payload = heapq.heappop(heap)
                 if kind == "complete":
-                    ridx, batch = payload
+                    ridx, batch, epoch = payload
                     dev = replicas[ridx].device
+                    if epoch != dev_epoch[dev]:
+                        if epoch in revoked.get(dev, ()):
+                            # the batch died WITH the revoked spot machine:
+                            # its requests are shed, never resolved
+                            continue
+                        # device died mid-batch: re-issue the in-flight
+                        # work on a sibling (the request objects were never
+                        # resolved, so no duplicate completions arise)
+                        alt = sibling_replica(ridx)
+                        if alt is not None:
+                            for req, _ in batch:
+                                self.queues[alt].push(req, t_evt)
+                                push_event(t_evt + max_wait, "timeout",
+                                           (alt,))
+                        continue
                     self._run_batch(replicas[ridx].model, batch, now=t_evt,
                                     on_enqueue=on_enqueue)
-                    dev_idle[dev] = True
-                    for rj in reps_on_dev.get(dev, []):
-                        try_fire(rj, t_evt)
-                        if not dev_idle[dev]:
-                            break
-                else:  # timeout
+                    if dev_alive[dev]:
+                        dev_idle[dev] = True
+                        for rj in reps_on_dev.get(dev, []):
+                            try_fire(rj, t_evt)
+                            if not dev_idle[dev]:
+                                break
+                elif kind == "timeout":
                     try_fire(payload[0], t_evt)
+                else:  # devevent
+                    on_device_event(t_evt, *payload)
 
         return list(self.completed)
 

@@ -1,0 +1,282 @@
+"""Elastic fleet (distributed/fault_tolerance): the FleetController's
+trigger/cool-down/guard machinery, the PreemptionCoordinator's memoized
+survivor plans, rebalance_on_failure edge cases, plan_capacity_qps, and
+the windowed run_elastic_fleet driver."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.adaption import MonitorConfig, PlanMonitor, ReplanTrigger
+from repro.core.admission import plan_capacity_qps
+from repro.core.gears import PlanProvenance
+from repro.core.scenarios import (DeviceRecover, Scenario, SpotPreemption,
+                                  constant, ramp)
+from repro.distributed.fault_tolerance import (FleetConfig, FleetController,
+                                               PreemptionCoordinator,
+                                               rebalance_on_failure,
+                                               run_elastic_fleet)
+
+
+def _trig(reason, t=0.0, qps=500.0):
+    return ReplanTrigger(reason=reason, t=t, measured_qps=qps)
+
+
+@pytest.fixture(scope="module")
+def controller_parts(small_plan):
+    report, hw = small_plan
+    cfg = FleetConfig(min_devices=1, max_devices=6, cooldown=50.0,
+                      shrink_guard=1.2, device_hour_price=2.0)
+    return report, cfg
+
+
+# ----------------------------------------------------------- FleetController
+
+def test_scale_out_grows_and_cooldown_vetoes(controller_parts):
+    report, cfg = controller_parts
+    fc = FleetController(report.state, cfg, base_plan=report.plan)
+    assert fc.n_devices == 4
+    fc.request(_trig("scale-out"), 100.0)
+    assert fc.act(100.0, recent_peak_qps=5000.0) is not None
+    assert fc.n_devices == 5
+    assert fc.plan.num_devices == 5
+    # a second desire inside the cool-down window is vetoed
+    fc.request(_trig("scale-out"), 120.0)
+    assert fc.act(120.0, recent_peak_qps=5000.0) is None
+    assert fc.n_devices == 5
+    vetoed = fc.actions[-1]
+    assert not vetoed.applied and vetoed.detail == "cooldown"
+    # past the cool-down it applies, clamped at max_devices
+    fc.request(_trig("scale-out"), 200.0)
+    assert fc.act(200.0, recent_peak_qps=5000.0) is not None
+    fc.request(_trig("scale-out"), 300.0)
+    assert fc.act(300.0, recent_peak_qps=5000.0) is None   # at max 6
+    assert fc.n_devices == 6
+
+
+def test_shrink_guard_iso_slo(controller_parts):
+    report, cfg = controller_parts
+    fc = FleetController(report.state, cfg, base_plan=report.plan)
+    # peak too high: 3 devices cannot hold guard x peak -> veto
+    cap3 = plan_capacity_qps(fc.plan_for(3), report.state.profiles)
+    fc.request(_trig("scale-in"), 100.0)
+    assert fc.act(100.0, recent_peak_qps=cap3 / cfg.shrink_guard + 1.0) \
+        is None
+    assert fc.n_devices == 4
+    assert "iso-SLO guard" in fc.actions[-1].detail
+    # quiet peak: the shrink applies
+    fc.request(_trig("scale-in"), 200.0)
+    assert fc.act(200.0, recent_peak_qps=100.0) is not None
+    assert fc.n_devices == 3
+
+
+def test_plan_for_memoized_bit_identical(controller_parts):
+    report, cfg = controller_parts
+    fc = FleetController(report.state, cfg, base_plan=report.plan)
+    p3a = fc.plan_for(3)
+    p3b = fc.plan_for(3)
+    assert p3a is p3b                       # memo, no second solve
+    assert fc.plan_for(4) is report.plan    # base plan passed through
+    assert p3a.num_devices == 3
+    # the planned range scales with the fleet
+    assert p3a.qps_max == pytest.approx(report.plan.qps_max * 3 / 4)
+
+
+def test_capacity_monotone_in_fleet(controller_parts):
+    report, cfg = controller_parts
+    fc = FleetController(report.state, cfg, base_plan=report.plan)
+    profiles = report.state.profiles
+    caps = [plan_capacity_qps(fc.plan_for(n), profiles) for n in (2, 3, 4)]
+    assert 0 < caps[0] < caps[1] < caps[2]
+
+
+def test_grant_and_revoke_mandates(controller_parts):
+    report, cfg = controller_parts
+    fc = FleetController(report.state, cfg, base_plan=report.plan)
+    fc.apply_fleet_event(0.0, "grant", 2)
+    assert fc.max_devices == 8
+    # revoke below the live fleet forces a shrink, ignoring cool-down
+    fc.request(_trig("scale-out"), 10.0)
+    fc.act(10.0, recent_peak_qps=1000.0)            # n = 5, cooldown armed
+    forced = fc.apply_fleet_event(11.0, "revoke", 5)
+    assert forced is not None
+    assert fc.n_devices == fc.max_devices == 3
+    with pytest.raises(ValueError):
+        fc.apply_fleet_event(12.0, "lease", 1)
+
+
+def test_cost_metering(controller_parts):
+    report, cfg = controller_parts
+    fc = FleetController(report.state, cfg, base_plan=report.plan)
+    fc.meter(100.0)                                  # 100 s at 4 devices
+    fc.request(_trig("scale-in"), 100.0)
+    fc.act(100.0, recent_peak_qps=10.0)              # -> 3 devices
+    fc.meter(200.0)                                  # 100 s at 3 devices
+    assert fc.device_seconds == pytest.approx(100 * 4 + 100 * 3)
+    assert fc.device_hours == pytest.approx(700 / 3600.0)
+    assert fc.cost == pytest.approx(fc.device_hours * 2.0)
+
+
+def test_start_devices_prewarms(controller_parts):
+    report, cfg = controller_parts
+    fc = FleetController(report.state, cfg, base_plan=report.plan,
+                         start_devices=2)
+    assert fc.n_devices == 2
+    assert fc.plan.num_devices == 2
+    with pytest.raises(ValueError):
+        FleetController(report.state, cfg, base_plan=report.plan,
+                        start_devices=99)
+
+
+def test_monitor_emits_scale_triggers():
+    prov = PlanProvenance(qps_max=400.0, n_ranges=4, qps_prior=(0.25,) * 4,
+                          num_devices=2, mem_per_device=16e9)
+    mon = PlanMonitor(prov, MonitorConfig(scale_out_frac=0.8,
+                                          scale_out_ticks=2,
+                                          scale_in_frac=0.25,
+                                          scale_in_ticks=2, cooldown=0.0))
+    assert mon.on_tick(1.0, 350.0) is None
+    trig = mon.on_tick(2.0, 350.0)
+    assert trig is not None and trig.reason == "scale-out"
+    assert mon.on_tick(3.0, 50.0) is None
+    trig = mon.on_tick(4.0, 50.0)
+    assert trig is not None and trig.reason == "scale-in"
+
+
+# ---------------------------------------------------- PreemptionCoordinator
+
+def test_coordinator_memoizes_survivor_solve(bert_like_profiles,
+                                             small_plan):
+    report, _ = small_plan
+    coord = PreemptionCoordinator(report.plan, bert_like_profiles)
+    g1 = coord.on_failure(10.0, 3)          # drain notice: the one solve
+    assert g1 is not None and coord.solves == 1
+    g2 = coord.on_failure(18.0, 3)          # revoke: memo hit, O(1)
+    assert g2 is g1
+    assert coord.solves == 1 and coord.hits == 1
+
+
+def test_coordinator_recovery_restores_original_bit_identically(
+        bert_like_profiles, small_plan):
+    report, _ = small_plan
+    coord = PreemptionCoordinator(report.plan, bert_like_profiles)
+    survivors = coord.on_failure(10.0, 3)
+    restored = coord.on_recover(3)
+    # empty down-set: the ORIGINAL gear list object, not a re-solve
+    assert restored is report.plan.gears
+    assert coord.down == set()
+    # going down again reuses the memo for the same down-set
+    again = coord.on_failure(20.0, 3)
+    assert again is survivors and coord.solves == 1
+
+
+def test_coordinator_none_when_no_gear_survives(bert_like_profiles,
+                                                small_plan):
+    report, hw = small_plan
+    coord = PreemptionCoordinator(report.plan, bert_like_profiles)
+    out = None
+    for d in range(hw.num_devices):
+        out = coord.on_failure(float(d), d)
+    assert out is None and coord.infeasible >= 1
+
+
+# ------------------------------------------------ rebalance_on_failure edges
+
+def test_rebalance_last_replica_remaps_to_feasible_gear(
+        bert_like_profiles, small_plan):
+    """Kill every device hosting some model: gears whose cascade used it
+    must be remapped to the nearest runnable gear, and every load
+    fraction must point at a surviving replica."""
+    report, _ = small_plan
+    plan = report.plan
+    by_model = {}
+    for r in plan.replicas:
+        by_model.setdefault(r.model, set()).add(r.device)
+    # the model with the FEWEST hosting devices is the cheapest total loss
+    victim, devs = min(by_model.items(), key=lambda kv: len(kv[1]))
+    if len(devs) == len({r.device for r in plan.replicas}):
+        pytest.skip("every model spans the whole fleet in this plan")
+    fixed = rebalance_on_failure(plan, bert_like_profiles, set(devs))
+    alive = {m for m, d in by_model.items() if d - devs}
+    for g in fixed.gears:
+        assert all(m in alive for m in g.cascade.models)
+        for m, frac in g.load_fractions.items():
+            for ridx, f in frac.items():
+                if f > 0:
+                    assert plan.replicas[ridx].device not in devs
+    # replica indices are stable (queues are keyed by index)
+    assert fixed.replicas == plan.replicas
+
+
+def test_rebalance_total_loss_raises(bert_like_profiles, small_plan):
+    report, hw = small_plan
+    with pytest.raises(RuntimeError):
+        rebalance_on_failure(report.plan, bert_like_profiles,
+                             set(range(hw.num_devices)))
+
+
+def test_rebalance_reentry_is_pure(bert_like_profiles, small_plan):
+    """Same down-set twice: identical fractions (the LP resolve is
+    deterministic), so recovery re-entry restores routing exactly."""
+    report, _ = small_plan
+    a = rebalance_on_failure(report.plan, bert_like_profiles, {3})
+    b = rebalance_on_failure(report.plan, bert_like_profiles, {3})
+    for ga, gb in zip(a.gears, b.gears):
+        assert ga.load_fractions == gb.load_fractions
+
+
+# ----------------------------------------------------------- windowed driver
+
+def test_run_elastic_fleet_static_accounting(bert_like_profiles,
+                                             small_plan):
+    report, _ = small_plan
+    sc = Scenario(traffic=constant(20, 1000.0), drain=2.0)
+    r = run_elastic_fleet(bert_like_profiles, sc, plan=report.plan,
+                          slo_latency=0.4, window=8.0)
+    assert r.offered == 20 * 1000
+    assert r.completed + r.shed == r.offered
+    assert r.windows == 3                     # 8 + 8 + 4
+    assert r.device_hours == pytest.approx(4 * 20 / 3600.0)
+    assert 0.0 <= r.slo_attainment <= 1.0
+    assert r.fleet_sizes == [(0.0, 4)]
+
+
+def test_run_elastic_fleet_skips_out_of_range_events(bert_like_profiles,
+                                                     small_plan):
+    report, cfg = small_plan[0], FleetConfig(min_devices=2, max_devices=4,
+                                             cooldown=0.0)
+    fc = FleetController(report.state, cfg, base_plan=report.plan,
+                         start_devices=2)
+    sc = Scenario(traffic=constant(12, 200.0),
+                  events=(SpotPreemption(t=4.0, device=3, lead=2.0),
+                          DeviceRecover(t=9.0, device=3)),
+                  drain=2.0)
+    r = run_elastic_fleet(bert_like_profiles, sc, controller=fc,
+                          slo_latency=0.4, window=6.0)
+    # fleet stays at 2 (no triggers enabled): device-3 events are skipped
+    assert r.skipped_events == 3              # drain + revoke + recover
+    assert r.completed + r.shed == r.offered
+
+
+def test_run_elastic_fleet_grows_under_ramp(bert_like_profiles,
+                                            small_plan):
+    report, _ = small_plan
+    cfg = FleetConfig(min_devices=2, max_devices=4, cooldown=10.0)
+    fc = FleetController(report.state, cfg, base_plan=report.plan,
+                         start_devices=2)
+    mon = MonitorConfig(scale_out_frac=0.5, scale_out_ticks=3,
+                        cooldown=5.0)
+    sc = Scenario(traffic=ramp(60, 500.0, 6000.0), drain=2.0)
+    r = run_elastic_fleet(bert_like_profiles, sc, controller=fc,
+                          monitor_cfg=mon, slo_latency=0.4, window=15.0)
+    sizes = [n for _, n in r.fleet_sizes]
+    assert sizes[0] == 2 and max(sizes) > 2   # the ramp grew the fleet
+    assert all(b >= a for a, b in zip(sizes, sizes[1:]))
+    assert r.completed + r.shed == r.offered
+
+
+def test_run_elastic_fleet_arg_validation(bert_like_profiles, small_plan):
+    report, _ = small_plan
+    sc = Scenario(traffic=constant(5, 100.0))
+    with pytest.raises(ValueError):
+        run_elastic_fleet(bert_like_profiles, sc)       # neither arm

@@ -1,0 +1,237 @@
+"""Scenario DSL (core/scenarios.py): builders, lowering, validation, and
+the cross-driver determinism regression — one scenario with a flash crowd,
+a spot preemption, and a recovery must produce bit-identical decision
+traces from the scalar simulator and a single VecSim lane, and across two
+runs of the same driver."""
+import numpy as np
+import pytest
+
+from repro.core import DecisionTrace, ServingSimulator, SimConfig
+from repro.core.scenarios import (CapacityGrant, CapacityRevoke, DeviceFail,
+                                  DeviceRecover, DeviceSlowdown,
+                                  NetworkDegradation, Scenario,
+                                  SpotPreemption, constant, diurnal_noise,
+                                  flash_crowd, ramp, spike)
+from repro.core.vecsim import VecSim
+
+
+# --------------------------------------------------------------- traffic DSL
+
+def test_traffic_builders_render_shapes():
+    assert len(constant(10, 100.0).render()) == 10
+    assert len(ramp(20, 50.0, 500.0).render()) == 20
+    assert len(diurnal_noise(days=2, day_seconds=30).render()) == 60
+    s = spike(30, base_qps=100.0, spike_qps=900.0, at=10, length=5).render()
+    assert s.max() > 100.0 and s[0] == pytest.approx(100.0)
+    f = flash_crowd(40, base_qps=100.0, peak_qps=800.0, at=10).render()
+    assert f.max() <= 800.0 + 1e-9 and f[:10].max() == pytest.approx(100.0)
+
+
+def test_traffic_compose_and_scale():
+    a, b = constant(10, 100.0), constant(10, 50.0)
+    assert np.allclose((a + b).render(), 150.0)
+    assert np.allclose(a.scaled(2.0).render(), 200.0)
+
+
+def test_traffic_render_deterministic():
+    t1 = diurnal_noise(days=1, day_seconds=50, noise=0.2, seed=9).render()
+    t2 = diurnal_noise(days=1, day_seconds=50, noise=0.2, seed=9).render()
+    assert np.array_equal(t1, t2)
+
+
+# ----------------------------------------------------------------- lowering
+
+def test_spot_preemption_lowers_to_drain_plus_revoke():
+    sc = Scenario(traffic=constant(60, 100.0),
+                  events=(SpotPreemption(t=10.0, device=2, lead=5.0),))
+    evs = sc.device_events()
+    assert (10.0, 2, "drain", 5.0) in evs
+    assert (15.0, 2, "revoke", 0.0) in evs
+
+
+def test_zero_lead_preemption_is_hard_revoke():
+    sc = Scenario(traffic=constant(30, 100.0),
+                  events=(SpotPreemption(t=10.0, device=1, lead=0.0),))
+    evs = sc.device_events()
+    assert evs == [(10.0, 1, "revoke", 0.0)]
+
+
+def test_hard_fail_variant_strips_leads():
+    sc = Scenario(traffic=constant(60, 100.0),
+                  events=(SpotPreemption(t=10.0, device=2, lead=5.0),
+                          DeviceRecover(t=40.0, device=2)))
+    hard = sc.hard_fail_variant()
+    evs = hard.device_events()
+    # the revoke lands at the SAME wall-clock instant, without the notice
+    assert (15.0, 2, "revoke", 0.0) in evs
+    assert not any(k == "drain" for _, _, k, _ in evs)
+    # non-preemption events pass through untouched
+    assert (40.0, 2, "recover", 1.0) in evs
+
+
+def test_event_lowering_sorted_and_mixed():
+    sc = Scenario(traffic=constant(120, 100.0), events=(
+        NetworkDegradation(t=50.0, until=60.0, factor=2.0),
+        DeviceSlowdown(t=5.0, device=0, factor=3.0),
+        DeviceFail(t=20.0, device=1),
+        SpotPreemption(t=30.0, device=2, lead=10.0)))
+    evs = sc.device_events()
+    assert evs == sorted(evs, key=lambda e: e[0])
+    kinds = {k for _, _, k, _ in evs}
+    assert kinds == {"netdeg", "slow", "fail", "drain", "revoke"}
+
+
+def test_fleet_events_lowering():
+    sc = Scenario(traffic=constant(60, 100.0),
+                  events=(CapacityGrant(t=10.0, devices=2),
+                          CapacityRevoke(t=30.0, devices=1)))
+    assert sc.fleet_events() == [(10.0, "grant", 2), (30.0, "revoke", 1)]
+    assert sc.device_events() == []
+
+
+def test_scenario_validation():
+    with pytest.raises(ValueError):
+        Scenario(traffic=constant(10, 100.0), drain=-1.0)
+
+
+# ----------------------------------------------- cross-driver determinism
+
+@pytest.fixture(scope="module")
+def chaos_scenario():
+    return Scenario(
+        traffic=flash_crowd(40, base_qps=300.0, peak_qps=1200.0, at=10),
+        events=(SpotPreemption(t=12.0, device=3, lead=6.0),
+                DeviceRecover(t=30.0, device=3)),
+        drain=2.0, name="determinism-regression")
+
+
+def test_scenario_determinism_across_drivers(bert_like_profiles, small_plan,
+                                             chaos_scenario):
+    report, hw = small_plan
+    plan = report.plan
+    cfg = SimConfig()
+    sim = ServingSimulator(bert_like_profiles, plan.replicas,
+                           hw.num_devices, cfg)
+    vec = VecSim(bert_like_profiles, plan.replicas, hw.num_devices, cfg)
+
+    tr_sim, tr_sim2, tr_vec = (DecisionTrace() for _ in range(3))
+    r_sim = sim.run_trace(plan, scenario=chaos_scenario,
+                          decision_trace=tr_sim)
+    r_sim2 = sim.run_trace(plan, scenario=chaos_scenario,
+                           decision_trace=tr_sim2)
+    r_vec = vec.run_trace(plan, scenario=chaos_scenario,
+                          decision_trace=tr_vec)
+
+    # same driver, two runs: bit-identical
+    assert tr_sim.routes == tr_sim2.routes
+    assert tr_sim.fires == tr_sim2.fires
+    assert tr_sim.hops == tr_sim2.hops
+    assert r_sim.completed == r_sim2.completed
+    # scalar vs lane-batched: bit-identical decision streams
+    assert tr_sim.routes == tr_vec.routes
+    assert tr_sim.gear_switches == tr_vec.gear_switches
+    assert tr_sim.fires == tr_vec.fires
+    assert tr_sim.hops == tr_vec.hops
+    assert r_sim.completed == r_vec.completed
+    assert r_sim.shed == r_vec.shed
+    # the preemption actually bit: some decisions happened post-notice
+    assert any(f[0] >= 0 for f in tr_sim.fires)
+
+
+def test_scenario_exclusive_with_explicit_args(bert_like_profiles,
+                                               small_plan, chaos_scenario):
+    report, hw = small_plan
+    sim = ServingSimulator(bert_like_profiles, report.plan.replicas,
+                           hw.num_devices)
+    with pytest.raises(ValueError):
+        sim.run_trace(report.plan, np.full(5, 100.0),
+                      scenario=chaos_scenario)
+
+
+# ------------------------------------------------------- revoke semantics
+
+def test_revoke_sheds_drain_saves(bert_like_profiles, small_plan):
+    """The drain window's entire value: a warned preemption sheds strictly
+    fewer requests than the same machine vanishing unannounced."""
+    from repro.distributed.fault_tolerance import PreemptionCoordinator
+    report, hw = small_plan
+    plan = report.plan
+    sim = ServingSimulator(bert_like_profiles, plan.replicas,
+                           hw.num_devices)
+    base = dict(traffic=constant(30, 6000.0), drain=2.0)
+    warned = Scenario(events=(SpotPreemption(t=15.0, device=3, lead=8.0),),
+                      **base)
+    coord = PreemptionCoordinator(plan, bert_like_profiles)
+    r_warn = sim.run_trace(plan, scenario=warned,
+                           on_failure=coord.on_failure)
+    coord.reset(plan)
+    r_hard = sim.run_trace(plan, scenario=warned.hard_fail_variant(),
+                           on_failure=coord.on_failure)
+    # hard revoke loses the resident queue + in-flight batch
+    assert r_hard.shed > 0
+    assert r_warn.shed < r_hard.shed
+    # conservation: every offered sample is completed, still in flight,
+    # or accounted as shed — nothing vanishes silently
+    for r in (r_warn, r_hard):
+        assert r.completed + r.backlog_end + r.shed == r.offered
+
+
+def test_fail_still_replays_everything(bert_like_profiles, small_plan):
+    """`fail` keeps replay semantics (crash, not revoke): nothing is shed
+    and the re-issued work completes on the survivors."""
+    report, hw = small_plan
+    plan = report.plan
+    sim = ServingSimulator(bert_like_profiles, plan.replicas,
+                           hw.num_devices)
+    r = sim.run_trace(plan, np.full(20, 2000.0), drain=5.0,
+                      device_events=[(10.0, 3, "fail", 0.0)])
+    assert r.shed == 0
+    assert r.completed + r.backlog_end == r.offered
+
+
+def test_hedge_budget_refund_on_preemption(bert_like_profiles, small_plan):
+    """Hedge/preemption interaction: a hedged duplicate parked on the
+    preempted device is refunded (the fleet, not the straggler history,
+    killed it), so hedging composes with drain windows without stranding
+    samples or double-charging the per-batch budget."""
+    from repro.distributed.fault_tolerance import HedgePolicy
+    report, hw = small_plan
+    plan = report.plan
+    sim = ServingSimulator(bert_like_profiles, plan.replicas,
+                           hw.num_devices)
+    sc = Scenario(traffic=constant(30, 3000.0),
+                  events=(DeviceSlowdown(t=5.0, device=1, factor=12.0),
+                          SpotPreemption(t=12.0, device=2, lead=4.0),
+                          DeviceRecover(t=22.0, device=2)),
+                  drain=5.0)
+    hedge = HedgePolicy(hedge_multiplier=2.0, max_hedges_per_batch=1)
+    r = sim.run_trace(plan, scenario=sc, hedge=hedge)
+    r_plain = sim.run_trace(plan, scenario=sc)
+    assert r.completed + r.backlog_end + r.shed == r.offered
+    # hedging must not LOSE completions relative to the unhedged run
+    assert r.completed >= r_plain.completed
+
+
+# --------------------------------------------------- entry validation (all
+# three drivers run validate_device_events before simulating)
+
+@pytest.mark.parametrize("events,match", [
+    ([(5.0, 0, "explode", 0.0)], "unknown kind"),
+    ([(5.0, 99, "fail", 0.0)], "out of range"),
+    ([(10.0, 0, "fail", 0.0), (5.0, 1, "fail", 0.0)], "sorted"),
+    ([(5.0, 0, "slow", -1.0)], "slow-down factor"),
+    ([(5.0, 0, "netdeg", 2.0)], "fleet-wide"),
+    ([(-1.0, 0, "fail", 0.0)], "time must be"),
+    ([("bad",)], "tuple"),
+])
+def test_validate_device_events_rejects(bert_like_profiles, small_plan,
+                                        events, match):
+    report, hw = small_plan
+    trace = np.full(5, 50.0)
+    sim = ServingSimulator(bert_like_profiles, report.plan.replicas,
+                           hw.num_devices)
+    vec = VecSim(bert_like_profiles, report.plan.replicas, hw.num_devices)
+    with pytest.raises(ValueError, match=match):
+        sim.run_trace(report.plan, trace, device_events=events)
+    with pytest.raises(ValueError, match=match):
+        vec.run_trace(report.plan, trace, device_events=events)
