@@ -33,6 +33,7 @@ BENCHES = [
     "bench_tokens",              # token-level continuous batching vs rebatch
     "bench_decode_loop",         # device-resident fused loop vs host loop
     "bench_elastic",             # elastic fleet $/M-req over a sim week
+    "bench_telemetry",           # span overhead + attribution reconcile
 ]
 
 

@@ -33,6 +33,10 @@ from repro.core.scheduling import (CascadeHop, DecisionTrace, GearSelector,
                                    with_hysteresis)
 from repro.core.simulator import ServingSimulator, SimConfig, SimResult, \
     make_gear
+from repro.core.telemetry import (Counter, Gauge, Log2Histogram,
+                                  MetricsRegistry, Span,
+                                  SpanAccountingError, Telemetry,
+                                  WindowSeries)
 from repro.core.tenancy import (MultiTenantPlan, MultiTenantReport,
                                 TenantResult, TenantSpec,
                                 make_tenant_lifecycles, plan_multi_tenant,
@@ -62,4 +66,7 @@ __all__ = [
     "plan_multi_tenant", "make_tenant_lifecycles", "run_multi_tenant_sim",
     "AdmissionConfig", "AdmissionController", "AdmissionDecision",
     "fleet_capacities", "weighted_fair_shares",
+    # unified telemetry (core/telemetry.py, DESIGN.md §16)
+    "Telemetry", "MetricsRegistry", "Counter", "Gauge", "Log2Histogram",
+    "WindowSeries", "Span", "SpanAccountingError",
 ]

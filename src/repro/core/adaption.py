@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import threading
 import time
-from collections import deque
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -43,6 +43,7 @@ from repro.core.gears import GearPlan, PlanProvenance, SLO
 from repro.core.plan_state import HardwareSpec, InfeasiblePlanError
 from repro.core.scheduling import (GearSelector, SchedulerCore, plan_target,
                                    with_hysteresis)
+from repro.core.telemetry import Counter, MetricsRegistry
 
 __all__ = ["MonitorConfig", "PlanMonitor", "ReplanTrigger", "PlanVersion",
            "BackgroundReplanner", "PlanLifecycle", "SwapEvent",
@@ -84,11 +85,14 @@ class MonitorConfig:
     # observed p95 latency vs the plan's Monte-Carlo certification band
     # (DESIGN.md §12): trigger when the live p95 exceeds the prior-weighted
     # certified mean by more than ``p95_drift_factor`` prior-weighted CI
-    # half-widths. 0.0 (default) disables the check; it also stays off for
-    # plans certified on the single-seed point estimate (empty
-    # ``provenance.mc_p95``), which carry no CI to key off.
+    # half-widths. 0.0 (default) disables the check. Plans certified on
+    # the single-seed point estimate (empty ``provenance.mc_p95``) carry
+    # no CI to key off; they fall back to the scalar certified p95
+    # (``provenance.range_p95``) plus ``p95_abs_margin`` seconds. A plan
+    # with neither disarms the check with a one-time warning.
     p95_drift_factor: float = 0.0
     p95_min_samples: int = 500
+    p95_abs_margin: float = 0.05
     # devices missing for this many consecutive ticks = permanent loss
     device_loss_ticks: int = 20
     # autoscaling triggers (both OFF by default — enabling them changes
@@ -109,57 +113,105 @@ class MonitorConfig:
 class PlanMonitor:
     """Watches live serving against the active plan's ``PlanProvenance``.
 
-    Fed from exactly two places: ``on_tick`` by the driver's producer
-    measurement loop (the QPS measurement exists anyway as an artifact of
-    gear switching, §5) and ``observe_cert`` by ``SchedulerCore.next_hop``
-    (the single point every cascade decision passes through).
-    ``observe_devices`` is driver-fed on device events. Holds no clock and
-    draws no randomness — determinism is what makes swap parity testable.
+    All four feeds are thin shims over one shared ``MetricsRegistry``
+    (core/telemetry.py): ``observe_cert`` (called by
+    ``SchedulerCore.next_hop``, the single point every cascade decision
+    passes through) accumulates cumulative per-model counters,
+    ``observe_latency`` and ``on_tick``'s measured QPS land in bounded
+    ``WindowSeries``, and ``observe_devices`` sets a gauge. Drift
+    verdicts are computed FROM the registry against rebase-time baseline
+    snapshots, so any other consumer (FleetController dashboards,
+    ``launch/serve.py --metrics-out``) reads the same stream the monitor
+    keys off. Holds no clock and draws no randomness — determinism is
+    what makes swap parity testable.
     """
 
     def __init__(self, provenance: PlanProvenance,
-                 cfg: MonitorConfig = MonitorConfig()):
+                 cfg: MonitorConfig = MonitorConfig(),
+                 registry: Optional[MetricsRegistry] = None):
         self.cfg = cfg
-        # the cert stream arrives from every consumer thread in the
-        # threaded server; the read-modify-write accumulation needs a lock
-        # (uncontended in the single-threaded drivers: ~no cost)
-        self._cert_lock = threading.Lock()
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        # per-model (count, sum) counter pairs, cached so the per-decision
+        # observe_cert shim costs one lock acquire + two float adds (the
+        # cert stream arrives from every consumer thread in the threaded
+        # server; uncontended in the single-threaded drivers: ~no cost)
+        self._cert_counters: Dict[str, Tuple[Counter, Counter]] = {}
+        self._dev_gauge = self.registry.gauge("devices_alive")
+        self._p95_warned = False
         self.rebase(provenance, t=0.0)
 
+    def _cert_pair(self, model: str) -> Tuple[Counter, Counter]:
+        pair = self._cert_counters.get(model)
+        if pair is None:
+            pair = (self.registry.counter("cascade_cert_count",
+                                          model=model),
+                    self.registry.counter("cascade_cert_sum", model=model))
+            self._cert_counters[model] = pair
+        return pair
+
     def rebase(self, provenance: PlanProvenance, t: float) -> None:
-        """Start watching a (new) plan; all drift state resets."""
+        """Start watching a (new) plan; all drift state resets. Registry
+        streams are cumulative and shared, so "reset" means snapshotting
+        baselines here and reading deltas in ``_check``."""
         self.provenance = provenance
+        cfg = self.cfg
+        reg = self.registry
         self._prior = np.asarray(provenance.qps_prior, np.float64)
         self._cert_ref: Dict[str, float] = dict(provenance.cert_means)
-        self._qps_window: deque = deque(maxlen=self.cfg.window_ticks)
+        self._qps_series = reg.series("measured_qps",
+                                      maxlen=cfg.window_ticks)
+        self._qps_base = self._qps_series.count
         # live completion latencies for the CI-keyed p95 drift check; the
-        # certified band belongs to THIS plan, so the window resets with it
-        self._lat_window: deque = deque(maxlen=4096)
+        # certified band belongs to THIS plan, so the window is scoped to
+        # observations made after this rebase
+        self._lat_series = reg.series("request_latency_window", maxlen=4096)
+        self._lat_base = self._lat_series.count
         self._lat_reported = False
         self._p95_threshold: Optional[float] = None
-        if self.cfg.p95_drift_factor > 0 and provenance.mc_p95:
-            w = self._prior[:len(provenance.mc_p95)]
-            means = np.array([m for m, _ in provenance.mc_p95])
-            cis = np.array([c for _, c in provenance.mc_p95])
-            self._p95_threshold = float(
-                (w * means).sum()
-                + self.cfg.p95_drift_factor * (w * cis).sum())
+        self._p95_mode = ""
+        if cfg.p95_drift_factor > 0:
+            if provenance.mc_p95:
+                w = self._prior[:len(provenance.mc_p95)]
+                means = np.array([m for m, _ in provenance.mc_p95])
+                cis = np.array([c for _, c in provenance.mc_p95])
+                self._p95_threshold = float(
+                    (w * means).sum()
+                    + cfg.p95_drift_factor * (w * cis).sum())
+                self._p95_mode = "mc"
+            elif provenance.range_p95:
+                # single-seed plan: no CI band — fall back to the scalar
+                # certified per-range p95 plus an absolute margin
+                w = self._prior[:len(provenance.range_p95)]
+                means = np.asarray(provenance.range_p95, np.float64)
+                self._p95_threshold = float(
+                    (w * means).sum() + cfg.p95_abs_margin)
+                self._p95_mode = "scalar"
+            elif not self._p95_warned:
+                self._p95_warned = True
+                warnings.warn(
+                    "MonitorConfig.p95_drift_factor is set but the plan's "
+                    "provenance carries neither mc_p95 (Monte-Carlo band) "
+                    "nor range_p95 (scalar certified p95) — the "
+                    "latency-drift check is disarmed for this plan",
+                    RuntimeWarning, stacklevel=2)
         self._over_ticks = 0
         self._loss_ticks = 0
         self._scale_out_ticks = 0
         self._scale_in_ticks = 0
         self._tick_no = 0
-        with self._cert_lock:   # consumer threads may be mid-observe_cert
-            self._cert_count = {}
-            self._cert_sum = {}
+        with reg.lock:   # consumer threads may be mid-observe_cert
+            self._cert_base = {
+                m: (self._cert_pair(m)[0].value, self._cert_pair(m)[1].value)
+                for m in self._cert_ref}
         # _n_alive and _loss_reported_n are WORLD state, not per-plan drift
         # state: a device still dead across a hot-swap must stay visible to
         # loss detection, and a loss level already reported must not
         # re-trigger after the swap's rebase (a pinned-placement re-plan
         # cannot revive devices — re-reporting the same loss forever would
-        # just burn planner cycles; see planner_replan_fn)
-        if not hasattr(self, "_n_alive"):
-            self._n_alive: Optional[int] = None
+        # just burn planner cycles; see planner_replan_fn). The alive count
+        # itself lives in the registry's devices_alive gauge.
+        if not hasattr(self, "_loss_reported_n"):
             self._loss_reported_n: Optional[int] = None
             # models whose certainty drift was already reported: a pinned
             # re-plan keeps the same profiles, so the same drift would
@@ -172,19 +224,29 @@ class PlanMonitor:
 
     # ------------------------------------------------------------- feeds
     def observe_cert(self, model: str, cert: float) -> None:
-        with self._cert_lock:
-            self._cert_count[model] = self._cert_count.get(model, 0) + 1
-            self._cert_sum[model] = self._cert_sum.get(model, 0.0) + cert
+        c, s = self._cert_pair(model)
+        with self.registry.lock:
+            c.value += 1.0
+            s.value += cert
 
     def observe_devices(self, n_alive: int) -> None:
-        self._n_alive = int(n_alive)
+        self._dev_gauge.set(int(n_alive))
 
     def observe_latency(self, latency: float) -> None:
         """Completion-latency feed for the CI-keyed p95 drift check
         (drivers call this per finished sample; optional — the check just
         stays silent without it)."""
-        with self._cert_lock:
-            self._lat_window.append(float(latency))
+        self._lat_series.observe(latency)
+
+    @property
+    def _n_alive(self) -> Optional[int]:
+        v = self._dev_gauge.value
+        return None if v is None else int(v)
+
+    def _qps_win(self) -> Tuple[float, ...]:
+        """The qps ticks observed under the currently-watched plan (only
+        materialised on the rare trigger/TV paths, not every tick)."""
+        return self._qps_series.since(self._qps_base)
 
     # ------------------------------------------------------------ verdict
     def on_tick(self, t: float, measured_qps: float
@@ -192,7 +254,7 @@ class PlanMonitor:
         """One producer measurement tick; returns at most one trigger."""
         cfg = self.cfg
         self._tick_no += 1
-        self._qps_window.append(float(measured_qps))
+        self._qps_series.observe(measured_qps)
         if measured_qps > cfg.qps_headroom * self.provenance.qps_max:
             self._over_ticks += 1
         else:
@@ -236,7 +298,7 @@ class PlanMonitor:
         if cfg.scale_out_frac > 0 and \
                 self._scale_out_ticks >= cfg.scale_out_ticks:
             return ReplanTrigger(
-                "scale-out", t, measured_qps, tuple(self._qps_window),
+                "scale-out", t, measured_qps, self._qps_win(),
                 detail=f"measured {measured_qps:.0f} qps > "
                        f"{cfg.scale_out_frac:.2f} x qps_max "
                        f"{self.provenance.qps_max:.0f} for "
@@ -244,7 +306,7 @@ class PlanMonitor:
         if self._over_ticks >= cfg.qps_sustain_ticks:
             return ReplanTrigger(
                 "qps-exceeds-range", t, measured_qps,
-                tuple(self._qps_window),
+                self._qps_win(),
                 detail=f"measured {measured_qps:.0f} qps > "
                        f"{cfg.qps_headroom:.2f} x qps_max "
                        f"{self.provenance.qps_max:.0f} for "
@@ -255,13 +317,15 @@ class PlanMonitor:
             # one trigger per loss LEVEL: re-trigger only if loss deepens
             self._loss_reported_n = self._n_alive
             return ReplanTrigger(
-                "device-loss", t, measured_qps, tuple(self._qps_window),
+                "device-loss", t, measured_qps, self._qps_win(),
                 detail=f"{self._n_alive}/{self.provenance.num_devices} "
                        f"devices alive for {self._loss_ticks} ticks")
         for m, ref in self._cert_ref.items():
-            with self._cert_lock:
-                n = self._cert_count.get(m, 0)
-                s = self._cert_sum.get(m, 0.0)
+            c, s_ctr = self._cert_pair(m)
+            base_n, base_s = self._cert_base.get(m, (0.0, 0.0))
+            with self.registry.lock:
+                n = int(c.value - base_n)
+                s = s_ctr.value - base_s
             if n < cfg.cert_min_samples:
                 continue
             obs = s / n
@@ -271,31 +335,34 @@ class PlanMonitor:
                 self._cert_reported[m] = True       # report once per drift
                 return ReplanTrigger(
                     "certainty-drift", t, measured_qps,
-                    tuple(self._qps_window),
+                    self._qps_win(),
                     detail=f"{m}: observed mean certainty {obs:.3f} vs "
                            f"profiled {ref:.3f} over {n} samples")
         if self._p95_threshold is not None:
-            with self._cert_lock:
-                n_lat = len(self._lat_window)
-                lats = tuple(self._lat_window) \
-                    if n_lat >= cfg.p95_min_samples else ()
+            lats = () if self._lat_series.n_since(self._lat_base) < \
+                cfg.p95_min_samples else self._lat_series.since(
+                    self._lat_base)
             if lats:
+                n_lat = len(lats)
                 obs_p95 = float(np.percentile(np.asarray(lats), 95))
                 if obs_p95 <= self._p95_threshold:
                     self._lat_reported = False          # recovered: re-arm
                 elif not self._lat_reported:
                     self._lat_reported = True           # report once
+                    band = (f"mean + {cfg.p95_drift_factor:.1f} x CI"
+                            if self._p95_mode == "mc" else
+                            f"scalar certified p95 + "
+                            f"{cfg.p95_abs_margin * 1e3:.0f}ms margin")
                     return ReplanTrigger(
                         "latency-drift", t, measured_qps,
-                        tuple(self._qps_window),
+                        self._qps_win(),
                         detail=f"observed p95 {obs_p95 * 1e3:.0f}ms > "
                                f"certified band "
                                f"{self._p95_threshold * 1e3:.0f}ms "
-                               f"(mean + {cfg.p95_drift_factor:.1f} x CI, "
-                               f"{n_lat} samples)")
-        if len(self._qps_window) >= cfg.tv_min_ticks and \
-                self._tick_no % cfg.tv_check_every == 0:
-            window = tuple(self._qps_window)
+                               f"({band}, {n_lat} samples)")
+        if self._qps_series.n_since(self._qps_base) >= cfg.tv_min_ticks \
+                and self._tick_no % cfg.tv_check_every == 0:
+            window = self._qps_win()
             tv = self._tv_distance(window)
             if tv > cfg.tv_threshold:
                 return ReplanTrigger(
@@ -306,7 +373,7 @@ class PlanMonitor:
         if cfg.scale_in_frac > 0 and \
                 self._scale_in_ticks >= cfg.scale_in_ticks:
             return ReplanTrigger(
-                "scale-in", t, measured_qps, tuple(self._qps_window),
+                "scale-in", t, measured_qps, self._qps_win(),
                 detail=f"measured {measured_qps:.0f} qps < "
                        f"{cfg.scale_in_frac:.2f} x qps_max "
                        f"{self.provenance.qps_max:.0f} for "

@@ -253,8 +253,10 @@ class AdmissionController:
     scheduling decision.
     """
 
-    def __init__(self, mt_plan, cfg: AdmissionConfig = AdmissionConfig()):
+    def __init__(self, mt_plan, cfg: AdmissionConfig = AdmissionConfig(),
+                 registry=None):
         self.cfg = cfg
+        self.registry = registry
         self.specs = {t.name: t for t in mt_plan.tenants}
         self.plans: Dict[str, GearPlan] = dict(mt_plan.plans)
         self.caps = fleet_capacities(mt_plan.replicas)
@@ -285,6 +287,16 @@ class AdmissionController:
         self._engaged: Dict[str, bool] = {n: False for n in self.specs}
         self.shed_counts: Dict[str, int] = {n: 0 for n in self.specs}
         self.admitted_counts: Dict[str, int] = {n: 0 for n in self.specs}
+        # optional MetricsRegistry mirror of the count dicts (pure
+        # observer: decisions never read these counters)
+        self._ctr_admit: Dict[str, object] = {}
+        self._ctr_shed: Dict[str, object] = {}
+        if registry is not None:
+            for n in self.specs:
+                self._ctr_admit[n] = registry.counter(
+                    "admitted_requests", tenant=n)
+                self._ctr_shed[n] = registry.counter(
+                    "shed_requests", tenant=n)
 
     # ------------------------------------------------------------ helpers
     def _cheapest_infeasible(self, name: str) -> bool:
@@ -402,15 +414,27 @@ class AdmissionController:
         if d is None or (d.admit_fraction >= 1.0 and not d.shed_all):
             self.admitted_counts[name] = self.admitted_counts.get(name,
                                                                   0) + 1
+            c = self._ctr_admit.get(name)
+            if c is not None:
+                c.inc()
             return True
         if d.shed_all:
             self.shed_counts[name] = self.shed_counts.get(name, 0) + 1
+            c = self._ctr_shed.get(name)
+            if c is not None:
+                c.inc()
             return False
         self._credit[name] = self._credit.get(name, 0.0) + d.admit_fraction
         if self._credit[name] >= 1.0 - 1e-9:
             self._credit[name] -= 1.0
             self.admitted_counts[name] = self.admitted_counts.get(name,
                                                                   0) + 1
+            c = self._ctr_admit.get(name)
+            if c is not None:
+                c.inc()
             return True
         self.shed_counts[name] = self.shed_counts.get(name, 0) + 1
+        c = self._ctr_shed.get(name)
+        if c is not None:
+            c.inc()
         return False

@@ -142,6 +142,11 @@ class PlanProvenance:
     # Empty when the plan was certified on the single-seed point estimate.
     mc_p95: Tuple[Tuple[float, float], ...] = ()
     mc_seeds: int = 1
+    # scalar certified per-range p95 (the single-seed DES point estimate
+    # behind each gear's latency verdict). The PlanMonitor's latency-drift
+    # check falls back to this + MonitorConfig.p95_abs_margin when the
+    # plan carries no Monte-Carlo band (mc_p95 empty).
+    range_p95: Tuple[float, ...] = ()
     frozen: bool = False                   # baselines: never hot-swap
 
     def to_dict(self) -> Dict:
@@ -153,6 +158,7 @@ class PlanProvenance:
                 "cert_means": [[m, c] for m, c in self.cert_means],
                 "mc_p95": [[m, c] for m, c in self.mc_p95],
                 "mc_seeds": self.mc_seeds,
+                "range_p95": list(self.range_p95),
                 "frozen": self.frozen}
 
     @classmethod
@@ -167,6 +173,8 @@ class PlanProvenance:
                    mc_p95=tuple((float(m), float(c))
                                 for m, c in d.get("mc_p95", [])),
                    mc_seeds=int(d.get("mc_seeds", 1)),
+                   range_p95=tuple(float(p)
+                                   for p in d.get("range_p95", [])),
                    frozen=bool(d.get("frozen", False)))
 
 

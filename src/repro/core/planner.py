@@ -294,4 +294,6 @@ def provenance_from_state(state: PlannerState) -> PlanProvenance:
             (m, float(state.profiles[m].validation.certs.mean()))
             for m in sorted(state.profiles)),
         mc_p95=tuple((float(m), float(c)) for m, c in state.mc_p95),
-        mc_seeds=state.mc_seeds)
+        mc_seeds=state.mc_seeds,
+        range_p95=tuple(float(p) for p in state.range_p95)
+        if state.range_p95 else ())

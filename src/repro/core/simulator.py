@@ -353,7 +353,8 @@ class ServingSimulator:
 
     def __init__(self, profiles: ProfileSet, replicas: Sequence[Replica],
                  num_devices: int, cfg: SimConfig = SimConfig(),
-                 backend: Optional[ExecutionBackend] = None):
+                 backend: Optional[ExecutionBackend] = None,
+                 telemetry=None):
         # explicit ValueError, not assert: validation must survive python -O
         if num_devices < 1:
             raise ValueError(f"num_devices must be >= 1, got {num_devices}")
@@ -362,6 +363,12 @@ class ServingSimulator:
         self.num_devices = num_devices
         self.cfg = cfg
         self.backend = backend or ReplayBackend(profiles)
+        # optional core.telemetry.Telemetry: a pure observer — when None
+        # (the default) every hook below is a single predicate test, and
+        # when set the hooks only append flat event tuples / set gauges,
+        # so decisions (and the golden fingerprint) are bit-identical
+        # either way
+        self.telemetry = telemetry
 
     # ------------------------------------------------------------------ API
     def run_fixed(self, gear: Gear, qps: float, horizon: float = 2.0,
@@ -492,6 +499,18 @@ class ServingSimulator:
         if horizon is None:
             horizon = (float(arrivals[-1]) if n_arr else 0.0) + 120.0
 
+        # telemetry (pure observer, same contract as _run): hot hooks are
+        # one `is not None` test + a flat tuple append; token-path extras
+        # are TTFT/TPOT histograms and per-replica KV-slot occupancy gauges
+        telem = self.telemetry
+        traw = telem.raw.append if telem is not None else None
+        if telem is not None:
+            h_ttft = telem.registry.histogram("token_ttft")
+            h_tpot = telem.registry.histogram("token_tpot")
+            g_slots = [telem.registry.gauge("kv_slots_active",
+                                            replica=str(i))
+                       for i in range(len(replicas))]
+
         # per-replica slot capacity: the gear's planned decode_slots when
         # present, else the uniform default
         slots_of = [gear.decode_slots.get(r.model, n_slots)
@@ -536,6 +555,7 @@ class ServingSimulator:
             seq += 1
 
         def enqueue(rid: int, stage: int, model: str, t: float):
+            # queue-enter is implied by the caller's admit/escalate event
             ridx = core.route(model, gear, pool.next())
             wait[ridx].push(rid, stage, t)
             poll(ridx, t)
@@ -563,6 +583,8 @@ class ServingSimulator:
                 rids, stages = q.pop(joiners)
                 if decision_trace is not None:
                     decision_trace.record_fire(ridx, rids)
+                if traw is not None:
+                    traw(("fire", t, ridx, rids))
                 pending[ridx] = list(zip(rids, stages))
                 pf = token_backend.prefill_runtime(
                     r.model, sum(plens[rid] for rid in rids))
@@ -589,10 +611,21 @@ class ServingSimulator:
                 correct[rid] = token_backend.correct(
                     replicas[ridx].model, rid)
                 resolver[rid] = stage
+                if traw is not None:
+                    traw(("close", t, rid, "completed"))
+                    ft = first_tok[rid]
+                    h_ttft.observe(ft - arrive_l[rid])
+                    ntok = tokens_out[rid]
+                    if ntok > 1:
+                        h_tpot.observe((t - ft) / (ntok - 1))
             else:
+                if traw is not None:
+                    traw(("escalate", t, rid, stage))
                 enqueue(rid, hop.next_stage, hop.next_model, t)
             for lst in (act_rid, act_stage, act_pos, act_gen, act_str):
                 lst[ridx].pop(k)
+            if telem is not None:
+                g_slots[ridx].set(len(act_rid[ridx]))
 
         def boundary(ridx: int, t: float) -> None:
             """Apply per-request boundary decisions right-to-left (pops
@@ -623,6 +656,8 @@ class ServingSimulator:
             if t_arr <= t_evt:
                 rid = arr_ptr
                 arr_ptr += 1
+                if traw is not None:
+                    traw(("admit", t_arr, rid, 0, 0, ""))
                 enqueue(rid, 0, gear.cascade.models[0], t_arr)
                 continue
             _, _, kind, ridx = heapq.heappop(heap)
@@ -643,6 +678,8 @@ class ServingSimulator:
                     act_str[ridx].append(stream)
                     total_tokens += 1
                 pending[ridx] = []
+                if telem is not None:
+                    g_slots[ridx].set(len(act_rid[ridx]))
                 boundary(ridx, t_evt)
                 release_device(replicas[ridx].device, t_evt)
             elif kind == "stepdone":
@@ -689,6 +726,18 @@ class ServingSimulator:
         if lifecycle is not None:
             lifecycle.attach(core)
         pool = RoutePool.for_arrivals(cfg.seed, n_arr)
+
+        # telemetry (pure observer): hot hooks are one `is not None` test
+        # plus a flat tuple append on the raw span log; gauges update once
+        # per measurement tick
+        telem = self.telemetry
+        traw = telem.raw.append if telem is not None else None
+        if telem is not None:
+            g_qps = telem.registry.gauge("sim_measured_qps")
+            g_gear = telem.registry.gauge("sim_cur_gear")
+            if lifecycle is not None:
+                g_epoch = telem.registry.gauge("sim_plan_epoch")
+            epoch0 = lifecycle.epoch if lifecycle is not None else 0
 
         # per-sample records (plain lists: the loop is scalar reads/writes,
         # where list indexing beats numpy's per-element boxing ~3x; converted
@@ -758,6 +807,8 @@ class ServingSimulator:
             seq += 1
 
         def enqueue(sid: int, stage: int, model: str, t: float, gear: Gear):
+            # no telemetry here: every caller's own event (admit, escalate,
+            # reissue) implies this queue-enter at the same instant
             ridx = core.route(model, gear, pool.next())
             qs[ridx].push(sid, stage, t)
             per_model_samples[model] = per_model_samples.get(model, 0) + 1
@@ -789,6 +840,10 @@ class ServingSimulator:
             sids, stages = q.pop(bsz)
             if decision_trace is not None:
                 decision_trace.record_fire(ridx, sids)
+            if traw is not None:
+                # sids is a fresh list from q.pop and never mutated — safe
+                # to share with the heap payload, no defensive copy
+                traw(("fire", t, ridx, sids))
             rt = rt_memo.get((r.model, bsz))
             if rt is None:
                 rt = backend.batch_runtime(r.model, bsz) \
@@ -830,6 +885,13 @@ class ServingSimulator:
                 nonlocal correctness_known
                 correctness_known = False
                 corr = [False] * len(sids)
+            if traw is not None:
+                # batched span events: per-sample appends into flat lists,
+                # one raw tuple per batch (keeps mid-run allocations — and
+                # the gen-0 GC pressure they cause — off the decision loop)
+                done, esc_s, esc_g = [], [], []
+            else:
+                done = esc_s = esc_g = None
             for k, (sid, stage) in enumerate(zip(sids, stages)):
                 if cur_stage[sid] != stage:
                     continue  # hedged duplicate / stale work
@@ -841,6 +903,8 @@ class ServingSimulator:
                     if st[0] == 0:
                         finish_sample(sid, stage, t,
                                       majority_vote(st[1], st[2]))
+                        if done is not None:
+                            done.append(sid)
                     continue
                 hop = core.next_hop(stage, certs[k], g)
                 if hedge_used:
@@ -850,9 +914,18 @@ class ServingSimulator:
                     hedged_to.pop(sid, None)
                 if isinstance(hop, CascadeHop):
                     cur_stage[sid] = hop.next_stage
+                    if esc_s is not None:
+                        esc_s.append(sid)
+                        esc_g.append(stage)
                     enqueue(sid, hop.next_stage, hop.next_model, t, g)
                 else:
                     finish_sample(sid, stage, t, corr[k])
+                    if done is not None:
+                        done.append(sid)
+            if esc_s:
+                traw(("escb", t, esc_s, esc_g))
+            if done:
+                traw(("closeb", t, done))
             if dev_alive[r.device]:
                 dev_idle[r.device] = True
                 for rj in reps_on_dev.get(r.device, []):
@@ -957,6 +1030,8 @@ class ServingSimulator:
                         elif alt is None:
                             cur_stage[sid] = 1 << 30
                             shed_count += 1
+                            if traw is not None:
+                                traw(("close", t, sid, "revoked"))
                         # else: primary copy dies, hedge copy carries it
                 if on_failure is not None:
                     new_gears = on_failure(t, dev)
@@ -1000,6 +1075,11 @@ class ServingSimulator:
                 break
             if t == meas_end and t < min(t_arr, t_evt):
                 measured = meas_count / cfg.measure_interval
+                if telem is not None:
+                    g_qps.set(measured)
+                    g_gear.set(cur_gear)
+                    if lifecycle is not None:
+                        g_epoch.set(lifecycle.epoch)
                 if lifecycle is not None:
                     # swap application MUST mirror CascadeServer._gear_step
                     # step for step — the hot-swap parity test pins the two
@@ -1035,6 +1115,10 @@ class ServingSimulator:
                 meas_count += 1
                 g = gears[cur_gear]
                 gear_of[sid] = g
+                # no admit event here: the whole admit stream is rebuilt
+                # off the clock after the loop from arrive_l + the
+                # switch/swap timelines (finalize folds admits first, so
+                # their raw-log position does not matter)
                 if gear_is_ensemble(g):
                     members = g.cascade.models
                     votes[sid] = [len(members), 0, len(members)]
@@ -1056,6 +1140,9 @@ class ServingSimulator:
                                         hedged_to.get(sid) is None:
                                     cur_stage[sid] = 1 << 30
                                     shed_count += 1
+                                    if traw is not None:
+                                        traw(("close", t_evt, sid,
+                                              "revoked"))
                             continue
                         # device died mid-batch: re-issue surviving work
                         alt = sibling_replica(ridx)
@@ -1064,6 +1151,8 @@ class ServingSimulator:
                                 if cur_stage[sid] == stage:
                                     refund_hedge(sid, ridx)
                                     qs[alt].push(sid, stage, t_evt)
+                                    if traw is not None:
+                                        traw(("reissue", t_evt, sid, stage))
                                     push_event(t_evt + cfg.max_wait,
                                                "timeout", (alt,))
                     else:
@@ -1082,6 +1171,8 @@ class ServingSimulator:
                                 hedge_used[sid] = hedge_used.get(sid, 0) + 1
                                 hedged_to[sid] = alt
                                 qs[alt].push(sid, stage, t_evt)
+                                if traw is not None:
+                                    traw(("hedge", t_evt, sid, stage))
                                 pushed = True
                         if pushed:
                             # immediate poll, plus the head-of-line timeout
@@ -1093,6 +1184,32 @@ class ServingSimulator:
                 elif kind == "devevent":
                     on_device_event(t_evt, *payload)
                     feed_device_count()
+
+        if traw is not None:
+            # admit stream, deferred to finalize() (off the decision
+            # clock): arrivals are sorted and switches/plan_swaps carry
+            # (t, value) in event order, so a two-pointer merge recovers
+            # the admitting gear index and plan epoch of every sample.
+            # An arrival AT a tick timestamp is processed before the
+            # tick, so a switch at time s applies only to arrivals with
+            # t_arr > s (strict compare).
+            def _emit_admits(append, arrive_l=arrive_l, n=arr_ptr,
+                             switches=switches, plan_swaps=plan_swaps,
+                             e_cur=epoch0):
+                gi = ei = 0
+                g_cur = 0
+                n_sw, n_ep = len(switches), len(plan_swaps)
+                for sid in range(n):
+                    ta = arrive_l[sid]
+                    while gi < n_sw and switches[gi][0] < ta:
+                        g_cur = switches[gi][1]
+                        gi += 1
+                    while ei < n_ep and plan_swaps[ei][0] < ta:
+                        e_cur = plan_swaps[ei][1]
+                        ei += 1
+                    append(("admit", ta, sid, g_cur, e_cur, ""))
+
+            telem.deferred.append(_emit_admits)
 
         complete_a = np.asarray(complete, np.float64)
         correct_a = np.asarray(correct, bool)

@@ -118,7 +118,7 @@ class _Lane:
         "shed", "net", "hedge_used", "hedged_to", "complete", "correct",
         "resolver", "cur_stage", "gear_of", "votes", "switches",
         "per_model_batches", "per_model_samples", "trace", "active",
-        "ck", "simple", "single_gear")
+        "ck", "simple", "single_gear", "traw")
 
     def __init__(self, n_rep: int, n_dev: int, n_arr: int, seed: int,
                  gears: List[Gear], measure_interval: float,
@@ -176,6 +176,9 @@ class _Lane:
         # (hedge/re-issue duplicates), so masked completion is exact.
         self.simple = True
         self.single_gear = len(gears) == 1
+        # telemetry raw-log append, bound on lane 0 of an observed run
+        # (None everywhere else): hot hooks are one `is not None` test
+        self.traw = None
 
 
 class LaneResult:
@@ -218,9 +221,13 @@ class VecSim:
 
     def __init__(self, profiles: ProfileSet, replicas: Sequence[Replica],
                  num_devices: int, cfg: SimConfig = SimConfig(),
-                 backend: Optional[ExecutionBackend] = None):
+                 backend: Optional[ExecutionBackend] = None,
+                 telemetry=None):
         if num_devices < 1:
             raise ValueError(f"num_devices must be >= 1, got {num_devices}")
+        # pure observer (core/telemetry.py): recorded on lane 0 only —
+        # multi-lane runs would interleave unrelated sample ids
+        self.telemetry = telemetry
         self.profiles = profiles
         self.replicas = list(replicas)
         self.num_devices = num_devices
@@ -428,6 +435,8 @@ class VecSim:
             lane = _Lane(len(self.replicas), self.num_devices, n_arr, seed,
                          gears, cfg.measure_interval, trace)
             lane.simple = simple
+            if self.telemetry is not None and not lanes:
+                lane.traw = self.telemetry.raw.append
             for ev_t, ev_d, ev_kind, ev_f in device_events:
                 heapq.heappush(lane.rare,
                                (ev_t, lane.seq, "devevent",
@@ -677,6 +686,10 @@ class VecSim:
         lane.gear_of[p:p + k] = [gear] * k
         lane.per_model_samples[m0] = \
             lane.per_model_samples.get(m0, 0) + k
+        if lane.traw is not None:
+            cg = lane.cur_gear
+            for i, ta in enumerate(ts.tolist()):
+                lane.traw(("admit", ta, p + i, cg, 0, ""))
         if lane.trace is not None:
             lane.trace.routes.extend((m0, int(r)) for r in routes)
         seq0 = lane.seq
@@ -744,6 +757,9 @@ class VecSim:
                 buf.append(sid)
             if trace is not None:
                 trace.routes.append((m0, r))
+            if lane.traw is not None:
+                lane.traw(("admit", arrive_l[sid], sid, lane.cur_gear,
+                           0, ""))
             sid += 1
         k = sid - p
         lane.arr_ptr = sid
@@ -773,6 +789,8 @@ class VecSim:
         lane.arr_ptr += 1
         lane.meas_count += 1
         lane.gear_of[sid] = gear
+        if lane.traw is not None:
+            lane.traw(("admit", t_arr, sid, lane.cur_gear, 0, ""))
         if self._gear_is_ensemble(gear):
             members = gear.cascade.models
             lane.votes[sid] = [len(members), 0, len(members)]
@@ -786,6 +804,8 @@ class VecSim:
     def _enqueue(self, lane: _Lane, core: SchedulerCore, sid: int,
                  stage: int, model: str, t: float, gear: Gear,
                  hedge) -> None:
+        # no telemetry: the caller's admit/escalate/reissue event implies
+        # this queue-enter at the same instant
         ridx = self._route_one(lane, model, gear, lane.pool.next())
         lane.qs[ridx].push(sid, stage, t)
         lane.per_model_samples[model] = \
@@ -814,6 +834,8 @@ class VecSim:
         sids, stages = q.pop(bsz)
         if lane.trace is not None:
             lane.trace.record_fire(ridx, sids)
+        if lane.traw is not None:
+            lane.traw(("fire", t, ridx, tuple(sids)))
         # dead-ring sweep (simple mode only): with devices permanently
         # alive, every trigger-fire opportunity is seized at the event that
         # creates it, so a pending timeout matters only if it can still
@@ -913,6 +935,8 @@ class VecSim:
                             self._finish(lane, sid, stage, t, cs[sid])
                         else:
                             lane.cur_stage[sid] = stage + 1
+                            if lane.traw is not None:
+                                lane.traw(("escalate", t, sid, stage))
                             self._enqueue(lane, core, sid, stage + 1,
                                           models[stage + 1], t, gear0,
                                           hedge)
@@ -959,6 +983,8 @@ class VecSim:
                         lane.trace.hops.append(
                             (stage, float(certs[k]), models[stage + 1]))
                     lane.cur_stage[sid] = stage + 1
+                    if lane.traw is not None:
+                        lane.traw(("escalate", t, sid, stage))
                     self._enqueue(lane, core, sid, stage + 1,
                                   models[stage + 1], t, g, hedge)
                 else:
@@ -1010,6 +1036,8 @@ class VecSim:
             lane.correct[r_sids] = np.asarray(corr, bool)[res]
             lane.resolver[r_sids] = stages_np[res]
             lane.cur_stage[r_sids] = 1 << 30
+            if lane.traw is not None:
+                lane.traw(("closeb", t, r_sids.tolist()))
 
         fwd_idx = np.flatnonzero(fwd)
         if len(fwd_idx):
@@ -1035,6 +1063,8 @@ class VecSim:
                 lane.correct[r_sids] = tab[2][r_sids]
                 lane.resolver[r_sids] = stage0
                 lane.cur_stage[r_sids] = 1 << 30
+                if lane.traw is not None:
+                    lane.traw(("closeb", t, r_sids.tolist()))
             f_sids = sids_np[~res]
             if len(f_sids):
                 self._forward_block(lane, core, gear, gear.cascade.models,
@@ -1048,6 +1078,8 @@ class VecSim:
             lane.correct[r_sids] = tab[2][r_sids]
             lane.resolver[r_sids] = stages_np[res]
             lane.cur_stage[r_sids] = 1 << 30
+            if lane.traw is not None:
+                lane.traw(("closeb", t, r_sids.tolist()))
         fwd_idx = np.flatnonzero(~res)
         if len(fwd_idx):
             self._forward(lane, core, gear, gear.cascade.models, sids_np,
@@ -1072,6 +1104,8 @@ class VecSim:
                 sid = int(sids_np[k])
                 st = int(stages_np[k])
                 lane.cur_stage[sid] = st + 1
+                if lane.traw is not None:
+                    lane.traw(("escalate", t, sid, st))
                 self._enqueue(lane, core, sid, st + 1, models[st + 1], t,
                               gear, hedge)
             return
@@ -1086,6 +1120,9 @@ class VecSim:
         st1 = stage + 1
         nxt = models[st1]
         lane.cur_stage[f_sids] = st1
+        if lane.traw is not None:
+            for s in f_sids.tolist():
+                lane.traw(("escalate", t, s, stage))
         trig = gear.min_queue_lens.get(nxt, 1)
         reps_n = self.reps_of.get(nxt, [])
         rep_dev = self._rep_dev
@@ -1159,6 +1196,8 @@ class VecSim:
         lane.correct[sid] = bool(is_correct)
         lane.resolver[sid] = stage
         lane.cur_stage[sid] = 1 << 30
+        if lane.traw is not None:
+            lane.traw(("close", t, sid, "completed"))
 
     # ------------------------------------------------------------ rare paths
     def _sibling(self, lane: _Lane, ridx: int) -> Optional[int]:
@@ -1196,6 +1235,8 @@ class VecSim:
                         lane.hedged_to.get(sid) is None:
                     lane.cur_stage[sid] = 1 << 30
                     lane.shed += 1
+                    if lane.traw is not None:
+                        lane.traw(("close", t, sid, "revoked"))
             return
         alt = self._sibling(lane, ridx)
         if alt is None:
@@ -1205,6 +1246,8 @@ class VecSim:
             if lane.cur_stage[sid] == stage:
                 self._refund_hedge(lane, sid, ridx)
                 lane.qs[alt].push(sid, stage, t)
+                if lane.traw is not None:
+                    lane.traw(("reissue", t, sid, stage))
                 self._ring_append(lane, alt, t + mw)
 
     def _on_hedge(self, lane: _Lane, payload, t: float, hedge) -> None:
@@ -1220,6 +1263,8 @@ class VecSim:
                 lane.hedge_used[sid] = lane.hedge_used.get(sid, 0) + 1
                 lane.hedged_to[sid] = alt
                 lane.qs[alt].push(sid, stage, t)
+                if lane.traw is not None:
+                    lane.traw(("hedge", t, sid, stage))
                 pushed = True
         if pushed:
             # immediate poll goes to the overflow heap: its time equals the
@@ -1305,6 +1350,8 @@ class VecSim:
                     elif alt is None:
                         lane.cur_stage[sid] = 1 << 30
                         lane.shed += 1
+                        if lane.traw is not None:
+                            lane.traw(("close", t, sid, "revoked"))
                     # else: primary dies, hedge copy carries the sample
             if on_failure is not None:
                 new_gears = on_failure(t, dev)
@@ -1334,6 +1381,10 @@ class VecSim:
     def _measure_tick(self, lane: _Lane, core: SchedulerCore,
                       t: float) -> None:
         measured = lane.meas_count / self.cfg.measure_interval
+        if lane.traw is not None:
+            reg = self.telemetry.registry
+            reg.gauge("sim_measured_qps").set(measured)
+            reg.gauge("sim_cur_gear").set(lane.cur_gear)
         first_q = 0
         g = lane.gears[lane.cur_gear]
         m0 = g.cascade.models[0]

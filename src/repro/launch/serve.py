@@ -25,7 +25,31 @@ from repro.core import (CostModelBackend, EngineBackend, HardwareSpec,
                         ReplayBackend, SLO, ServingSimulator,
                         optimize_gear_plan, profile_backend)
 from repro.core.profiles import ProfileSet
+from repro.core.telemetry import Telemetry
 from repro.core.traces import azure_like_trace, diurnal_like_trace
+
+
+def dump_metrics(telem: Telemetry, path: str) -> None:
+    """Write the run's telemetry next to ``path``: metrics JSONL at
+    ``path``, a Prometheus-style text dump at ``path + '.prom'``, and the
+    latency-attribution report at ``path + '.attr.json'``."""
+    import json
+    telem.finalize()
+    with open(path, "w") as f:
+        f.write(telem.registry.export_jsonl())
+    with open(path + ".prom", "w") as f:
+        f.write(telem.registry.prometheus_text())
+    with open(path + ".attr.json", "w") as f:
+        json.dump(telem.attribution(window_s=10.0), f, sort_keys=True,
+                  indent=1)
+    cons = telem.conservation()
+    print(f"\nmetrics written to {path} (+.prom, +.attr.json): "
+          f"spans opened={cons['opened']} completed={cons['completed']} "
+          f"shed={cons['shed']} revoked={cons['revoked']} "
+          f"open={cons['open']}")
+    attr = telem.attribution()
+    if attr["total"]["count"]:
+        print(Telemetry.render_attribution(attr))
 
 
 def parse_slo(text: str) -> SLO:
@@ -53,7 +77,7 @@ def parse_tenants(text: str):
     return out
 
 
-def serve_multitenant(args, profiles, hw, trace_fn) -> None:
+def serve_multitenant(args, profiles, hw, trace_fn, telem=None) -> None:
     """Multi-tenant mode (DESIGN.md §11): joint plan, per-tenant ladders,
     superposed traces with admission control — on the DES by default, on
     the threaded ``MultiTenantServer`` under ``--stress-replay``."""
@@ -72,14 +96,16 @@ def serve_multitenant(args, profiles, hw, trace_fn) -> None:
                                   peak_qps=spec.qps_max)
               for spec in tenants}
     admission = AdmissionController(
-        mt, AdmissionConfig(utilization_cap=0.75))
+        mt, AdmissionConfig(utilization_cap=0.75),
+        registry=telem.registry if telem is not None else None)
     if args.stress_replay:
         from repro.serving.runtime import MultiTenantServer, Request
         replay = ReplayBackend(profiles, sleep=True)
         reqs = {n: [Request(rid=i, tokens=np.zeros(1, np.int32), tenant=n)
                     for i in range(int(traces[n].sum()) + 8)]
                 for n in mt.names}
-        server = MultiTenantServer(mt, backend=replay, admission=admission)
+        server = MultiTenantServer(mt, backend=replay, admission=admission,
+                                   telemetry=telem)
         done = server.run_trace(reqs, traces)
         print("\nREPLAY stress (wall clock, shared fleet):")
         for n in mt.names:
@@ -89,10 +115,12 @@ def serve_multitenant(args, profiles, hw, trace_fn) -> None:
             print(f"  {n}: {len(done[n])} done shed={server.shed_counts[n]} "
                   f"p95={p95:.1f}ms "
                   f"switches={len(server.gear_switches[n])}")
+        if telem is not None:
+            dump_metrics(telem, args.metrics_out)
         return
     sim_backend = ReplayBackend(profiles)
     sim = ServingSimulator(profiles, mt.replicas, hw.num_devices,
-                           backend=sim_backend)
+                           backend=sim_backend, telemetry=telem)
     results = sim.run_multi_tenant(mt, traces, admission=admission)
     print("\nsimulated (shared fleet):")
     for spec in tenants:
@@ -101,6 +129,8 @@ def serve_multitenant(args, profiles, hw, trace_fn) -> None:
               f"shed={r.shed} ({100 * r.shed_rate:.1f}%) "
               f"p95={r.p95 * 1e3:.0f}ms acc={r.accuracy:.4f} "
               f"switches={len(r.result.gear_switches)}")
+    if telem is not None:
+        dump_metrics(telem, args.metrics_out)
 
 
 def tiny_backend(artifact: str) -> EngineBackend:
@@ -151,6 +181,9 @@ def main() -> None:
     ap.add_argument("--artifact",
                     default="benchmarks/artifacts/tiny_family.npz")
     ap.add_argument("--plan-out", default="")
+    ap.add_argument("--metrics-out", default="",
+                    help="write metrics JSONL here (plus .prom Prometheus "
+                         "dump and .attr.json latency attribution)")
     ap.add_argument("--tenants", default="",
                     help="multi-tenant mode (DESIGN.md §11): comma-"
                          "separated name:slokind:value:qps_max[:weight]")
@@ -174,10 +207,12 @@ def main() -> None:
     hw = HardwareSpec(num_devices=args.devices,
                       mem_per_device=args.mem_per_device)
 
+    telem = Telemetry() if args.metrics_out else None
+
     if args.tenants:
         trace_fn = diurnal_like_trace if args.trace == "diurnal" \
             else azure_like_trace
-        serve_multitenant(args, profiles, hw, trace_fn)
+        serve_multitenant(args, profiles, hw, trace_fn, telem=telem)
         return
 
     report = optimize_gear_plan(profiles, hw, slo, qps_max=qps_max,
@@ -211,13 +246,15 @@ def main() -> None:
         n_req = int(trace.sum()) + 8
         reqs = [Request(rid=i, tokens=np.zeros(1, np.int32))
                 for i in range(n_req)]
-        server = CascadeServer(plan, backend=replay)
+        server = CascadeServer(plan, backend=replay, telemetry=telem)
         done = server.run_trace(reqs, trace)
         lats = np.array([r.latency for r in done])
         print(f"\nREPLAY stress (wall clock): {len(done)}/{n_req} done "
               f"p50={np.quantile(lats, .5) * 1e3:.1f}ms "
               f"p95={np.quantile(lats, .95) * 1e3:.1f}ms "
               f"switches={len(server.gear_switches)}")
+        if telem is not None:
+            dump_metrics(telem, args.metrics_out)
     elif args.real and args.workload == "tiny":
         from repro.serving.runtime import CascadeServer, Request
         from repro.serving.tinymodels import synthetic_classification_data
@@ -226,7 +263,7 @@ def main() -> None:
         n_req = int(trace.sum()) + 8
         toks, labels, _ = synthetic_classification_data(n_req, seed=7)
         reqs = [Request(rid=i, tokens=toks[i]) for i in range(n_req)]
-        server = CascadeServer(plan, backend=backend)
+        server = CascadeServer(plan, backend=backend, telemetry=telem)
         done = server.run_trace(reqs, trace)
         lats = np.array([r.latency for r in done])
         acc = np.mean([int(r.pred == labels[r.rid]) for r in done])
@@ -234,6 +271,8 @@ def main() -> None:
               f"p50={np.quantile(lats, .5) * 1e3:.1f}ms "
               f"p95={np.quantile(lats, .95) * 1e3:.1f}ms acc={acc:.4f} "
               f"switches={len(server.gear_switches)}")
+        if telem is not None:
+            dump_metrics(telem, args.metrics_out)
     else:
         # replay physics for the DES: the cost-model backend already IS a
         # replay backend over its analytic profiles; engine-measured
@@ -241,13 +280,15 @@ def main() -> None:
         sim_backend = backend if isinstance(backend, ReplayBackend) \
             else ReplayBackend(profiles)
         sim = ServingSimulator(profiles, plan.replicas, hw.num_devices,
-                               backend=sim_backend)
+                               backend=sim_backend, telemetry=telem)
         res = sim.run_trace(plan, trace)
         print(f"\nsimulated ({sim.backend.name} backend): "
               f"{res.completed}/{res.offered} done "
               f"p95={res.p95 * 1e3:.0f}ms acc={res.accuracy:.4f} "
               f"util={res.utilization:.2f} "
               f"switches={len(res.gear_switches)}")
+        if telem is not None:
+            dump_metrics(telem, args.metrics_out)
 
 
 if __name__ == "__main__":

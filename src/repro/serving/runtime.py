@@ -137,7 +137,8 @@ class CascadeServer:
                  route_pool: Optional[RoutePool] = None,
                  decision_trace: Optional[DecisionTrace] = None,
                  seed: int = 0, lifecycle=None,
-                 backend: Optional[ExecutionBackend] = None):
+                 backend: Optional[ExecutionBackend] = None,
+                 telemetry=None):
         # (active plan, current gear index, plan epoch) as ONE tuple: a
         # hot-swap (or a gear switch) replaces the reference in a single
         # assignment, so a concurrent submit/_poll_replica thread always
@@ -163,6 +164,11 @@ class CascadeServer:
             lifecycle.attach(self.core)
         self.plan_swaps: List[Tuple[float, int, str]] = []
         self.route_pool = route_pool or RoutePool(seed)
+        # pure observer (core/telemetry.py): hot hooks are one `is not
+        # None` test plus a flat tuple append; list.append is atomic
+        # under the GIL, so the threaded drivers share the log lock-free
+        self.telemetry = telemetry
+        self._traw = telemetry.raw.append if telemetry is not None else None
 
         self.queues: List[_ReplicaQueue] = [
             _ReplicaQueue() for _ in plan.replicas]
@@ -201,6 +207,8 @@ class CascadeServer:
         req.gear = gear
         req.plan_epoch = epoch
         req.stage = 0
+        if self._traw is not None:
+            self._traw(("admit", t, req.rid, cur, epoch, req.tenant))
         ridx = self.core.route(gear.cascade.models[0], gear,
                                self.route_pool.next())
         self.queues[ridx].push(req, t)
@@ -254,6 +262,9 @@ class CascadeServer:
             return None
         if self.core.trace is not None:
             self.core.trace.record_fire(ridx, [r.rid for r, _ in batch])
+        if self._traw is not None:
+            self._traw(("fire", now, ridx,
+                        tuple(r.rid for r, _ in batch)))
         return batch
 
     def _run_batch(self, model: str, batch: List,
@@ -280,6 +291,8 @@ class CascadeServer:
                 else self.plan.gears[req.gear_idx]
             hop = self.core.next_hop(req.stage, float(certs[i]), gear)
             if isinstance(hop, CascadeHop):
+                if self._traw is not None:
+                    self._traw(("escalate", t, req.rid, req.stage))
                 req.stage = hop.next_stage
                 ridx = self.core.route(hop.next_model, gear,
                                        self.route_pool.next())
@@ -291,6 +304,8 @@ class CascadeServer:
                 req.pred = int(preds[i]) if preds is not None else -1
                 req.cert = float(certs[i])
                 req.resolver = hop.stage
+                if self._traw is not None:
+                    self._traw(("close", t, req.rid, "completed"))
                 with self._done_lock:
                     self.completed.append(req)
 
@@ -503,7 +518,11 @@ class CascadeServer:
                 dev_draining[dev] = False
                 dev_epoch[dev] += 1
                 for rj in reps_on_dev.get(dev, []):
-                    self.queues[rj].pop_batch(len(self.queues[rj]))
+                    dropped = self.queues[rj].pop_batch(
+                        len(self.queues[rj]))
+                    if self._traw is not None:
+                        for req, _ in dropped:
+                            self._traw(("close", t, req.rid, "revoked"))
             else:  # fail
                 dev_alive[dev] = False
                 dev_idle[dev] = False
@@ -544,6 +563,10 @@ class CascadeServer:
                         if epoch in revoked.get(dev, ()):
                             # the batch died WITH the revoked spot machine:
                             # its requests are shed, never resolved
+                            if self._traw is not None:
+                                for req, _ in batch:
+                                    self._traw(("close", t_evt, req.rid,
+                                                "revoked"))
                             continue
                         # device died mid-batch: re-issue the in-flight
                         # work on a sibling (the request objects were never
@@ -552,6 +575,9 @@ class CascadeServer:
                         if alt is not None:
                             for req, _ in batch:
                                 self.queues[alt].push(req, t_evt)
+                                if self._traw is not None:
+                                    self._traw(("reissue", t_evt, req.rid,
+                                                req.stage))
                                 push_event(t_evt + max_wait, "timeout",
                                            (alt,))
                         continue
@@ -602,7 +628,8 @@ class MultiTenantServer:
                  decision_traces: Optional[Dict[str, DecisionTrace]] = None,
                  fleet_trace: Optional[DecisionTrace] = None,
                  backend: Optional[ExecutionBackend] = None,
-                 route_pools: Optional[Dict[str, RoutePool]] = None):
+                 route_pools: Optional[Dict[str, RoutePool]] = None,
+                 telemetry=None):
         self.mt_plan = mt_plan
         self.names: List[str] = list(mt_plan.names)
         self._tidx = {n: i for i, n in enumerate(self.names)}
@@ -614,6 +641,10 @@ class MultiTenantServer:
             alpha=alpha, max_batch=max_batch, seed=seed)
         self.admission = admission
         self.fleet_trace = fleet_trace
+        # pure observer: span ids are (tenant, rid) pairs — per-tenant
+        # request ids may collide across tenants
+        self.telemetry = telemetry
+        self._traw = telemetry.raw.append if telemetry is not None else None
         # per-tenant: (plan, cur gear, epoch) swapped atomically, core,
         # keyed route pool, lifecycle
         self._active: List[Tuple] = []
@@ -666,6 +697,13 @@ class MultiTenantServer:
                 not self.admission.admit(req.tenant):
             with self._done_lock:
                 self.shed_counts[req.tenant] += 1
+            if self._traw is not None:
+                # a shed request still opens (and immediately closes) a
+                # span — conservation counts it on the offered side
+                self._traw(("admit", t, (req.tenant, req.rid),
+                            self._active[ti][1], self._active[ti][2],
+                            req.tenant))
+                self._traw(("close", t, (req.tenant, req.rid), "shed"))
             return -1
         plan, cur, epoch = self._active[ti]
         req.gear_idx = cur
@@ -673,6 +711,9 @@ class MultiTenantServer:
         req.gear = gear
         req.plan_epoch = epoch
         req.stage = 0
+        if self._traw is not None:
+            self._traw(("admit", t, (req.tenant, req.rid), cur, epoch,
+                        req.tenant))
         ridx = self.cores[ti].route(gear.cascade.models[0], gear,
                                     self.pools[ti].next())
         self.queues[ridx].push_tenant(req, t, ti)
@@ -747,6 +788,9 @@ class MultiTenantServer:
             return None
         if self.fleet_trace is not None:
             self.fleet_trace.record_fire(ridx, [r.rid for r, _ in batch])
+        if self._traw is not None:
+            self._traw(("fire", now, ridx,
+                        tuple((r.tenant, r.rid) for r, _ in batch)))
         return batch
 
     def _run_batch(self, model: str, batch: List,
@@ -763,6 +807,9 @@ class MultiTenantServer:
             gear = req.gear
             hop = self.cores[ti].next_hop(req.stage, float(certs[i]), gear)
             if isinstance(hop, CascadeHop):
+                if self._traw is not None:
+                    self._traw(("escalate", t, (req.tenant, req.rid),
+                                req.stage))
                 req.stage = hop.next_stage
                 ridx = self.cores[ti].route(hop.next_model, gear,
                                             self.pools[ti].next())
@@ -774,6 +821,9 @@ class MultiTenantServer:
                 req.pred = int(preds[i]) if preds is not None else -1
                 req.cert = float(certs[i])
                 req.resolver = hop.stage
+                if self._traw is not None:
+                    self._traw(("close", t, (req.tenant, req.rid),
+                                "completed"))
                 with self._done_lock:
                     self.completed[req.tenant].append(req)
 

@@ -477,7 +477,7 @@ class TokenEngine:
                  min_tokens: int = 4, early_margin: float = 0.5,
                  stream_mode: str = "ewma", beta: float = 0.35,
                  mode: str = "fused", spec_k: int = 1,
-                 k_guard_slack: float = 1.5):
+                 k_guard_slack: float = 1.5, telemetry=None):
         if not stages:
             raise ValueError("TokenEngine needs at least one SlotEngine")
         if tuple(e.name for e in stages) != tuple(gear.cascade.models):
@@ -502,6 +502,11 @@ class TokenEngine:
         self.spec_k = spec_k
         self.k_guard_slack = k_guard_slack
         self.spec_discarded = 0       # speculative tokens thrown away
+        # pure observer (core/telemetry.py): span times are LOGICAL step
+        # numbers (this engine has no clock); occupancy gauges and the
+        # spec-discard counter live in the shared registry
+        self.telemetry = telemetry
+        self._traw = telemetry.raw.append if telemetry is not None else None
 
     # ------------------------------------------------------------- serve
 
@@ -516,6 +521,8 @@ class TokenEngine:
             res = TokenResult(rid=r.rid)
             results[r.rid] = res
             waiting[0].append((r, res))
+            if self._traw is not None:
+                self._traw(("admit", 0.0, r.rid, 0, 0, ""))
 
         step = 0
         while any(waiting) or any(act):
@@ -539,6 +546,9 @@ class TokenEngine:
         if not k:
             return
         pairs = [waiting[si].popleft() for _ in range(k)]
+        if self._traw is not None:
+            self._traw(("fire", float(step), si,
+                        tuple(req.rid for req, _ in pairs)))
         if self.mode == "reference":
             joined = []
             for req, res in pairs:
@@ -560,6 +570,9 @@ class TokenEngine:
             if res.first_token_step < 0:
                 res.first_token_step = step
             act[si].append(_Active(req, slot, tok, cert, res))
+        if self.telemetry is not None:
+            self.telemetry.registry.gauge(
+                "kv_slots_active", model=eng.name).set(eng.n_active)
 
     # ----------------------------------------------------- decode phase
 
@@ -577,9 +590,23 @@ class TokenEngine:
             # DES): the user-visible stream restarts
             a.res.first_token_step = -1
             waiting[hop.next_stage].append((a.req, a.res))
+            if self._traw is not None:
+                self._traw(("escalate", float(step), a.req.rid, si))
         else:
             a.res.resolver = si
             a.res.done_step = step
+            if self._traw is not None:
+                self._traw(("close", float(step), a.req.rid, "completed"))
+                reg = self.telemetry.registry
+                reg.histogram("engine_ttft_steps").observe(
+                    float(a.res.first_token_step + 1))
+                ntok = len(a.res.tokens)
+                if ntok > 1:
+                    reg.histogram("engine_tpot_steps").observe(
+                        (step - a.res.first_token_step) / (ntok - 1))
+        if self.telemetry is not None:
+            self.telemetry.registry.gauge(
+                "kv_slots_active", model=eng.name).set(eng.n_active)
 
     def _step_reference(self, si: int, eng: SlotEngine, waiting, act,
                         step: int) -> None:
@@ -646,6 +673,9 @@ class TokenEngine:
             if hop is not None:
                 leaves.append((used, order, a, hop))
                 self.spec_discarded += k - used
+                if self.telemetry is not None and k > used:
+                    self.telemetry.registry.counter(
+                        "spec_discarded_tokens").inc(k - used)
         # apply leaves in (token count, row) order — the order a
         # single-step loop would have produced them in
         leaves.sort(key=lambda e: (e[0], e[1]))

@@ -1,0 +1,393 @@
+"""Unified telemetry layer (core/telemetry.py, DESIGN.md §16): histogram
+determinism + quantile readback, registry exporters, span-close
+accounting under hedges and drain->revoke, cross-driver byte-identical
+exports, attribution reconciliation, and the PlanMonitor p95 fallback."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.adaption import MonitorConfig, PlanMonitor
+from repro.core.cascade import Cascade
+from repro.core.execution import ReplayBackend, TokenReplayBackend
+from repro.core.gears import Gear, GearPlan, PlanProvenance, SLO
+from repro.core.lp import Replica
+from repro.core.profiles import synthetic_family, synthetic_token_family
+from repro.core.simulator import (ServingSimulator, SimConfig, make_gear,
+                                  trace_to_arrivals)
+from repro.core.telemetry import (Log2Histogram, MetricsRegistry, Span,
+                                  SpanAccountingError, Telemetry)
+from repro.core.vecsim import VecSim
+from repro.distributed.fault_tolerance import HedgePolicy
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# Log2Histogram
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.floats(min_value=1e-6, max_value=1e4),
+                min_size=1, max_size=200),
+       st.floats(min_value=0.0, max_value=1.0))
+def test_histogram_quantile_within_one_bucket(values, q):
+    """quantile() (nearest-rank-up, bucket upper edge) brackets
+    ``np.percentile(..., method='higher')`` from above, within one
+    relative bucket width (1/subs of the value)."""
+    h = Log2Histogram(subs=8)
+    for v in values:
+        h.observe(v)
+    exact = float(np.percentile(values, 100.0 * q, method="higher"))
+    got = h.quantile(q)
+    assert exact <= got <= exact * (1.0 + 1.0 / h.subs) + 1e-12
+
+
+def test_histogram_zero_negative_bucket_and_mean():
+    h = Log2Histogram()
+    for v in (-1.0, 0.0, 2.0, 4.0):
+        h.observe(v)
+    assert h.zero_neg == 2
+    assert h.n == 4
+    assert h.mean == pytest.approx((-1.0 + 0.0 + 2.0 + 4.0) / 4)
+    assert h.quantile(0.0) == 0.0            # <=0 observations sort first
+
+
+def test_histogram_snapshot_deterministic():
+    rng = np.random.default_rng(11)
+    vals = rng.lognormal(-3.0, 1.0, size=500)
+    a, b = Log2Histogram(), Log2Histogram()
+    for v in vals:
+        a.observe(float(v))
+        b.observe(float(v))
+    assert a.snapshot() == b.snapshot()
+
+
+# ---------------------------------------------------------------------------
+# MetricsRegistry
+# ---------------------------------------------------------------------------
+
+def _feed(reg: MetricsRegistry):
+    reg.counter("reqs", tenant="a").inc(3)
+    reg.gauge("qps").set(123.5)
+    h = reg.histogram("lat", gear="0")
+    for v in (0.01, 0.02, 0.04, 0.08):
+        h.observe(v)
+    s = reg.series("win", maxlen=8)
+    for v in (1.0, 2.0, 3.0):
+        s.observe(v)
+
+
+def test_registry_exports_byte_identical():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    _feed(a)
+    _feed(b)
+    assert a.export_jsonl() == b.export_jsonl()
+    assert a.prometheus_text() == b.prometheus_text()
+    # exporters carry every metric type
+    text = a.prometheus_text()
+    assert '# TYPE reqs counter' in text
+    assert 'lat_bucket{gear="0",le="+Inf"} 4' in text
+    assert 'win_count 3' in text
+
+
+def test_registry_type_conflict_raises():
+    reg = MetricsRegistry()
+    reg.counter("m")
+    with pytest.raises(TypeError):
+        reg.gauge("m")
+
+
+# ---------------------------------------------------------------------------
+# Span accounting (cold-path API)
+# ---------------------------------------------------------------------------
+
+def test_span_double_close_raises():
+    t = Telemetry()
+    t.admit(0.0, 7)
+    t.close(1.0, 7, "completed")
+    t.close(2.0, 7, "shed")
+    with pytest.raises(SpanAccountingError, match="closed twice"):
+        t.finalize()
+
+
+def test_close_without_admit_raises():
+    t = Telemetry()
+    t.close(1.0, 3, "completed")
+    with pytest.raises(SpanAccountingError, match="never admitted"):
+        t.finalize()
+    t2 = Telemetry()
+    t2.raw.append(("closeb", 1.0, [4]))
+    with pytest.raises(SpanAccountingError, match="never admitted"):
+        t2.finalize()
+
+
+def test_unknown_close_state_raises():
+    t = Telemetry()
+    t.admit(0.0, 1)
+    t.close(1.0, 1, "vanished")
+    with pytest.raises(SpanAccountingError, match="unknown close state"):
+        t.finalize()
+
+
+def test_post_close_events_dropped():
+    """A hedge duplicate completing after the primary resolved must not
+    extend the span past t_close (the telescoping sum would break)."""
+    t = Telemetry()
+    t.admit(0.0, 1)
+    t.raw.append(("fire", 0.5, 0, [1]))
+    t.close(1.0, 1, "completed")
+    t.raw.append(("fire", 1.5, 0, [1]))      # straggler duplicate
+    t.finalize()
+    sp = t.spans[1]
+    assert all(ev[1] <= sp.t_close for ev in sp.events)
+    assert sum(sp.components().values()) == pytest.approx(sp.latency)
+
+
+def test_escb_folds_like_per_sid_escalates():
+    """The batched escalation event is pure hot-path economy: it must
+    fold to the same spans as per-sid escalate events."""
+    a, b = Telemetry(), Telemetry()
+    for t in (a, b):
+        t.admit(0.0, 1)
+        t.admit(0.0, 2)
+    a.raw.append(("escb", 0.5, [1, 2], [0, 0]))
+    b.event("escalate", 0.5, 1, 0)
+    b.event("escalate", 0.5, 2, 0)
+    for t in (a, b):
+        t.close(1.0, 1, "completed")
+        t.close(1.0, 2, "completed")
+        t.finalize()
+    assert {k: v.to_dict() for k, v in a.spans.items()} == \
+        {k: v.to_dict() for k, v in b.spans.items()}
+
+
+def test_same_instant_fire_sorts_after_queue_enter():
+    """Canonical event order: a queue-class event and a fire at the same
+    timestamp fold causally (queue before fire) regardless of raw-log
+    order, so attribution labels the following interval as execute."""
+    spans = []
+    for order in (("escalate", "fire"), ("fire", "escalate")):
+        t = Telemetry()
+        t.admit(0.0, 1)
+        t.raw.append(("fire", 0.2, 0, [1]))
+        for kind in order:
+            if kind == "fire":
+                t.raw.append(("fire", 0.5, 1, [1]))
+            else:
+                t.event("escalate", 0.5, 1, 0)
+        t.close(1.0, 1, "completed")
+        t.finalize()
+        spans.append(t.spans[1].to_dict())
+    assert spans[0] == spans[1]
+    sp = Span(1, 0.0, 0, 0, "")
+    sp.events = [("escalate", 0.5, 0), ("fire", 0.5, 0)]
+    sp.state, sp.t_close = "completed", 1.0
+    assert sp.components()["execute"] == pytest.approx(0.5)
+
+
+def test_tenant_labels_flow_to_attribution():
+    t = Telemetry()
+    for i, tenant in enumerate(("interactive", "batch", "interactive")):
+        t.admit(float(i), i, gear=0, tenant=tenant)
+        t.close(float(i) + 0.5, i, "completed")
+    attr = t.attribution()
+    assert set(attr["by_tenant"]) == {"interactive", "batch"}
+    assert attr["by_tenant"]["interactive"]["count"] == 2
+    table = Telemetry.render_attribution(attr)
+    assert "tenant=interactive" in table and "TOTAL" in table
+
+
+# ---------------------------------------------------------------------------
+# Cross-driver identity + conservation (scalar DES vs VecSim lanes)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def telem_world():
+    profiles = synthetic_family(
+        ["tiny", "mini", "base"], base_runtime=2e-4, runtime_ratio=2.4,
+        base_acc=0.70, acc_gain=0.06, mem_base=0.4e9, seed=3)
+    reps = [Replica(m, d, profiles[m].runtime_per_sample(1.0))
+            for d in range(2) for m in profiles]
+    g0 = make_gear(Cascade(("tiny", "base"), (0.35,)), reps, {"tiny": 4})
+    g1 = make_gear(Cascade(("tiny", "mini"), (0.2,)), reps, {"tiny": 8})
+    plan = GearPlan(qps_max=1200.0, gears=[g0, g1], replicas=reps,
+                    num_devices=2, slo=SLO(kind="latency", latency_p95=1.0))
+    trace = np.concatenate([np.full(6, 300.0), np.full(6, 900.0),
+                            np.full(6, 300.0)])
+    return profiles, reps, plan, trace
+
+
+SCENARIOS = {
+    "plain": {},
+    "spot_hedge": dict(
+        device_events=[(4.0, 1, "slow", 8.0), (8.0, 1, "recover", 1.0),
+                       (10.0, 0, "drain", 0.5), (10.5, 0, "revoke", 0.0)],
+        hedge=HedgePolicy(hedge_multiplier=2.0)),
+}
+
+
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_cross_driver_telemetry_bitmatch(telem_world, scenario):
+    """Same trace through the scalar DES and the lane-batched VecSim:
+    identical latencies (pure observer), byte-identical JSONL exports,
+    identical folded spans, exact conservation against the SimResult,
+    and attribution groups that reconcile to ~1e-14."""
+    profiles, reps, plan, trace = telem_world
+    kw = SCENARIOS[scenario]
+    cfg = SimConfig(max_batch=64)
+    backend = ReplayBackend(profiles)
+
+    ts = Telemetry()
+    sim = ServingSimulator(profiles, reps, 2, cfg, backend=backend,
+                           telemetry=ts)
+    rs = sim.run_trace(plan, trace, **kw)
+    ts.finalize()
+
+    tv = Telemetry()
+    vec = VecSim(profiles, reps, 2, cfg, backend=backend, telemetry=tv)
+    rv = vec.run_trace(plan, trace, **kw)
+    tv.finalize()
+
+    # telemetry is a pure observer: not one decision moved
+    np.testing.assert_array_equal(rs.latencies, rv.latencies)
+    # byte-identical registry export and identical folded spans
+    assert ts.registry.export_jsonl() == tv.registry.export_jsonl()
+    assert {k: v.to_dict() for k, v in ts.spans.items()} == \
+        {k: v.to_dict() for k, v in tv.spans.items()}
+    # conservation: spans_closed == completed + shed, remainder open
+    cons = ts.conservation()
+    assert cons["opened"] == rs.offered
+    assert cons["completed"] == rs.completed
+    assert cons["revoked"] + cons["shed"] == rs.shed
+    assert cons["open"] == rs.backlog_end
+    if scenario == "spot_hedge":
+        assert cons["revoked"] > 0           # the drain->revoke fired
+    # telescoping attribution reconciles per group
+    attr = ts.attribution(window_s=5.0)
+    groups = [attr["total"]] + list(attr["by_gear"].values()) + \
+        list(attr["by_tenant"].values()) + list(attr["by_window"].values())
+    for g in groups:
+        if g["count"]:
+            assert sum(g["components"].values()) == \
+                pytest.approx(g["end_to_end"], rel=1e-9)
+
+
+def test_fixed_run_span_exports_deterministic(telem_world):
+    """Two identical scalar runs produce byte-identical span JSONL and
+    registry JSONL (no wall clock, no RNG in the telemetry layer)."""
+    profiles, reps, plan, trace = telem_world
+    outs = []
+    for _ in range(2):
+        t = Telemetry()
+        sim = ServingSimulator(profiles, reps, 2, SimConfig(max_batch=64),
+                               backend=ReplayBackend(profiles), telemetry=t)
+        sim.run_fixed(plan.gears[0], qps=400.0, horizon=1.0)
+        t.finalize()
+        outs.append((t.registry.export_jsonl(),
+                     t.export_spans_jsonl(limit=50)))
+    assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# Threaded-runtime (virtual clock) spans
+# ---------------------------------------------------------------------------
+
+def test_runtime_virtual_span_conservation(telem_world):
+    from repro.serving.runtime import CascadeServer, Request
+    profiles, reps, plan, trace = telem_world
+    telem = Telemetry()
+    server = CascadeServer(plan, backend=ReplayBackend(profiles),
+                           max_batch=64, telemetry=telem)
+    n = len(trace_to_arrivals(trace))
+    reqs = [Request(rid=i, tokens=np.array([i], np.int64))
+            for i in range(n)]
+    done = server.run_virtual(
+        reqs, trace, batch_runtime=lambda m, b: profiles[m].runtime(b))
+    telem.finalize()
+    cons = telem.conservation()
+    assert cons["opened"] == n
+    assert cons["completed"] == len(done)
+    assert cons["open"] == n - len(done) - cons["revoked"] - cons["shed"]
+    # spans carry the gear tag and components reconcile
+    attr = telem.attribution()
+    assert attr["total"]["count"] == len(done)
+    assert sum(attr["total"]["components"].values()) == \
+        pytest.approx(attr["total"]["end_to_end"], rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Token path spans
+# ---------------------------------------------------------------------------
+
+def test_token_trace_span_conservation():
+    toks = synthetic_token_family(["s", "l"], base_step=2e-4,
+                                  step_ratio=3.0, seed=7)
+    backend = TokenReplayBackend(toks)
+    gear = Gear(cascade=Cascade(("s", "l"), (0.55,)),
+                min_queue_lens={"s": 1, "l": 1},
+                load_fractions={"s": {0: 1.0}, "l": {1: 1.0}},
+                decode_slots={"s": 8, "l": 8},
+                kv_bytes_per_slot={m: toks[m].kv_bytes_per_slot
+                                   for m in toks})
+    telem = Telemetry()
+    sim = ServingSimulator(synthetic_family(["s", "l"], seed=7),
+                           [Replica("s", 0, 2e-4), Replica("l", 1, 6e-4)],
+                           2, SimConfig(max_batch=16, max_wait=0.02),
+                           telemetry=telem)
+    rng = np.random.default_rng(3)
+    arrivals = np.cumsum(rng.exponential(1 / 150.0, size=200))
+    plens = rng.integers(16, 128, size=200)
+    r = sim.run_token_trace(gear, arrivals, plens, backend,
+                            mode="continuous", n_slots=8)
+    telem.finalize()
+    cons = telem.conservation()
+    assert cons["opened"] == len(arrivals)
+    assert cons["completed"] == r.completed
+    # the token path feeds TTFT/TPOT histograms with exact readback
+    fam = telem.registry.family("token_ttft")
+    assert any(m.n > 0 for m in fam.values())
+
+
+# ---------------------------------------------------------------------------
+# PlanMonitor p95 fallback (MonitorConfig.p95_drift_factor satellite)
+# ---------------------------------------------------------------------------
+
+def _prov(**kw):
+    return PlanProvenance(qps_max=100.0, n_ranges=1, qps_prior=(1.0,),
+                          num_devices=2, mem_per_device=1e9, **kw)
+
+
+def test_monitor_p95_scalar_fallback_arms_the_check():
+    """Single-seed plans (empty mc_p95) fall back to the scalar certified
+    p95 + absolute margin instead of silently disarming."""
+    prov = _prov(range_p95=(0.100,))
+    cfg = MonitorConfig(p95_drift_factor=2.0, p95_min_samples=10,
+                        p95_abs_margin=0.05, cooldown=0.0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")       # fallback must not warn
+        mon = PlanMonitor(prov, cfg)
+    assert mon._p95_mode == "scalar"
+    assert mon._p95_threshold == pytest.approx(0.15)
+    for _ in range(20):
+        mon.observe_latency(0.30)            # far past 0.15
+    trig = mon.on_tick(1.0, measured_qps=10.0)
+    assert trig is not None and trig.reason == "latency-drift"
+    # below the fallback threshold: quiet
+    mon2 = PlanMonitor(prov, cfg)
+    for _ in range(20):
+        mon2.observe_latency(0.12)
+    assert mon2.on_tick(1.0, measured_qps=10.0) is None
+
+
+def test_monitor_p95_warns_once_when_disarmed():
+    cfg = MonitorConfig(p95_drift_factor=2.0, p95_min_samples=10)
+    with pytest.warns(RuntimeWarning, match="latency-drift check is "
+                                            "disarmed"):
+        mon = PlanMonitor(_prov(), cfg)
+    assert mon._p95_threshold is None
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")       # second rebase: no re-warn
+        mon.rebase(_prov(), t=1.0)
