@@ -6,10 +6,12 @@ Two certifications, one workload:
   ON (a fresh ``Telemetry`` attached; batches emit one fire/escb/closeb
   tuple each, admits are deferred to ``finalize()`` and rebuilt from the
   arrival + switch timelines) vs OFF, on a saturated cascade run. The
-  observer contract targets <2%; the CI smoke hard-fails above 5%
-  (timing noise on a shared box is real, the 5% gate is the tripwire for
-  an accidental O(n) regression on the hot path). ``finalize()`` runs off
-  the clock — it is post-run by design.
+  observer contract targets |overhead| < 2%; the CI smoke hard-fails when
+  |overhead| > 5% — two-sided because a negative median (ON beating OFF)
+  just means box-level timing noise at least that large, and a signed
+  compare would let a noise-dominated run certify anything. The 5% gate is
+  the tripwire for an accidental O(n) regression on the hot path.
+  ``finalize()`` runs off the clock — it is post-run by design.
 * attribution reconciliation — on a feature-rich trace (cascade
   escalations, straggler hedges, a spot drain->revoke), every attribution
   group's per-component sum must reconcile with its end-to-end latency
@@ -110,8 +112,13 @@ def _overhead(res: Results, profiles, reps, repeats: int):
 
     res.add("off_us_per_sample", round(t_off / n_samples * 1e6, 3))
     res.add("on_us_per_sample", round(t_on / n_samples * 1e6, 3))
+    # |overhead| is what the target/gate judge: a negative median means the
+    # ON arm measured faster than OFF, i.e. box-level timing noise at least
+    # as large as the signed value — passing a signed compare would let a
+    # noise-dominated measurement "certify" anything.
     res.add("span_overhead_pct", round(overhead * 100, 2),
-            within_target=bool(overhead < TARGET_OVERHEAD),
+            within_target=bool(abs(overhead) < TARGET_OVERHEAD),
+            noise_dominated=bool(overhead < 0),
             gate_pct=MAX_SMOKE_OVERHEAD * 100)
     return overhead
 
@@ -180,10 +187,13 @@ def main(quick: bool = False):
     overhead = _overhead(res, profiles, reps, repeats=5 if quick else 11)
     _feature_run(res, profiles, reps)
     res.finish()
-    if overhead > MAX_SMOKE_OVERHEAD:
+    if abs(overhead) > MAX_SMOKE_OVERHEAD:
         raise RuntimeError(
             f"span overhead {overhead * 100:.1f}% exceeds the "
-            f"{MAX_SMOKE_OVERHEAD * 100:.0f}% gate")
+            f"+/-{MAX_SMOKE_OVERHEAD * 100:.0f}% gate"
+            + (" (negative: the measurement is noise-dominated — the box "
+               "is too loaded to certify the overhead)" if overhead < 0
+               else ""))
     return res.rows
 
 

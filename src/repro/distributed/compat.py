@@ -1,0 +1,75 @@
+"""JAX version-compatibility shims for the manual-partitioning APIs.
+
+The model/training code targets the ``jax.shard_map`` surface (jax >= 0.5:
+``axis_names=`` selects the axes to manualise, ``check_vma=`` toggles the
+varying-manual-axes check, and ``jax.sharding.get_abstract_mesh()`` exposes
+the ambient mesh inside an enclosing manual region).  This container ships
+jax 0.4.x, where the same machinery lives in ``jax.experimental.shard_map``
+with the complementary convention: ``auto=`` names the axes that STAY
+automatic and ``check_rep=`` toggles the replication check.  Every call
+site imports from here so the translation lives in one place and the rest
+of the code reads like the current API.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Iterable, Optional
+
+import jax
+
+__all__ = ["shard_map", "get_abstract_mesh", "manual_axes_of", "axis_size",
+           "supports_partial_manual"]
+
+
+def supports_partial_manual() -> bool:
+    """True when shard_map can leave some mesh axes automatic while the
+    body still contains collectives (jax >= 0.5).  The 0.4.x ``auto=``
+    implementation raises NotImplementedError on any collective, and the
+    fully-manual fallback cannot host inner sharding constraints over the
+    would-be-auto axes — callers that NEED partial manualisation (the
+    pod-manual compressed-gradient exchange) must degrade gracefully."""
+    return hasattr(jax, "shard_map")
+
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f: Callable, *, mesh: Any, in_specs: Any, out_specs: Any,
+                  axis_names: Iterable[str], check: bool = False) -> Callable:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             axis_names=set(axis_names), check_vma=check)
+
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_04
+
+    def shard_map(f: Callable, *, mesh: Any, in_specs: Any, out_specs: Any,
+                  axis_names: Iterable[str], check: bool = False) -> Callable:
+        # 0.4.x partial-auto shard_map raises NotImplementedError as soon as
+        # the body holds a collective, so we always go FULLY manual: a spec
+        # that does not mention an axis means "replicated over it", and none
+        # of our bodies run collectives over the would-be-auto axes — the
+        # manualisation is observationally equivalent, at worst replicating
+        # work the newer partitioner would have sharded automatically.
+        return _shard_map_04(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=check)
+
+
+def get_abstract_mesh() -> Optional[Any]:
+    """Ambient abstract mesh inside a manual region, or None when the
+    running jax has no such concept (0.4.x) or no region is active."""
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    return getter() if getter is not None else None
+
+
+def manual_axes_of(mesh: Any) -> frozenset:
+    """Axes already manualised by an enclosing region (empty on 0.4.x
+    meshes, which do not carry that state)."""
+    return frozenset(getattr(mesh, "manual_axes", ()) or ())
+
+
+def axis_size(axis: str) -> Any:
+    """``jax.lax.axis_size`` (>= 0.5) inside a manual region; the 0.4.x
+    spelling is ``psum(1, axis)``, which folds to a compile-time constant."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    # a literal 1 constant-folds: psum(1, axis) is the static axis size
+    return jax.lax.psum(1, axis)

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, MoEConfig
+from repro.distributed import compat
 from repro.distributed.context import DistContext, get_context
 from repro.models.common import ArrayFactory, Params
 
@@ -189,7 +190,7 @@ def _moe_ep_body(x_loc: jax.Array, router: jax.Array, w_gate: jax.Array,
     (E_loc, D, F_loc). Returns (y_loc (T_loc, D), aux scalar)."""
     m = cfg.moe
     t_loc = x_loc.shape[0]
-    ep = jax.lax.axis_size(data_axis)
+    ep = compat.axis_size(data_axis)
     p_route = {"router": router}
     weights, idx, probs = _route(p_route, m, x_loc)
     cap = _capacity(t_loc, m.top_k, m.num_experts, capacity_factor)
@@ -230,10 +231,10 @@ def apply_moe_ep(p: Params, cfg: ModelConfig, x2d: jax.Array,
     # Respect an enclosing manual region (e.g. the pod-manual compressed-grad
     # train step): reuse the ambient abstract mesh and only manualise axes
     # that are not already manual — specs must not mention manual axes.
-    ambient = jax.sharding.get_abstract_mesh()
+    ambient = compat.get_abstract_mesh()
     if ambient is not None and not ambient.empty:
         mesh = ambient
-        already_manual = set(mesh.manual_axes)
+        already_manual = set(compat.manual_axes_of(mesh))
     else:
         mesh = ctx.mesh
         already_manual = set()
@@ -243,7 +244,7 @@ def apply_moe_ep(p: Params, cfg: ModelConfig, x2d: jax.Array,
     body = functools.partial(
         _moe_ep_body, cfg=cfg, data_axis=data_axis, model_axis=model_axis,
         capacity_factor=capacity_factor, e_pad=e_pad)
-    y, aux = jax.shard_map(
+    y, aux = compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(batch_axes, None),            # tokens
                   P(None, None),                  # router (replicated)
@@ -251,7 +252,7 @@ def apply_moe_ep(p: Params, cfg: ModelConfig, x2d: jax.Array,
                   P(data_axis, None, model_axis),  # w_up
                   P(data_axis, model_axis, None)),  # w_down
         out_specs=(P(batch_axes, None), P()),
-        check_vma=False, axis_names=manual_now,
+        axis_names=manual_now,
     )(x2d, p["router"], p["w_gate"], p["w_up"], p["w_down"])
     if m.num_shared_experts > 0:
         y = y + _shared_expert(p, x2d, cfg.activation)

@@ -8,13 +8,10 @@ import pytest
 
 jax = pytest.importorskip("jax")
 
-# The EP MoE dispatch path (models/moe.py) reads the ambient abstract mesh
-# via jax.sharding.get_abstract_mesh, which this environment's jax does not
-# ship yet — a version gap, not a code defect, so skip (don't fail) here.
-pytestmark = pytest.mark.skipif(
-    not hasattr(jax.sharding, "get_abstract_mesh"),
-    reason="jax.sharding.get_abstract_mesh unavailable "
-           f"(jax {jax.__version__}; needs >= 0.5)")
+# These paths target the jax >= 0.5 shard_map surface; on 0.4.x the
+# repro.distributed.compat shim translates them (fully-manual fallback;
+# compress_pod_grads degrades to the uncompressed pod all-reduce with a
+# RuntimeWarning), so the integration runs on either version.
 
 _SCRIPT = r"""
 import os
